@@ -1,0 +1,94 @@
+"""Ablation sweeps over the paper's knobs (EXPERIMENTS.md §Paper-claims):
+
+* I (local steps per round) — rounds-to-ε trade-off,
+* Q (Neumann series terms) — hyper-gradient bias vs HVP cost,
+* ζ (client heterogeneity) — drift-bias floor,
+* top-k compression ratio (CommFedBiO) with/without error feedback.
+
+    PYTHONPATH=src python -m benchmarks.ablations [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FederatedConfig
+from repro.core import make_algorithm, quadratic_problem
+
+
+def _run(prob, algo, rounds, **kw):
+    params = dict(algorithm=algo, num_clients=prob.num_clients, local_steps=4,
+                  lr_x=0.03, lr_y=0.1, lr_u=0.1, neumann_q=10,
+                  neumann_tau=0.15)
+    params.update(kw)
+    alg = make_algorithm(prob, FederatedConfig(**params))
+    state = alg.init(jax.random.PRNGKey(1))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+    # local-lower algorithms optimise Eq. (5): measure its hyper-gradient
+    hg_fn = (prob.exact_hypergrad_local if algo.endswith("_local")
+             else prob.exact_hypergrad)
+    traj = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+        traj.append(float(jnp.linalg.norm(hg_fn(alg.mean_x(state)))))
+    return traj, alg.comm_floats
+
+
+def ablate_local_steps(rounds):
+    print("# ablation: local steps I (fedbio, rounds to 0.5*g0)")
+    prob = quadratic_problem(jax.random.PRNGKey(6), num_clients=8, dx=10,
+                             dy=10, noise=0.3)
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad(jnp.zeros(10))))
+    for I in (1, 2, 4, 8, 16):
+        traj, comm = _run(prob, "fedbio", rounds, local_steps=I)
+        hit = next((i + 1 for i, g in enumerate(traj) if g < 0.5 * g0), None)
+        print(f"ablate/I={I},0,rounds_to_eps={hit};floats_to_eps="
+              f"{None if hit is None else hit * comm};tail={traj[-1]:.4f}")
+
+
+def ablate_neumann_q(rounds):
+    print("# ablation: Neumann terms Q (fedbio_local)")
+    prob = quadratic_problem(jax.random.PRNGKey(7), num_clients=8, dx=10,
+                             dy=10, noise=0.2)
+    for Q in (1, 2, 5, 10, 20):
+        traj, _ = _run(prob, "fedbio_local", rounds, neumann_q=Q)
+        # tail vs local-hypergrad bias floor
+        print(f"ablate/Q={Q},0,tail_grad={sum(traj[-10:]) / 10:.4f}")
+
+
+def ablate_heterogeneity(rounds):
+    print("# ablation: heterogeneity zeta (fedbio drift floor)")
+    for hz in (0.1, 0.5, 1.0, 2.0, 4.0):
+        prob = quadratic_problem(jax.random.PRNGKey(8), num_clients=8, dx=10,
+                                 dy=10, noise=0.0, hetero=hz)
+        traj, _ = _run(prob, "fedbio", rounds)
+        print(f"ablate/hetero={hz},0,floor={sum(traj[-10:]) / 10:.4f}")
+
+
+def ablate_compression(rounds):
+    print("# ablation: CommFedBiO top-k ratio (error feedback on)")
+    prob = quadratic_problem(jax.random.PRNGKey(9), num_clients=8, dx=10,
+                             dy=10, noise=0.2, hetero=0.1)
+    for ratio in (0.05, 0.1, 0.3, 1.0):
+        traj, comm = _run(prob, "commfedbio", rounds, compress_ratio=ratio)
+        print(f"ablate/topk={ratio},0,tail_grad={sum(traj[-10:]) / 10:.4f};"
+              f"floats_per_round={comm}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    rounds = 60 if args.fast else 200
+    ablate_local_steps(rounds)
+    ablate_neumann_q(rounds)
+    ablate_heterogeneity(rounds)
+    ablate_compression(rounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Methodology note (documented in EXPERIMENTS.md): XLA-CPU ``cost_analysis``
+counts ``while``-loop (lax.scan) bodies **once**, independent of trip count —
+verified directly (2-layer and 8-layer scans report identical FLOPs). Since
+every model here scans its layer stack (and the train step scans
+microbatches), the compiled-HLO numbers undercount by ~L×n_micro. The
+three roofline terms are therefore derived from an **analytic cost model** of
+the exact computation the step performs (formulas below), while the parsed
+HLO supplies the collective *schedule* (which collectives, how many, per
+scan-body) as a structural cross-check.
+
+Analytic model (global per step; per-device = /chips):
+
+  FLOPs    = U · (2·N_active·D + A)          U = fwd-unit multiplier
+             A = attention score/value FLOPs (per layer 4·B·S·S_eff·H·hd)
+             U: fedbio 9, fedbioacc 18 (2 STORM points × 3 oracles),
+                fedavg/prefill 3 / 1, decode 1 fwd over 1 token
+  HBM      = U·n_micro·(N·2) [weight streams] + U·c_act·D·d·L·2
+             + optimizer-state traffic + CE logits + KV-cache traffic (decode)
+  COLLECT  = round-averaging (2·state_bytes / I per step, client axis)
+             + tensor-parallel per-layer activation all-reduces
+             + FSDP weight all-gathers (client_replicated)
+             + MoE all-to-all dispatch
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.config import HBM_BW, ICI_BW, INPUT_SHAPES, PEAK_FLOPS_BF16
+from repro.configs import ARCHS
+
+CHIPS = 256                      # single-pod roofline (per brief)
+C_ACT = 12.0                     # activation bytes moved per token·dim·layer
+                                 # per fwd-unit (reads+writes+remat recompute)
+
+# fwd-unit multipliers (1 unit = one forward pass's FLOPs = 2·N·D):
+#   fedbio oracles: ω(1) + [∇_x f (3) + ∇_xy g·u (3)] + [∇²_yy g·u (2) + ∇_y f (1)]
+#   fedbioacc = 2 STORM points; fused = shared f-grad + one g-linearization
+FWD_UNITS = {"fedbio": 9.0, "fedbioacc": 18.0, "fedavg": 3.0}
+FWD_UNITS_FUSED = {"fedbio": 8.0, "fedbioacc": 16.0, "fedavg": 3.0}
+
+# weight-streaming passes per step (each pass touches every parameter once;
+# under FSDP each pass all-gathers the full weights per microbatch):
+#   fedbio: ω 1, ∇_x f fwd+bwd 2, ∇_xy g·u 2, ∇²_yy g·u 2, ∇_y f 1  → 8
+#   fused:  f-grad 2 + g-linearization (jvp-of-grad) 3               → 5
+PASSES = {"fedbio": 8.0, "fedbioacc": 16.0, "fedavg": 2.0}
+PASSES_FUSED = {"fedbio": 5.0, "fedbioacc": 10.0, "fedavg": 2.0}
+
+
+def arch_geometry(cfg):
+    kinds = cfg.layer_kinds()
+    attn_layers = [(k, cfg.window_size if k == "local" else 0)
+                   for k in kinds if k in ("attn", "local")]
+    return kinds, attn_layers
+
+
+def active_params(cfg) -> int:
+    d, V = cfg.d_model, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    embed = (0 if cfg.family == "audio" else V * d) + d * V
+    if cfg.frontend_dim:
+        embed += cfg.frontend_dim * d
+    per = 0.0
+    for kind in cfg.layer_kinds():
+        if kind in ("attn", "local"):
+            per += d * (cfg.num_heads * hd) * 2 + d * (cfg.num_kv_heads * hd) * 2
+            if cfg.num_experts:
+                per += 3 * d * cfg.d_ff * cfg.experts_per_token
+            else:
+                per += 3 * d * cfg.d_ff
+        elif kind == "rec":
+            w = cfg.resolved_lru_width
+            per += 2 * d * w + 2 * w * w + w * d + 3 * d * cfg.d_ff
+        elif kind == "ssm":
+            di = cfg.ssm_heads * cfg.ssm_head_dim
+            per += d * (2 * di + 2 * cfg.ssm_state + cfg.ssm_heads) + di * d
+    return int(embed + per)
+
+
+def total_params(cfg) -> int:
+    n = active_params(cfg)
+    if cfg.num_experts:
+        extra = 0
+        for kind in cfg.layer_kinds():
+            if kind in ("attn", "local"):
+                extra += 3 * cfg.d_model * cfg.d_ff * (cfg.num_experts
+                                                       - cfg.experts_per_token)
+        n += extra
+    return int(n)
+
+
+def _attn_flops(cfg, B, S, decode_ctx: Optional[int] = None) -> float:
+    total = 0.0
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    for kind in cfg.layer_kinds():
+        if kind not in ("attn", "local"):
+            continue
+        if decode_ctx is not None:
+            s_eff = min(decode_ctx, cfg.window_size or decode_ctx) if kind == "local" else decode_ctx
+            total += 4.0 * B * s_eff * hq * hd
+        else:
+            s_eff = min(S, cfg.window_size or S) if kind == "local" else S
+            causal = 0.5 if cfg.causal else 1.0
+            total += 4.0 * B * S * s_eff * hq * hd * causal
+    return total
+
+
+def analytic_cost(arch: str, shape_name: str, multi_pod: bool = False,
+                  optimized: bool = False, n_micro_override: int = 0,
+                  local_steps: int = 4) -> Dict:
+    """Per-DEVICE analytic roofline terms.
+
+    Conventions: all-reduce costs 2× the per-device shard bytes (ring);
+    all-gather costs the full gathered bytes per device. compute/memory are
+    global quantities divided by the chip count (uniform sharding).
+    """
+    from repro.config import MeshConfig
+    from repro.launch import archspec
+    cfg = ARCHS[arch]
+    sh = INPUT_SHAPES[shape_name]
+    spec = archspec.deploy_spec(arch, optimized)
+    chips = CHIPS * (2 if multi_pod else 1)
+    # width of the batch/client sharding: multi-pod client_sharded spans
+    # ("pod","data") = 32-way, halving per-device token volume
+    data_size = 32 if (multi_pod and spec.placement == "client_sharded") else 16
+    B, S = sh.global_batch, sh.seq_len
+    N = active_params(cfg)
+    N_total = total_params(cfg)
+    d, L = cfg.d_model, cfg.num_layers
+
+    if sh.kind == "train":
+        M = archspec.num_clients(arch, MeshConfig(multi_pod=multi_pod),
+                                 optimized)
+        U = (FWD_UNITS_FUSED if spec.fuse_oracles else FWD_UNITS)[spec.algorithm]
+        Pn = (PASSES_FUSED if spec.fuse_oracles else PASSES)[spec.algorithm]
+        D = B * S
+        flops = U * (2.0 * N * D + _attn_flops(cfg, B, S))
+        n_micro = n_micro_override or spec.n_micro_train
+        state_mult = 2.0 if spec.algorithm == "fedbioacc" else 1.0   # x (+ν)
+        state_bytes = M * N_total * 2.0 * state_mult
+        # ---- HBM (global, /chips at the end) ----
+        hbm = (Pn * n_micro * M * N_total * 2.0        # weight shard streams
+               + (U / 3.0) * C_ACT * D * d * L         # activations
+               + 8.0 * state_bytes                     # optimizer update traffic
+               + (U / 3.0) * D * cfg.vocab_size * 2.0 * 2)  # CE logits (bf16 r+w)
+        # ---- collectives (per-device seconds accumulated directly) ----
+        coll_s = 0.0
+        # round averaging: all-reduce of the per-device state shard
+        coll_s += 2.0 * (state_bytes / chips) / local_steps / ICI_BW
+        if spec.placement == "client_sharded":
+            # megatron TP all-reduces: 2/layer per pass of the per-device
+            # activation block (tokens sharded over the data axis)
+            tok_dev = D / data_size
+            coll_s += Pn * 2.0 * L * 2.0 * (tok_dev * d * 2.0) / ICI_BW
+            if cfg.num_experts:   # MoE all-to-all dispatch+return per layer
+                coll_s += (Pn / 2.0) * 4.0 * (tok_dev * d * 2.0) * len(
+                    [k for k in cfg.layer_kinds() if k in ("attn", "local")]) / ICI_BW
+        elif spec.placement == "client_replicated":
+            # ZeRO-3 regather over the data axis: every pass × microbatch
+            # gathers the weights; each device already holds its model-axis
+            # shard, so per-device volume is N·2/model_size (measured in the
+            # llama3-405b HLO: §Perf pair 1)
+            coll_s += Pn * n_micro * M * N_total * 2.0 / 16.0 / ICI_BW
+        elif spec.placement == "dp_within_client":
+            # within-client grad all-reduce of the replicated (non-vocab)
+            # body: ring cost 2× body bytes per backward pass
+            body = N_total - 2 * cfg.d_model * cfg.vocab_size
+            coll_s += (Pn / 2.0) * 2.0 * body * 2.0 / ICI_BW
+        # client_pure: no TP/FSDP collectives — averaging only (above)
+        useful = 6.0 * N * D
+    elif sh.kind == "prefill":
+        D = B * S
+        flops = 2.0 * N * D + _attn_flops(cfg, B, S)
+        hbm = N_total * 2.0 + (C_ACT / 3.0) * D * d * L + B * cfg.vocab_size * 4.0
+        tok_dev = D / data_size
+        coll_s = 2.0 * L * 2.0 * (tok_dev * d * 2.0) / ICI_BW
+        if spec.serve_fsdp:
+            coll_s += N_total * 2.0 / 16.0 / ICI_BW     # data-axis regather
+        useful = 2.0 * N * D
+    else:  # decode
+        D = B
+        flops = 2.0 * N * D + _attn_flops(cfg, B, S, decode_ctx=S)
+        kv_bytes = 0.0
+        for kind in cfg.layer_kinds():
+            if kind in ("attn", "local"):
+                s_eff = min(S, cfg.window_size or S) if kind == "local" else S
+                kv_bytes += 2.0 * B * s_eff * cfg.num_kv_heads * cfg.resolved_head_dim * 2.0
+            elif kind == "ssm":
+                kv_bytes += B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4.0
+            elif kind == "rec":
+                kv_bytes += B * cfg.resolved_lru_width * 4.0
+        hbm = N_total * 2.0 + kv_bytes + B * cfg.vocab_size * 4.0
+        b_dev = max(B / data_size, 1.0)
+        coll_s = 2.0 * L * 2.0 * (b_dev * d * 2.0) / ICI_BW
+        if spec.serve_fsdp:
+            coll_s += N_total * 2.0 / 16.0 / ICI_BW     # data-axis regather
+        useful = 2.0 * N * D
+
+    return {
+        "flops": flops, "hbm_bytes": hbm,
+        "useful_flops": useful, "chips": chips,
+        "compute_s": flops / (chips * PEAK_FLOPS_BF16),
+        "memory_s": hbm / (chips * HBM_BW),
+        "collective_s": coll_s,
+    }
+
+
+def analyze(records: List[Dict]) -> List[Dict]:
+    out = []
+    for r in records:
+        base = {"arch": r["arch"], "shape": r["shape"],
+                "multi_pod": r.get("multi_pod", False)}
+        if r.get("status") != "OK":
+            base.update(status=r.get("status"),
+                        reason=r.get("reason", r.get("error", "")))
+            out.append(base)
+            continue
+        a = analytic_cost(r["arch"], r["shape"], r.get("multi_pod", False),
+                          optimized=r.get("optimized", False))
+        terms = {"compute": a["compute_s"], "memory": a["memory_s"],
+                 "collective": a["collective_s"]}
+        dom = max(terms, key=terms.get)
+        base.update(
+            status="OK",
+            compute_s=a["compute_s"], memory_s=a["memory_s"],
+            collective_s=a["collective_s"], dominant=dom,
+            roofline_s=max(terms.values()),
+            useful_ratio=a["useful_flops"] / a["flops"],
+            arg_gb_per_dev=r["memory"].get("argument_size_in_bytes", 0) / 2**30,
+            hlo_flops_per_dev=r["cost"].get("flops", 0.0),
+            hlo_bytes_per_dev=r["cost"].get("bytes accessed", 0.0),
+            hlo_coll_counts=r["collectives"]["counts"],
+            hlo_coll_bytes=r["collectives"]["bytes"],
+        )
+        out.append(base)
+    return out
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | useful/total FLOPs | state GiB/dev |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.3f} | "
+            f"{r['arg_gb_per_dev']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_single.jsonl")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    records = [json.loads(l) for l in open(args.inp)]
+    rows = analyze(records)
+    print(fmt_table(rows))
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(rows, fh, indent=1)
+
+
+if __name__ == "__main__":
+    main()

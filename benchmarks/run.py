@@ -1,0 +1,293 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Benchmarks (paper artifact → benchmark):
+  * Table 1 (communication / oracle complexities)    → bench_table1_complexity
+  * Fig. "Federated Data Cleaning"                   → bench_data_cleaning
+  * Fig. "Hyper-Representation"                      → bench_hyperrep
+  * Linear-speedup claim (Thm 1/2)                   → bench_linear_speedup
+  * Kernel hot-spots (DESIGN §6)                     → bench_kernels
+  * §Roofline summary (from the dry-run artifacts)   → bench_roofline_summary
+
+Output: ``name,us_per_call,derived`` CSV rows (derived = the benchmark's
+headline metric).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FederatedConfig
+from repro.core import (data_cleaning_problem, hyperrep_problem,
+                        make_algorithm, quadratic_problem)
+from repro.core.problems import fair_federated_problem
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append(f"{name},{us_per_call:.1f},{derived}")
+    print(ROWS[-1], flush=True)
+
+
+def _run_rounds(prob, algo, rounds, *, local_steps=4, lr_x=0.03, lr_y=0.1,
+                lr_u=0.1, track=None, **kw):
+    cfg = FederatedConfig(algorithm=algo, num_clients=prob.num_clients,
+                          local_steps=local_steps, lr_x=lr_x, lr_y=lr_y,
+                          lr_u=lr_u, neumann_q=10, neumann_tau=0.15, **kw)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(1))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+    state, _ = rnd(state, key)                       # compile
+    t0 = time.time()
+    traj = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+        if track is not None:
+            traj.append(track(alg, state))
+    us = (time.time() - t0) / rounds * 1e6
+    return alg, state, traj, us
+
+
+# ---------------------------------------------------------------------------
+# Table 1: communication complexity / oracle counts to reach epsilon
+# ---------------------------------------------------------------------------
+
+# analytic oracle calls per ROUND (per client):  Gc(f), Gc(g), Jv, Hv
+_ORACLES_PER_ROUND = {
+    "fedbio": lambda I: (2 * I, I, I, I),
+    "fedbioacc": lambda I: (4 * I, 2 * I, 2 * I, 2 * I),
+    "fednest": lambda I: (2 + I, I, 1, I),
+    "commfedbio": lambda I: (2 * I, I, I, 10 * I),
+    "stocbio": lambda I: (2, I, 1, 10),
+    "mrbo": lambda I: (4, 2, 2, 20),
+}
+
+
+def bench_table1_complexity(fast: bool):
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.3, hetero=1.0)
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad(jnp.zeros(10))))
+    eps = 0.25 * g0
+    rounds = 60 if fast else 200
+
+    def track(alg, state):
+        return float(jnp.linalg.norm(prob.exact_hypergrad(alg.mean_x(state))))
+
+    for algo in ("fedbio", "fedbioacc", "fednest", "commfedbio",
+                 "stocbio", "mrbo"):
+        alg, state, traj, us = _run_rounds(prob, algo, rounds, track=track)
+        hit = next((i + 1 for i, g in enumerate(traj) if g < eps), None)
+        floats = None if hit is None else hit * alg.comm_floats
+        oc = _ORACLES_PER_ROUND[algo](4)
+        derived = (f"rounds_to_eps={hit};floats_to_eps={floats};"
+                   f"final_grad={traj[-1]:.4f};oracles/round Gf={oc[0]} "
+                   f"Gg={oc[1]} Jv={oc[2]} Hv={oc[3]}")
+        emit(f"table1/{algo}", us, derived)
+
+
+# ---------------------------------------------------------------------------
+# Figure: federated data cleaning
+# ---------------------------------------------------------------------------
+
+def bench_data_cleaning(fast: bool):
+    prob = data_cleaning_problem(jax.random.PRNGKey(1), num_clients=8,
+                                 n_train=256, corrupt_frac=0.4)
+    data = prob.data
+    rounds = 60 if fast else 200
+    mask = np.asarray(data["corrupt_mask"])
+
+    def auc(x_weights):
+        """AUC of (-weight) as a corruption detector (higher = cleaner)."""
+        w = np.asarray(x_weights)
+        pos, neg = -w[mask], -w[~mask]
+        return float((pos[:, None] > neg[None, :]).mean())
+
+    for algo in ("fedbio", "fedbioacc"):
+        alg, state, _, us = _run_rounds(prob, algo, rounds, lr_x=0.3,
+                                        lr_y=0.3, lr_u=0.3)
+        x = np.asarray(alg.mean_x(state))
+        w = 1.0 / (1.0 + np.exp(-x))
+        emit(f"cleaning/{algo}", us,
+             f"auc_corrupt_detection={auc(x):.3f};"
+             f"mean_w_clean={w[~mask].mean():.3f};"
+             f"mean_w_corrupt={w[mask].mean():.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Figure: hyper-representation learning
+# ---------------------------------------------------------------------------
+
+def bench_hyperrep(fast: bool):
+    prob = hyperrep_problem(jax.random.PRNGKey(2), num_clients=8)
+    rounds = 60 if fast else 200
+
+    def val_loss(alg, state):
+        x = alg.mean_x(state)
+        y = jax.tree.map(lambda v: jnp.mean(v, 0), state.y)
+        b = jax.tree.map(lambda v: v[0],
+                         prob.sample_batches(jax.random.PRNGKey(9)))
+        return float(prob.f(x, y, b))
+
+    for algo in ("fedbio", "fedbioacc", "fedbio_local", "fedbioacc_local",
+                 "fednest"):
+        alg, state, traj, us = _run_rounds(prob, algo, rounds, lr_x=0.1,
+                                           lr_y=0.2, lr_u=0.2, track=val_loss)
+        emit(f"hyperrep/{algo}", us,
+             f"val0={traj[0]:.3f};valT={traj[-1]:.3f};"
+             f"comm_floats_per_round={alg.comm_floats}")
+
+
+# ---------------------------------------------------------------------------
+# Fair Federated Learning (paper §5 conclusion)
+# ---------------------------------------------------------------------------
+
+def bench_fair_fl(fast: bool):
+    import numpy as np
+    prob = fair_federated_problem(jax.random.PRNGKey(0), num_clients=8,
+                                  hard_clients=2)
+    rounds = 60 if fast else 200
+
+    def run(lr_x):
+        alg, state, _, us = _run_rounds(prob, "fedbio", rounds, lr_x=lr_x,
+                                        lr_y=0.5, lr_u=0.3)
+        lam = alg.mean_x(state)
+        y = jax.tree.map(lambda v: jnp.mean(v, 0), state.y)
+        return np.asarray(prob.client_val_losses(lam, y)), lam, us
+
+    losses_u, _, us_u = run(0.0)          # uniform baseline
+    losses_f, lam, us_f = run(2.0)        # learned fair weights
+    w = np.asarray(jax.nn.softmax(lam))
+    emit("fairfl/uniform", us_u,
+         f"worst_client={losses_u.max():.3f};mean={losses_u.mean():.3f}")
+    emit("fairfl/bilevel", us_f,
+         f"worst_client={losses_f.max():.3f};mean={losses_f.mean():.3f};"
+         f"w_minority={w[:2].mean():.3f};w_majority={w[2:].mean():.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Linear speed-up in M (Theorems 1/2)
+# ---------------------------------------------------------------------------
+
+def bench_linear_speedup(fast: bool):
+    rounds = 60 if fast else 150
+    tails = {}
+    for M in (2, 4, 8, 16):
+        prob = quadratic_problem(jax.random.PRNGKey(0), num_clients=M,
+                                 dx=10, dy=10, noise=1.2, hetero=0.6)
+
+        def track(alg, state, prob=prob):
+            return float(jnp.linalg.norm(
+                prob.exact_hypergrad(alg.mean_x(state))))
+
+        _, _, traj, us = _run_rounds(prob, "fedbio", rounds, track=track)
+        tails[M] = sum(traj[-max(rounds // 5, 1):]) / max(rounds // 5, 1)
+        emit(f"speedup/M={M}", us, f"tail_grad_norm={tails[M]:.4f}")
+    emit("speedup/ratio_M2_over_M16", 0.0,
+         f"{tails[2] / tails[16]:.2f} (linear speedup => >1)")
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+def bench_kernels(fast: bool):
+    from repro.kernels.flash.ops import flash_attention
+    from repro.kernels.flash.ref import flash_attention_ref
+    from repro.kernels.lru.ops import lru_scan
+    from repro.kernels.lru.ref import lru_scan_ref
+    from repro.kernels.storm.ops import storm_update
+    from repro.kernels.storm.ref import storm_update_ref
+
+    key = jax.random.PRNGKey(0)
+
+    def timeit(fn, n=3):
+        fn()
+        t0 = time.time()
+        for _ in range(n):
+            r = fn()
+        jax.block_until_ready(r)
+        return (time.time() - t0) / n * 1e6
+
+    n = 1 << 16
+    p, m, gn, go = (jax.random.normal(jax.random.fold_in(key, i), (n,))
+                    for i in range(4))
+    t_k = timeit(lambda: storm_update({"x": p}, {"x": m}, {"x": gn},
+                                      {"x": go}, 0.1, 0.9))
+    t_r = timeit(lambda: jax.jit(storm_update_ref)(p, m, gn, go, 0.1, 0.9))
+    emit("kernel/storm", t_k, f"ref_us={t_r:.0f};interpret_mode=True;n={n}")
+
+    B, S, H, D = 1, 256, 2, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
+               for i in range(3))
+    t_k = timeit(lambda: flash_attention(q, k, v, causal=True, window=64))
+
+    def ref():
+        to = lambda x: jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, S, D)
+        return flash_attention_ref(to(q), to(k), to(v), causal=True, window=64)
+
+    t_r = timeit(lambda: jax.jit(ref)())
+    emit("kernel/flash", t_k, f"ref_us={t_r:.0f};interpret_mode=True;"
+                              f"shape={B}x{S}x{H}x{D};window=64")
+
+    a = jax.random.uniform(key, (2, 256, 128), minval=0.8, maxval=0.99)
+    b = 0.1 * jax.random.normal(key, (2, 256, 128))
+    t_k = timeit(lambda: lru_scan(a, b))
+    t_r = timeit(lambda: jax.jit(lru_scan_ref)(a, b))
+    emit("kernel/lru", t_k, f"ref_us={t_r:.0f};interpret_mode=True;"
+                            f"shape=2x256x128")
+
+
+# ---------------------------------------------------------------------------
+# Roofline summary (reads dry-run artifacts if present)
+# ---------------------------------------------------------------------------
+
+def bench_roofline_summary(fast: bool):
+    path = os.path.join(os.path.dirname(__file__), "..", "dryrun_single.jsonl")
+    if not os.path.exists(path):
+        emit("roofline/summary", 0.0, "dryrun_single.jsonl missing — run "
+             "repro.launch.dryrun --all first")
+        return
+    from benchmarks.roofline import analyze
+    recs = [json.loads(l) for l in open(path)]
+    rows = [r for r in analyze(recs) if r.get("status") == "OK"]
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    worst = max(rows, key=lambda r: r["roofline_s"])
+    emit("roofline/summary", 0.0,
+         f"combos_ok={len(rows)};dominant_counts={doms};"
+         f"worst={worst['arch']}x{worst['shape']}@{worst['roofline_s']:.1f}s")
+
+
+# ---------------------------------------------------------------------------
+
+BENCHES = [bench_table1_complexity, bench_data_cleaning, bench_hyperrep,
+           bench_fair_fl, bench_linear_speedup, bench_kernels,
+           bench_roofline_summary]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced round counts (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        if args.only and args.only not in b.__name__:
+            continue
+        b(args.fast)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,57 @@
+"""Federated Data Cleaning (the paper's first experiment).
+
+A shared training set has 40% of its labels corrupted. The upper-level
+variable is a per-sample weight vector; the lower level trains a classifier
+on the weighted data; the upper objective is validation loss on per-client
+clean shards. FedBiO learns to drive the corrupted samples' weights down.
+
+    PYTHONPATH=src python examples/data_cleaning.py [--algo fedbioacc]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FederatedConfig
+from repro.core import data_cleaning_problem, make_algorithm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="fedbioacc",
+                    choices=["fedbio", "fedbioacc", "fednest"])
+    ap.add_argument("--rounds", type=int, default=200)
+    args = ap.parse_args()
+
+    prob = data_cleaning_problem(jax.random.PRNGKey(1), num_clients=8,
+                                 n_train=256, corrupt_frac=0.4)
+    mask = np.asarray(prob.data["corrupt_mask"])
+    cfg = FederatedConfig(algorithm=args.algo, num_clients=8, local_steps=4,
+                          lr_x=0.3, lr_y=0.3, lr_u=0.3)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(0))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+
+    def report(r):
+        x = np.asarray(alg.mean_x(state))
+        w = 1 / (1 + np.exp(-x))
+        auc = float(((-x[mask])[:, None] > (-x[~mask])[None, :]).mean())
+        print(f"round {r:4d}  mean weight clean={w[~mask].mean():.3f} "
+              f"corrupt={w[mask].mean():.3f}  detection AUC={auc:.3f}")
+        return auc
+
+    report(0)
+    for r in range(1, args.rounds + 1):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+        if r % 50 == 0:
+            auc = report(r)
+    assert auc > 0.75, "cleaning failed to separate corrupted samples"
+    print("corrupted samples identified — matches the paper's Figure 1 "
+          "behaviour (weights of noisy samples driven down).")
+
+
+if __name__ == "__main__":
+    main()

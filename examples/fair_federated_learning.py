@@ -1,0 +1,50 @@
+"""Fair Federated Learning as a bilevel problem (paper §5 conclusion).
+
+Two of eight clients come from a minority distribution; uniform federated
+training under-serves them. The upper level learns client weights λ that
+minimise a smooth-max of client risks with FedBiO — the worst-served client
+improves and the minority gets up-weighted.
+
+    PYTHONPATH=src python examples/fair_federated_learning.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FederatedConfig
+from repro.core import make_algorithm
+from repro.core.problems import fair_federated_problem
+
+
+def train(prob, lr_x, rounds=200):
+    cfg = FederatedConfig(algorithm="fedbio", num_clients=prob.num_clients,
+                          local_steps=4, lr_x=lr_x, lr_y=0.5, lr_u=0.3)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(1))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+    return alg.mean_x(state), jax.tree.map(lambda v: jnp.mean(v, 0), state.y)
+
+
+def main():
+    prob = fair_federated_problem(jax.random.PRNGKey(0), num_clients=8,
+                                  hard_clients=2)
+    lam_u, y_u = train(prob, lr_x=0.0)          # uniform (λ frozen)
+    lam_f, y_f = train(prob, lr_x=2.0)          # learned fair weights
+    lu = np.asarray(prob.client_val_losses(jnp.zeros(8), y_u))
+    lf = np.asarray(prob.client_val_losses(lam_f, y_f))
+    w = np.asarray(jax.nn.softmax(lam_f))
+    print("client val losses (clients 0-1 are the minority):")
+    print("  uniform :", np.round(lu, 3), f" worst={lu.max():.3f}")
+    print("  bilevel :", np.round(lf, 3), f" worst={lf.max():.3f}")
+    print("learned weights:", np.round(w, 3))
+    assert lf.max() < lu.max()
+    assert w[:2].mean() > w[2:].mean()
+    print("fairness achieved: worst client improved, minority up-weighted.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Quickstart: solve a federated bilevel problem with FedBiOAcc in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import FederatedConfig
+from repro.core import make_algorithm, quadratic_problem
+
+# A heterogeneous stochastic quadratic bilevel problem over 8 clients with a
+# closed-form hyper-gradient so we can watch true convergence.
+prob = quadratic_problem(jax.random.PRNGKey(0), num_clients=8, dx=10, dy=10,
+                         noise=0.1, hetero=1.0)
+
+cfg = FederatedConfig(
+    algorithm="fedbioacc",   # Algorithm 2 — STORM-accelerated FedBiO
+    num_clients=8,
+    local_steps=4,           # I local steps between communication rounds
+    lr_x=0.03, lr_y=0.1, lr_u=0.1,
+)
+
+alg = make_algorithm(prob, cfg)
+state = alg.init(jax.random.PRNGKey(1))
+round_fn = jax.jit(alg.round)
+
+key = jax.random.PRNGKey(2)
+print(f"algorithm={alg.name}  clients={cfg.num_clients}  "
+      f"floats communicated per client per round={alg.comm_floats}")
+for r in range(1, 151):
+    key, sub = jax.random.split(key)
+    state, metrics = round_fn(state, sub)
+    if r % 25 == 0:
+        gnorm = float(jnp.linalg.norm(prob.exact_hypergrad(alg.mean_x(state))))
+        print(f"round {r:4d}   ||grad h(x)|| = {gnorm:.4f}")
+
+final = float(jnp.linalg.norm(prob.exact_hypergrad(alg.mean_x(state))))
+assert final < 0.5, final
+print("converged — the hyper-gradient estimation problem (Eq. 4) was solved "
+      "with local SGD, never materialising a Hessian.")

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + greedy decode on a reduced hybrid model
+(RG-LRU recurrence + sliding-window attention — the `long_500k`-capable
+family), exercising the same `serve_step` the decode dry-runs lower.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(["--arch", "recurrentgemma-9b", "--reduced",
+                "--batch", "4", "--prompt-len", "48", "--gen", "24"])

@@ -1,0 +1,38 @@
+"""Continuous-batching serving: 6 staggered requests through 2 decode slots.
+
+Each request is prefilled into a free slot and decoded at its own position;
+finished requests release their slot immediately (no head-of-line blocking).
+Outputs are bit-identical to isolated per-request decoding.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+cfg = ARCHS["granite-8b"].reduced()
+model = build_model(cfg, dtype=jnp.float32)
+key = jax.random.PRNGKey(0)
+params = model.init(key)
+
+engine = ServeEngine(model, params, max_slots=2, cache_len=64)
+prompts = [jax.random.randint(jax.random.fold_in(key, i), (8 + 4 * i,),
+                              0, cfg.vocab_size) for i in range(6)]
+budgets = [6, 3, 9, 4, 7, 5]
+t0 = time.time()
+rids = [engine.submit(p, n) for p, n in zip(prompts, budgets)]
+results = engine.run_to_completion()
+dt = time.time() - t0
+total = sum(len(v) for v in results.values())
+print(f"served {len(results)} requests / {total} tokens through 2 slots "
+      f"in {dt:.2f}s")
+for rid in rids:
+    print(f"  request {rid}: {results[rid]}")
+assert set(results) == set(rids)
+print("all requests completed with per-request positions — continuous "
+      "batching semantics verified by tests/test_serving_engine.py")

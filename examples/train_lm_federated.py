@@ -1,0 +1,38 @@
+"""End-to-end driver: federated bilevel training of an assigned architecture.
+
+This is the production train-step code path (the one the multi-pod dry-run
+lowers at 405B scale) exercised end-to-end on CPU with a reduced config:
+a mamba2-family LM trained with FedBiOAcc for a few hundred steps, with
+checkpointing, on heterogeneous synthetic client streams.
+
+    PYTHONPATH=src python examples/train_lm_federated.py [--steps 200]
+
+(At ~1.4M parameters this runs in minutes on one CPU core; pass
+``--arch granite-8b --steps 400`` on real hardware for the 100M-class run —
+the code path is identical.)
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    history = train.main([
+        "--arch", args.arch, "--reduced", "--algo", "fedbioacc",
+        "--steps", str(args.steps), "--clients", "4", "--per-client", "2",
+        "--seq", "128", "--ckpt-every", "100",
+        "--ckpt-dir", args.ckpt_dir, "--log-every", "20",
+    ])
+    first, last = history[0]["val_loss"], history[-1]["val_loss"]
+    print(f"val loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(checkpoints in {args.ckpt_dir})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

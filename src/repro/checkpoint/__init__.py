@@ -1,0 +1,1 @@
+from repro.checkpoint.io import load_checkpoint, save_checkpoint  # noqa: F401

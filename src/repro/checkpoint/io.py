@@ -1,0 +1,62 @@
+"""Numpy-backed pytree checkpointing (no orbax offline).
+
+Layout: ``<dir>/manifest.json`` (treedef + shapes/dtypes + user metadata) and
+``<dir>/arrays.npz`` (flattened leaves, keyed ``a<i>``). bfloat16 leaves are
+bit-cast to uint16 for npz compatibility and restored on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays, manifest_leaves = {}, []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype = "bfloat16"
+        arrays[f"a{i}"] = arr
+        manifest_leaves.append({"path": _path_str(path), "dtype": dtype,
+                                "shape": list(arr.shape)})
+    np.savez(os.path.join(ckpt_dir, "arrays.npz"), **arrays)
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as fh:
+        json.dump({"leaves": manifest_leaves, "metadata": metadata or {},
+                   "treedef": str(treedef)}, fh, indent=1)
+
+
+def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with np.load(os.path.join(ckpt_dir, "arrays.npz")) as data:
+        with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
+            manifest = json.load(fh)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        if len(leaves) != len(manifest["leaves"]):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"target structure has {len(leaves)}")
+        out = []
+        for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
+            arr = data[f"a{i}"]
+            if meta["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def checkpoint_metadata(ckpt_dir: str) -> Dict:
+    with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
+        return json.load(fh)["metadata"]

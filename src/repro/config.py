@@ -1,0 +1,243 @@
+"""Configuration system for the repro framework.
+
+Everything in the framework is driven by three dataclasses:
+
+* :class:`ModelConfig`   — architecture hyper-parameters (one instance per assigned arch).
+* :class:`FederatedConfig` — the paper's algorithm knobs (M clients, I local steps,
+  learning rates, STORM constants, Neumann terms, placement strategy).
+* :class:`RunConfig`     — a launchable bundle: model + federated + mesh + input shape.
+
+Configs are plain frozen dataclasses so they can be closed over by jitted functions
+safely (hashable, usable as static args).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+ARCH_FAMILIES = (
+    "dense",        # llama / gemma2 / granite style decoder
+    "moe",          # mixture-of-experts decoder
+    "ssm",          # mamba2 (attention-free)
+    "hybrid",       # recurrentgemma: RG-LRU + local attention
+    "audio",        # encoder-only transformer (hubert)
+    "vlm",          # vision-language: LM decoder + patch-embedding stub frontend
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # one of ARCH_FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int                # GQA kv heads
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0               # mamba2 value heads
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256             # SSD chunk length
+    conv_width: int = 4
+    # --- hybrid (recurrentgemma) ---
+    lru_width: int = 0               # RG-LRU recurrence width (0 -> d_model)
+    attention_pattern: str = "global"   # "global" | "local_global" | "rg" (rec,rec,attn)
+    window_size: int = 0             # sliding window (0 = full)
+    # --- misc ---
+    logit_softcap: float = 0.0       # gemma2 final-logit soft capping
+    attn_softcap: float = 0.0        # gemma2 attention-logit soft capping
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    causal: bool = True              # False for encoder-only
+    # --- modality stub frontends (audio frames / vision patches) ---
+    num_patches: int = 0             # patch embeddings prepended per sample (vlm)
+    frontend_dim: int = 0            # dim of precomputed frame/patch embeddings
+    scale_embed: bool = False        # gemma-family sqrt(d_model) embedding scaling
+    # --- citation ---
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer mixer kind, length == num_layers."""
+        if self.family == "ssm":
+            return ("ssm",) * self.num_layers
+        if self.family == "hybrid":
+            # recurrentgemma: repeating (recurrent, recurrent, local attention)
+            pat = ("rec", "rec", "local")
+            return tuple(pat[i % 3] for i in range(self.num_layers))
+        if self.attention_pattern == "local_global":
+            return tuple("local" if i % 2 == 0 else "attn" for i in range(self.num_layers))
+        return ("attn",) * self.num_layers
+
+    def reduced(self, num_layers: int = 2, d_model: int = 256, d_ff: int = 512,
+                vocab_size: int = 512, num_experts: int = 4) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = min(self.num_kv_heads, max(1, heads // 2)) if self.num_kv_heads else 0
+        changes = dict(
+            num_layers=num_layers,
+            d_model=d_model,
+            d_ff=d_ff if self.d_ff else 0,
+            vocab_size=vocab_size,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=(d_model // heads if heads else self.ssm_head_dim),
+        )
+        if self.num_experts:
+            changes["num_experts"] = num_experts
+            changes["experts_per_token"] = min(self.experts_per_token, 2)
+        if self.family == "ssm":
+            changes["ssm_state"] = 16
+            changes["ssm_heads"] = 4
+            changes["ssm_head_dim"] = 32
+            changes["ssm_chunk"] = 32
+            changes["num_heads"] = 0
+            changes["num_kv_heads"] = 0
+            changes["head_dim"] = 0
+        if self.family == "hybrid":
+            changes["lru_width"] = d_model
+            changes["num_layers"] = 3    # one full (rec, rec, local) block
+        if self.window_size:
+            changes["window_size"] = 64
+        if self.num_patches:
+            changes["num_patches"] = 8
+        return dataclasses.replace(self, **changes)
+
+
+# ---------------------------------------------------------------------------
+# Federated / algorithm configuration
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = (
+    "fedbio",          # Algorithm 1
+    "fedbioacc",       # Algorithm 2 (STORM-accelerated)
+    "fedbio_local",    # Algorithm 3 (local lower level, Neumann hypergrad)
+    "fedbioacc_local", # Algorithm 4
+    "fednest",         # baseline: full hyper-gradient solve every round
+    "commfedbio",      # baseline: per-step hypergrad + top-k compression
+    "fedavg",          # single-level baseline substrate
+)
+
+
+@dataclass(frozen=True)
+class FederatedConfig:
+    algorithm: str = "fedbioacc"
+    num_clients: int = 16
+    local_steps: int = 4             # I in the paper
+    # learning rates (paper: gamma (y), eta (x), tau (u))
+    lr_x: float = 0.05
+    lr_y: float = 0.1
+    lr_u: float = 0.1
+    # STORM constants (FedBiOAcc): c_nu, c_omega, c_u and alpha_t = delta/(u0+t)^{1/3}
+    c_nu: float = 1.0
+    c_omega: float = 1.0
+    c_u: float = 1.0
+    alpha_delta: float = 1.0
+    alpha_u0: float = 8.0
+    # Neumann series terms Q (local-lower-level hypergradient, Eq. 6)
+    neumann_q: int = 8
+    neumann_tau: float = 0.5
+    # lower-level strong convexity regulariser (lambda)
+    lower_l2: float = 1e-2
+    # client placement on the mesh (see DESIGN.md §4)
+    placement: str = "client_sharded"   # or "client_replicated"
+    # CommFedBiO top-k compression ratio
+    compress_ratio: float = 0.1
+    # hierarchical multi-pod averaging (beyond-paper, EXPERIMENTS §Perf):
+    # 0 = flat (paper); k>0 = pod-local averaging every I steps, global
+    # (cross-pod) averaging only every k-th round
+    hierarchy_period: int = 0
+    hierarchy_groups: int = 2
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+# Hardware constants for the roofline model (TPU v5e-class, per brief).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+# ---------------------------------------------------------------------------
+# Run bundle
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunConfig:
+    """A launchable bundle; per-arch production instances are derived from
+    :mod:`repro.launch.archspec` (which also carries the §Perf knobs:
+    fused oracles, placements, microbatching)."""
+    model: ModelConfig
+    fed: FederatedConfig = field(default_factory=FederatedConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    shape: InputShape = field(default_factory=lambda: INPUT_SHAPES["train_4k"])
+    n_micro: int = 1                 # microbatches (scan + remat)
+    remat: bool = True
+    param_dtype: str = "bfloat16"
+    use_flash: bool = False          # Pallas windowed flash-attention kernel
+    use_lru_kernel: bool = False     # Pallas RG-LRU scan kernel
+    fuse_oracles: bool = False       # §Perf fused hyper-gradient oracles

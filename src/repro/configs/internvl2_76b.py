@@ -1,0 +1,15 @@
+"""InternVL2-76B — VLM: LM decoder backbone + ViT stub frontend [arXiv:2404.16821].
+
+The InternViT tower + projector is a stub per the brief: ``input_specs``
+feeds 3200-dim patch embeddings (256 patches per image) which a learned
+projector maps into the LM embedding space, interleaved before the tokens.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128_256, head_dim=128,
+    num_patches=256, frontend_dim=3200, rope_theta=500_000.0,
+    source="arXiv:2404.16821 (InternVL2)",
+)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: FedBiO / FedBiOAcc (Algorithms 1-4) and
+# the baselines from Table 1, plus the bilevel-problem and hyper-gradient
+# substrate they run on.
+from repro.core.api import make_algorithm  # noqa: F401
+from repro.core.problems import (data_cleaning_problem, hyperrep_problem,  # noqa: F401
+                                 quadratic_problem)

@@ -1,0 +1,117 @@
+"""FedBiOAcc — Algorithm 2: STORM variance reduction on all three sequences.
+
+Per step t (learning-rate schedule α_t = δ/(u0 + t)^{1/3}):
+
+    ŷ_{t+1} = y_t − γ α_t ω_t,   x̂_{t+1} = x_t − η α_t ν_t,
+    û_{t+1} = u_t − τ α_t q_t                                   (line 4)
+    [every I steps: average x, y, u]                            (lines 5–9)
+    ω_{t+1} = ∇_y g(z_{t+1}; B) + (1 − c_ω α_t²)(ω_t − ∇_y g(z_t; B))
+    ν_{t+1} = μ(z_{t+1}, u_{t+1}; B) + (1 − c_ν α_t²)(ν_t − μ(z_t, u_t; B))
+    q_{t+1} = p(z_{t+1}, u_{t+1}; B) + (1 − c_u α_t²)(q_t − p(z_t, u_t; B))
+    [every I steps: average ω, ν, q]                            (lines 13–17)
+
+where μ = ∇_x f − ∇_xy g·u and p = ∇²_yy g·u − ∇_y f. The same fresh
+minibatch is evaluated at the old and new iterate — the STORM correction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import FederatedConfig
+from repro.core import hypergrad as hg
+from repro.core.problems import Problem
+from repro.core.fedbio import Algorithm, _broadcast_clients
+from repro.core.tree_util import client_mean, tree_axpy, tree_size, tree_sub, tree_zeros_like
+
+
+class FedBiOAccState(NamedTuple):
+    x: Any
+    y: Any
+    u: Any
+    omega: Any   # momentum for y
+    nu: Any      # momentum for x
+    q: Any       # momentum for u
+    t: jnp.ndarray
+
+
+def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
+    M = problem.num_clients
+    f, g = problem.f, problem.g
+
+    def alpha(t):
+        return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+
+    def oracles(x, y, u, batches):
+        by, bf1, bg1, bf2, bg2 = batches
+        omega = hg.grad_y(g, x, y, by)
+        mu = hg.nu_direction(g, f, x, y, u, bg1, bf1)
+        p = hg.u_residual(g, f, x, y, u, bg2, bf2)
+        return omega, mu, p
+
+    voracles = jax.vmap(oracles)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        x1, y1 = problem.init_xy(k1)
+        u1 = tree_zeros_like(y1)
+        x = _broadcast_clients(x1, M)
+        y = _broadcast_clients(y1, M)
+        u = _broadcast_clients(u1, M)
+        ks = jax.random.split(k2, 5)
+        batches = tuple(problem.sample_batches(kk) for kk in ks)
+        omega, nu, q = voracles(x, y, u, batches)
+        return FedBiOAccState(x, y, u, omega, nu, q, jnp.zeros((), jnp.int32))
+
+    def round(state: FedBiOAccState, key):
+        def body(carry, inp):
+            x, y, u, omega, nu, q, t = carry
+            k, is_comm = inp
+            a = alpha(t)
+            # --- variable update (line 4) ---
+            x_new = jax.tree.map(lambda v, m: v - cfg.lr_x * a * m, x, nu)
+            y_new = jax.tree.map(lambda v, m: v - cfg.lr_y * a * m, y, omega)
+            u_new = jax.tree.map(lambda v, m: v - cfg.lr_u * a * m, u, q)
+            # --- communication of variables (lines 5-9) ---
+            x_new = lax.cond(is_comm, client_mean, lambda v: v, x_new)
+            y_new = lax.cond(is_comm, client_mean, lambda v: v, y_new)
+            u_new = lax.cond(is_comm, client_mean, lambda v: v, u_new)
+            # --- STORM momentum with shared minibatch (lines 10-12) ---
+            ks = jax.random.split(k, 5)
+            batches = tuple(problem.sample_batches(kk) for kk in ks)
+            o_new, m_new, p_new = voracles(x_new, y_new, u_new, batches)
+            o_old, m_old, p_old = voracles(x, y, u, batches)
+            ca2 = (a * a)
+
+            def storm(new, mom, old, c):
+                return jax.tree.map(
+                    lambda gn, mo, go: gn + (1.0 - c * ca2) * (mo - go),
+                    new, mom, old)
+
+            omega = storm(o_new, omega, o_old, cfg.c_omega)
+            nu = storm(m_new, nu, m_old, cfg.c_nu)
+            q = storm(p_new, q, p_old, cfg.c_u)
+            # --- communication of momenta (lines 13-17) ---
+            omega = lax.cond(is_comm, client_mean, lambda v: v, omega)
+            nu = lax.cond(is_comm, client_mean, lambda v: v, nu)
+            q = lax.cond(is_comm, client_mean, lambda v: v, q)
+            return (x_new, y_new, u_new, omega, nu, q, t + 1), None
+
+        I = cfg.local_steps
+        keys = jax.random.split(key, I)
+        is_comm = jnp.arange(1, I + 1) == I          # communicate on last local step
+        carry = (state.x, state.y, state.u, state.omega, state.nu, state.q, state.t)
+        carry, _ = lax.scan(body, carry, (keys, is_comm))
+        new = FedBiOAccState(*carry)
+        return new, {"t": new.t}
+
+    def mean_x(state):
+        return jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
+
+    x1, y1 = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+    # x + y + u + three momenta per client per round
+    comm = 2 * (tree_size(x1) + 2 * tree_size(y1))
+    return Algorithm("fedbioacc", init, round, comm, mean_x)

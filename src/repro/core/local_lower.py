@@ -1,0 +1,142 @@
+"""Algorithms 3 & 4 — Federated Bilevel Optimization with *local* lower level
+problems (Eq. 5):
+
+    min_x (1/M) Σ_m f^(m)(x, y_x^(m)),   y_x^(m) = argmin_y g^(m)(x, y)
+
+Each client keeps a private lower variable y^(m) (never communicated); the
+local hyper-gradient Φ^(m) is *unbiased* here and is estimated with the
+truncated Neumann series (Eq. 6, Q terms). Only the upper variable (Alg. 3)
+— plus its STORM momentum (Alg. 4) — is averaged every I steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import FederatedConfig
+from repro.core import hypergrad as hg
+from repro.core.fedbio import Algorithm, _broadcast_clients
+from repro.core.problems import Problem
+from repro.core.tree_util import client_mean, tree_axpy, tree_size
+
+
+class FedBiOLocalState(NamedTuple):
+    x: Any
+    y: Any
+    t: jnp.ndarray
+
+
+class FedBiOAccLocalState(NamedTuple):
+    x: Any
+    y: Any
+    omega: Any
+    nu: Any
+    t: jnp.ndarray
+
+
+def make_fedbio_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
+    M = problem.num_clients
+    f, g = problem.f, problem.g
+
+    def init(key):
+        x1, y1 = problem.init_xy(key)
+        return FedBiOLocalState(
+            _broadcast_clients(x1, M), _broadcast_clients(y1, M),
+            jnp.zeros((), jnp.int32))
+
+    def local_step(x, y, batches):
+        by, bx_g, bx_f = batches
+        omega = hg.grad_y(g, x, y, by)
+        nu = hg.neumann_hypergrad(g, f, x, y, bx_g, bx_f,
+                                  cfg.neumann_q, cfg.neumann_tau)
+        return tree_axpy(-cfg.lr_x, nu, x), tree_axpy(-cfg.lr_y, omega, y)
+
+    vstep = jax.vmap(local_step)
+
+    def round(state, key):
+        def body(carry, k):
+            x, y = carry
+            ks = jax.random.split(k, 3)
+            batches = tuple(problem.sample_batches(kk) for kk in ks)
+            x, y = vstep(x, y, batches)
+            return (x, y), None
+
+        keys = jax.random.split(key, cfg.local_steps)
+        (x, y), _ = lax.scan(body, (state.x, state.y), keys)
+        x = client_mean(x)                      # only x is communicated
+        new = FedBiOLocalState(x, y, state.t + cfg.local_steps)
+        return new, {"t": new.t}
+
+    def mean_x(state):
+        return jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
+
+    x1, _ = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+    return Algorithm("fedbio_local", init, round, tree_size(x1), mean_x)
+
+
+def make_fedbioacc_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
+    M = problem.num_clients
+    f, g = problem.f, problem.g
+
+    def alpha(t):
+        return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+
+    def oracles(x, y, batches):
+        by, bx_g, bx_f = batches
+        omega = hg.grad_y(g, x, y, by)
+        nu = hg.neumann_hypergrad(g, f, x, y, bx_g, bx_f,
+                                  cfg.neumann_q, cfg.neumann_tau)
+        return omega, nu
+
+    voracles = jax.vmap(oracles)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        x1, y1 = problem.init_xy(k1)
+        x = _broadcast_clients(x1, M)
+        y = _broadcast_clients(y1, M)
+        ks = jax.random.split(k2, 3)
+        batches = tuple(problem.sample_batches(kk) for kk in ks)
+        omega, nu = voracles(x, y, batches)
+        return FedBiOAccLocalState(x, y, omega, nu, jnp.zeros((), jnp.int32))
+
+    def round(state, key):
+        def body(carry, inp):
+            x, y, omega, nu, t = carry
+            k, is_comm = inp
+            a = alpha(t)
+            x_new = jax.tree.map(lambda v, m: v - cfg.lr_x * a * m, x, nu)
+            y_new = jax.tree.map(lambda v, m: v - cfg.lr_y * a * m, y, omega)
+            x_new = lax.cond(is_comm, client_mean, lambda v: v, x_new)
+            ks = jax.random.split(k, 3)
+            batches = tuple(problem.sample_batches(kk) for kk in ks)
+            o_new, n_new = voracles(x_new, y_new, batches)
+            o_old, n_old = voracles(x, y, batches)
+            ca2 = a * a
+
+            def storm(new, mom, old, c):
+                return jax.tree.map(
+                    lambda gn, mo, go: gn + (1.0 - c * ca2) * (mo - go),
+                    new, mom, old)
+
+            omega = storm(o_new, omega, o_old, cfg.c_omega)
+            nu = storm(n_new, nu, n_old, cfg.c_nu)
+            nu = lax.cond(is_comm, client_mean, lambda v: v, nu)   # ν averaged too
+            return (x_new, y_new, omega, nu, t + 1), None
+
+        I = cfg.local_steps
+        keys = jax.random.split(key, I)
+        is_comm = jnp.arange(1, I + 1) == I
+        carry = (state.x, state.y, state.omega, state.nu, state.t)
+        carry, _ = lax.scan(body, carry, (keys, is_comm))
+        new = FedBiOAccLocalState(*carry)
+        return new, {"t": new.t}
+
+    def mean_x(state):
+        return jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
+
+    x1, _ = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+    return Algorithm("fedbioacc_local", init, round, 2 * tree_size(x1), mean_x)

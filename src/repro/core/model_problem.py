@@ -1,0 +1,63 @@
+"""Bilevel problem backed by a model-zoo architecture.
+
+This is the paper's Hyper-Representation formulation scaled to the assigned
+architectures: the **upper** variable x is the transformer body, the **lower**
+variable y is the output head; the lower objective is the (L2-regularised,
+hence μ-strongly-convex in y) training CE, the upper objective is CE on a
+held-out validation stream (per client, heterogeneous).
+
+Losses are computed with a remat'd ``lax.scan`` over microbatches so that
+``jax.grad`` performs gradient accumulation with one-microbatch activation
+memory — this is what makes the 405B train step lowerable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.registry import Model
+
+
+def _microbatch_mean(loss_one, batch, n_micro: int):
+    """mean over microbatches of ``loss_one(microbatch)`` with remat."""
+    if n_micro <= 1:
+        return loss_one(batch)
+    split = jax.tree.map(
+        lambda v: v.reshape((n_micro, v.shape[0] // n_micro) + v.shape[1:]), batch)
+
+    @jax.checkpoint
+    def body(acc, mb):
+        return acc + loss_one(mb), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), split)
+    return total / n_micro
+
+
+def make_model_bilevel(model: Model, *, lower_l2: float = 1e-2,
+                       n_micro: int = 1, remat: bool = True,
+                       use_flash: bool = False, use_lru_kernel: bool = False):
+    """Returns (f, g): per-client stochastic upper/lower objectives.
+
+    ``batch`` is a dict ``{"train": model_batch, "val": model_batch}`` for one
+    client; x = body params, y = head params.
+    """
+
+    def _loss(x, y, mb):
+        l, _ = model.loss({"body": x, "head": y}, mb, remat=remat,
+                          use_flash=use_flash, use_lru_kernel=use_lru_kernel)
+        return l.astype(jnp.float32)
+
+    def g(x, y, batch):
+        base = _microbatch_mean(lambda mb: _loss(x, y, mb), batch["train"], n_micro)
+        reg = 0.5 * lower_l2 * sum(
+            jnp.sum(v.astype(jnp.float32) ** 2) for v in jax.tree.leaves(y))
+        return base + reg
+
+    def f(x, y, batch):
+        return _microbatch_mean(lambda mb: _loss(x, y, mb), batch["val"], n_micro)
+
+    return f, g

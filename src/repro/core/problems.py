@@ -1,0 +1,363 @@
+"""Bilevel problem definitions.
+
+A :class:`Problem` bundles the per-client stochastic objectives:
+
+* ``f(x, y, batch) -> scalar``   — upper objective f^(m)(x, y; ξ)
+* ``g(x, y, batch) -> scalar``   — lower objective g^(m)(x, y; ξ) (μ-strongly
+  convex in y by construction)
+* ``sample_batches(key) -> batch``  — one independent oracle draw for **all M
+  clients at once** (leading axis M); heterogeneity lives in the batch.
+
+Three families:
+
+* :func:`quadratic_problem` — synthetic heterogeneous quadratics with a
+  closed-form hyper-gradient (used to validate every theorem-level claim).
+* :func:`data_cleaning_problem` — the paper's Federated Data Cleaning task
+  (upper var = per-sample weight logits on a shared corrupted train set,
+  lower var = classifier; per-client clean validation shards).
+* :func:`hyperrep_problem` — the paper's Hyper-Representation task (upper =
+  MLP backbone, lower = linear head); also the template for the LLM-scale
+  train step (see ``core/model_problem.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree_util import tree_randn_like
+
+
+@dataclass(frozen=True)
+class Problem:
+    name: str
+    num_clients: int
+    init_xy: Callable[[Any], Any]          # key -> (x, y) single-client template
+    f: Callable[[Any, Any, Any], Any]
+    g: Callable[[Any, Any, Any], Any]
+    sample_batches: Callable[[Any], Any]   # key -> per-client batch [M, ...]
+    # optional closed-form helpers (synthetic quadratic only)
+    exact_hypergrad: Optional[Callable] = None      # x -> Φ(x, y_x)
+    exact_lower_sol: Optional[Callable] = None      # x -> y_x
+    # per-client exact lower solutions (local-lower-level problems, Eq. 5)
+    exact_hypergrad_local: Optional[Callable] = None
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic heterogeneous quadratic bilevel problem
+# ---------------------------------------------------------------------------
+
+def _rand_spd(key, d, mu, L, M):
+    """[M, d, d] SPD matrices with spectrum in [mu, L]."""
+    ks = jax.random.split(key, M)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        q, _ = jnp.linalg.qr(jax.random.normal(k1, (d, d)))
+        ev = jax.random.uniform(k2, (d,), minval=mu, maxval=L)
+        return (q * ev) @ q.T
+
+    return jax.vmap(one)(ks)
+
+
+def quadratic_problem(key, *, num_clients=8, dx=10, dy=10, mu=1.0, L=5.0,
+                      hetero=1.0, noise=0.1, batch_size=8,
+                      local_lower: bool = False) -> Problem:
+    """Heterogeneous stochastic quadratic bilevel problem.
+
+        g^m(x,y) = ½ yᵀA_g^m y + xᵀB^m y + c_mᵀy            (+ ⟨ξ, y⟩ noise)
+        f^m(x,y) = ½‖y − y0_m‖² + ½ρ‖x − x0_m‖² + xᵀD^m y   (+ ⟨ξ, ·⟩ noise)
+
+    Closed forms (global lower level):
+        y_x   = −Ā⁻¹ (B̄ᵀ x + c̄)
+        ∇h(x) = ∇_x f̄(x,y_x) − B̄ Ā⁻¹ ∇_y f̄(x, y_x)
+    """
+    M = num_clients
+    ks = jax.random.split(key, 7)
+    Ag = _rand_spd(ks[0], dy, mu, L, M)
+    B = jax.random.normal(ks[1], (M, dx, dy)) * (hetero * 0.3 + 0.3)
+    c = jax.random.normal(ks[2], (M, dy)) * hetero
+    D = jax.random.normal(ks[3], (M, dx, dy)) * 0.1
+    x0 = jax.random.normal(ks[4], (M, dx)) * hetero
+    y0 = jax.random.normal(ks[5], (M, dy)) * hetero
+    rho = 1.0
+    sigma = noise / np.sqrt(batch_size)
+
+    def init_xy(k):
+        k1, k2 = jax.random.split(k)
+        return (jax.random.normal(k1, (dx,)), jax.random.normal(k2, (dy,)))
+
+    def g(x, y, batch):
+        quad = 0.5 * y @ batch["Ag"] @ y + x @ batch["B"] @ y + batch["c"] @ y
+        noise_term = batch["ng"] @ y
+        return quad + noise_term
+
+    def f(x, y, batch):
+        val = (0.5 * jnp.sum((y - batch["y0"]) ** 2)
+               + 0.5 * rho * jnp.sum((x - batch["x0"]) ** 2)
+               + x @ batch["D"] @ y)
+        return val + batch["nfx"] @ x + batch["nfy"] @ y
+
+    def sample_batches(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "Ag": Ag, "B": B, "c": c, "D": D, "x0": x0, "y0": y0,
+            "ng": sigma * jax.random.normal(k1, (M, dy)),
+            "nfx": sigma * jax.random.normal(k2, (M, dx)),
+            "nfy": sigma * jax.random.normal(k3, (M, dy)),
+        }
+
+    # ---- closed forms ----
+    Abar = jnp.mean(Ag, 0)
+    Bbar = jnp.mean(B, 0)
+    cbar = jnp.mean(c, 0)
+    Dbar = jnp.mean(D, 0)
+    x0bar = jnp.mean(x0, 0)
+    y0bar = jnp.mean(y0, 0)
+
+    def exact_lower_sol(x):
+        return -jnp.linalg.solve(Abar, Bbar.T @ x + cbar)
+
+    def exact_hypergrad(x):
+        yx = exact_lower_sol(x)
+        gx = rho * (x - x0bar) + Dbar @ yx
+        gy = (yx - y0bar) + Dbar.T @ x
+        return gx - Bbar @ jnp.linalg.solve(Abar, gy)
+
+    def exact_hypergrad_local(x):
+        """Eq. (5): h(x) = (1/M) Σ f^m(x, y_x^m), y_x^m = argmin g^m."""
+        def one(Agm, Bm, cm, Dm, x0m, y0m):
+            yx = -jnp.linalg.solve(Agm, Bm.T @ x + cm)
+            gx = rho * (x - x0m) + Dm @ yx
+            gy = (yx - y0m) + Dm.T @ x
+            return gx - Bm @ jnp.linalg.solve(Agm, gy)
+        return jnp.mean(jax.vmap(one)(Ag, B, c, D, x0, y0), axis=0)
+
+    return Problem(
+        name="quadratic", num_clients=M, init_xy=init_xy, f=f, g=g,
+        sample_batches=sample_batches, exact_hypergrad=exact_hypergrad,
+        exact_lower_sol=exact_lower_sol,
+        exact_hypergrad_local=exact_hypergrad_local)
+
+
+# ---------------------------------------------------------------------------
+# Federated data cleaning (paper §5 experiment 1)
+# ---------------------------------------------------------------------------
+
+def make_cleaning_data(key, *, num_clients=8, n_train=256, n_val=64, dim=16,
+                       classes=4, corrupt_frac=0.4):
+    """Shared corrupted train set + per-client clean validation shards."""
+    ks = jax.random.split(key, 6)
+    w_true = jax.random.normal(ks[0], (dim, classes))
+    xtr = jax.random.normal(ks[1], (n_train, dim))
+    logits = xtr @ w_true
+    ytr_clean = jnp.argmax(logits + 0.5 * jax.random.normal(ks[2], logits.shape), -1)
+    n_bad = int(n_train * corrupt_frac)
+    corrupt_mask = jnp.arange(n_train) < n_bad
+    y_rand = jax.random.randint(ks[3], (n_train,), 0, classes)
+    ytr = jnp.where(corrupt_mask, y_rand, ytr_clean)
+    # per-client val (heterogeneous shift)
+    xval = jax.random.normal(ks[4], (num_clients, n_val, dim)) \
+        + 0.3 * jax.random.normal(ks[5], (num_clients, 1, dim))
+    yval = jnp.argmax(jnp.einsum("mnd,dc->mnc", xval, w_true), -1)
+    return {"xtr": xtr, "ytr": ytr, "corrupt_mask": corrupt_mask,
+            "xval": xval, "yval": yval, "w_true": w_true}
+
+
+def data_cleaning_problem(key, *, num_clients=8, n_train=256, n_val=64, dim=16,
+                          classes=4, corrupt_frac=0.4, batch_size=32,
+                          lower_l2=0.5) -> Problem:
+    data = make_cleaning_data(key, num_clients=num_clients, n_train=n_train,
+                              n_val=n_val, dim=dim, classes=classes,
+                              corrupt_frac=corrupt_frac)
+    M = num_clients
+
+    def init_xy(k):
+        x = jnp.zeros((n_train,))                       # weight logits
+        y = 0.01 * jax.random.normal(k, (dim, classes))
+        return x, y
+
+    def _ce(w, xs, ys):
+        lp = jax.nn.log_softmax(xs @ w, axis=-1)
+        return -jnp.take_along_axis(lp, ys[:, None], axis=1)[:, 0]
+
+    def g(x, y, batch):
+        idx = batch["tr_idx"]
+        per = _ce(y, data["xtr"][idx], data["ytr"][idx])
+        w = jax.nn.sigmoid(x[idx])
+        return jnp.mean(w * per) + 0.5 * lower_l2 * jnp.sum(y ** 2)
+
+    def f(x, y, batch):
+        m = batch["client"]
+        idx = batch["val_idx"]
+        per = _ce(y, data["xval"][m][idx], data["yval"][m][idx])
+        return jnp.mean(per)
+
+    def sample_batches(k):
+        k1, k2 = jax.random.split(k)
+        tr_idx = jax.random.randint(k1, (M, batch_size), 0, n_train)
+        val_idx = jax.random.randint(k2, (M, batch_size), 0, n_val)
+        return {"tr_idx": tr_idx, "val_idx": val_idx,
+                "client": jnp.arange(M)}
+
+    prob = Problem(name="data_cleaning", num_clients=M, init_xy=init_xy,
+                   f=f, g=g, sample_batches=sample_batches)
+    object.__setattr__(prob, "data", data)   # stash for evaluation scripts
+    return prob
+
+
+# ---------------------------------------------------------------------------
+# Hyper-representation learning (paper §5 experiment 2)
+# ---------------------------------------------------------------------------
+
+def make_hyperrep_data(key, *, num_clients=8, n=256, dim=16, classes=4,
+                       hetero=0.5):
+    ks = jax.random.split(key, 4)
+    w_shared = jax.random.normal(ks[0], (dim, dim))
+    xs = jax.random.normal(ks[1], (num_clients, n, dim))
+    w_cli = jax.random.normal(ks[2], (num_clients, dim, classes))
+    w_common = jax.random.normal(ks[3], (dim, classes))
+    w_task = w_common[None] + hetero * w_cli
+    feats = jnp.tanh(jnp.einsum("mnd,de->mne", xs, w_shared))
+    ys = jnp.argmax(jnp.einsum("mne,mec->mnc", feats, w_task), -1)
+    return {"x": xs, "y": ys}
+
+
+def hyperrep_problem(key, *, num_clients=8, n=256, dim=16, hidden=32,
+                     classes=4, batch_size=32, lower_l2=0.1,
+                     hetero=0.5) -> Problem:
+    """Upper x = 2-layer MLP backbone; lower y = linear head."""
+    data = make_hyperrep_data(key, num_clients=num_clients, n=n, dim=dim,
+                              classes=classes, hetero=hetero)
+    M = num_clients
+
+    def init_xy(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        x = {"w1": 0.3 * jax.random.normal(k1, (dim, hidden)),
+             "b1": jnp.zeros((hidden,)),
+             "w2": 0.3 * jax.random.normal(k2, (hidden, hidden)),
+             "b2": jnp.zeros((hidden,))}
+        y = {"w": 0.1 * jax.random.normal(k3, (hidden, classes)),
+             "b": jnp.zeros((classes,))}
+        return x, y
+
+    def backbone(x, inp):
+        h = jnp.tanh(inp @ x["w1"] + x["b1"])
+        return jnp.tanh(h @ x["w2"] + x["b2"])
+
+    def _loss(x, y, xs, ys):
+        feats = backbone(x, xs)
+        lp = jax.nn.log_softmax(feats @ y["w"] + y["b"], axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, ys[:, None], axis=1))
+
+    def g(x, y, batch):
+        m, idx = batch["client"], batch["tr_idx"]
+        base = _loss(x, y, data["x"][m][idx], data["y"][m][idx])
+        reg = 0.5 * lower_l2 * sum(jnp.sum(v ** 2) for v in jax.tree.leaves(y))
+        return base + reg
+
+    def f(x, y, batch):
+        m, idx = batch["client"], batch["val_idx"]
+        return _loss(x, y, data["x"][m][idx], data["y"][m][idx])
+
+    def sample_batches(k):
+        k1, k2 = jax.random.split(k)
+        half = n // 2
+        tr_idx = jax.random.randint(k1, (M, batch_size), 0, half)
+        val_idx = half + jax.random.randint(k2, (M, batch_size), 0, half)
+        return {"tr_idx": tr_idx, "val_idx": val_idx, "client": jnp.arange(M)}
+
+    prob = Problem(name="hyperrep", num_clients=M, init_xy=init_xy, f=f, g=g,
+                   sample_batches=sample_batches)
+    object.__setattr__(prob, "data", data)
+    return prob
+
+
+# ---------------------------------------------------------------------------
+# Fair Federated Learning (paper §5 conclusion: bilevel fairness formulation)
+# ---------------------------------------------------------------------------
+
+def make_fairness_data(key, *, num_clients=8, n=256, dim=16, classes=4,
+                       hard_clients=2, shift=1.5):
+    """Classification shards with a **minority distribution**: the first
+    ``hard_clients`` clients draw labels from a rotated ground truth. A
+    uniformly-weighted model is pulled to the majority and under-serves
+    them — the regime where risk-equalising client weights help."""
+    ks = jax.random.split(key, 4)
+    w_true = jax.random.normal(ks[0], (dim, classes))
+    w_minor = w_true + shift * jax.random.normal(ks[3], (dim, classes))
+    xs = jax.random.normal(ks[1], (num_clients, n, dim))
+    hard_mask = jnp.arange(num_clients) < hard_clients
+    w_per = jnp.where(hard_mask[:, None, None], w_minor[None], w_true[None])
+    logits = jnp.einsum("mnd,mdc->mnc", xs, w_per)
+    noise = 0.2 * jax.random.normal(ks[2], logits.shape)
+    ys = jnp.argmax(logits + noise, -1)
+    return {"x": xs, "y": ys, "hard_mask": hard_mask}
+
+
+def fair_federated_problem(key, *, num_clients=8, n=256, dim=16, classes=4,
+                           batch_size=32, lower_l2=0.2, beta=2.0,
+                           hard_clients=2) -> Problem:
+    """Bilevel Fair FL:
+
+        lower  g^m(λ, y) = M·softmax(λ)_m · L^train_m(y) + (μ/2)||y||²
+               (client average = Σ_m softmax(λ)_m L_m + reg)
+        upper  f^m(λ, y) = exp(β · L^val_m(y)) / β
+               (client average ≈ a smooth-max over client validation losses)
+
+    The upper variable λ (client weight logits) learns to up-weight
+    under-served clients; minimizing the smooth-max equalises client risk —
+    the fairness objective the paper's conclusion refers to.
+    """
+    data = make_fairness_data(key, num_clients=num_clients, n=n, dim=dim,
+                              classes=classes, hard_clients=hard_clients)
+    M = num_clients
+
+    def init_xy(k):
+        lam = jnp.zeros((M,))
+        y = 0.01 * jax.random.normal(k, (dim, classes))
+        return lam, y
+
+    def _ce(w, xs, ys):
+        lp = jax.nn.log_softmax(xs @ w, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, ys[:, None], axis=1))
+
+    def g(lam, y, batch):
+        m, idx = batch["client"], batch["tr_idx"]
+        loss = _ce(y, data["x"][m][idx], data["y"][m][idx])
+        w = M * jax.nn.softmax(lam)[m]
+        return w * loss + 0.5 * lower_l2 * jnp.sum(y ** 2)
+
+    def f(lam, y, batch):
+        m, idx = batch["client"], batch["val_idx"]
+        loss = _ce(y, data["x"][m][idx], data["y"][m][idx])
+        return jnp.exp(beta * jnp.minimum(loss, 10.0)) / beta
+
+    def sample_batches(k):
+        k1, k2 = jax.random.split(k)
+        half = n // 2
+        return {"tr_idx": jax.random.randint(k1, (M, batch_size), 0, half),
+                "val_idx": half + jax.random.randint(k2, (M, batch_size), 0, half),
+                "client": jnp.arange(M)}
+
+    prob = Problem(name="fair_fl", num_clients=M, init_xy=init_xy, f=f, g=g,
+                   sample_batches=sample_batches)
+    object.__setattr__(prob, "data", data)
+
+    def client_val_losses(lam, y):
+        half = n // 2
+
+        def one(m):
+            return _ce(y, data["x"][m][half:], data["y"][m][half:])
+
+        return jax.vmap(one)(jnp.arange(M))
+
+    object.__setattr__(prob, "client_val_losses", client_val_losses)
+    return prob

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (make_fed_batch_fn, make_model_batch,  # noqa: F401
+                                  dirichlet_partition)

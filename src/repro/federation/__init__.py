@@ -1,0 +1,6 @@
+from repro.federation.trainer import (make_fedavg_train_step,  # noqa: F401
+                                      make_fedbio_local_train_step,
+                                      make_fedbio_train_step,
+                                      make_fedbioacc_local_train_step,
+                                      make_fedbioacc_train_step)
+from repro.federation.evaluate import eval_federated, perplexity  # noqa: F401

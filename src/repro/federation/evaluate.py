@@ -1,0 +1,71 @@
+"""Evaluation utilities for federated bilevel training runs.
+
+Per-client and pooled metrics over held-out streams:
+
+* ``perplexity`` — exp(CE) of the LM on a client's validation stream;
+* ``personalisation_gain`` — Eq. (5) diagnostics: loss of client m's
+  *own* head vs the average head on m's data (positive gain = the private
+  lower-level solutions y^(m) are doing real per-client work — the paper's
+  motivation for the local-lower formulation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_util import client_slice
+from repro.models.registry import Model
+
+
+def client_loss(model: Model, body, head, batch) -> float:
+    loss, _ = model.loss({"body": body, "head": head}, batch)
+    return float(loss)
+
+
+def perplexity(model: Model, body, head, batch) -> float:
+    return float(jnp.exp(jnp.minimum(
+        jnp.asarray(client_loss(model, body, head, batch)), 20.0)))
+
+
+def eval_federated(model: Model, state, batch_fn, key, *,
+                   num_clients: int) -> Dict[str, Any]:
+    """Evaluate a federated train state (any of the trainer state types).
+
+    Returns pooled and per-client val loss/perplexity, plus the
+    personalisation gain when heads are private (local-lower states).
+    """
+    batch = batch_fn(key)
+    if hasattr(state, "params"):          # FedAvg
+        bodies = jax.tree.map(lambda v: v, state.params)
+        get = lambda m: (client_slice(bodies, m)["body"],
+                         client_slice(bodies, m)["head"])
+    else:
+        get = lambda m: (client_slice(state.x, m), client_slice(state.y, m))
+
+    per_client = []
+    for m in range(num_clients):
+        body, head = get(m)
+        b = jax.tree.map(lambda v: v[m], batch["val"])
+        l = client_loss(model, body, head, b)
+        per_client.append(l)
+
+    # average head (what Eq. (1) would deploy) evaluated on each client
+    avg_head = jax.tree.map(lambda v: jnp.mean(v, axis=0),
+                            state.y if not hasattr(state, "params")
+                            else state.params["head"])
+    gains = []
+    for m in range(num_clients):
+        body, head = get(m)
+        b = jax.tree.map(lambda v: v[m], batch["val"])
+        l_avg = client_loss(model, body, avg_head, b)
+        gains.append(l_avg - per_client[m])
+
+    losses = jnp.asarray(per_client)
+    return {
+        "val_loss_mean": float(jnp.mean(losses)),
+        "val_loss_per_client": [round(float(l), 4) for l in losses],
+        "perplexity_mean": float(jnp.mean(jnp.exp(jnp.minimum(losses, 20.0)))),
+        "personalisation_gain_mean": float(jnp.mean(jnp.asarray(gains))),
+    }

@@ -1,0 +1,355 @@
+"""Model-scale federated train steps (the production `train_step` that the
+multi-pod dry-run lowers).
+
+Every federated state tensor carries a leading client axis M. Under pjit the
+axis is sharded over the mesh "data" axis (``client_sharded``) or left
+replicated with the parameters FSDP-sharded instead (``client_replicated``,
+for the memory-giant archs — see DESIGN.md §4). ``client_mean`` under
+``lax.cond(step % I == 0)`` is the paper's communication round.
+
+Memory discipline (what makes llama3-405b lowerable):
+
+* FedBiO keeps **one** body-sized persistent tensor per client (x); the ν
+  direction is transient.
+* FedBiOAcc keeps two (x and its STORM momentum ν). The STORM correction
+  needs the *previous* iterate — instead of storing a third body copy we
+  evaluate the old-iterate oracle **before** applying the update, so XLA can
+  free it (documented deviation: at communication steps the pre-averaging
+  local iterate is used as the "old" point, exactly as Alg. 2 lines 10-12).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import FederatedConfig
+from repro.core import hypergrad as hg
+from repro.core.model_problem import make_model_bilevel
+from repro.core.tree_util import client_mean, client_mean_grouped, tree_zeros_like
+from repro.models.registry import Model
+
+
+class FedBiOTrainState(NamedTuple):
+    x: Any               # [M, ...] body
+    y: Any               # [M, ...] head (lower variable)
+    u: Any               # [M, ...] Eq. (4) auxiliary
+    step: jnp.ndarray
+
+
+class FedBiOAccTrainState(NamedTuple):
+    x: Any
+    y: Any
+    u: Any
+    omega: Any           # y-momentum
+    nu: Any              # x-momentum (body-sized)
+    q: Any               # u-momentum
+    step: jnp.ndarray
+
+
+class FedAvgTrainState(NamedTuple):
+    params: Any
+    mom: Any
+    step: jnp.ndarray
+
+
+def _bcast(tree, m):
+    return jax.tree.map(lambda v: jnp.broadcast_to(v[None], (m,) + v.shape), tree)
+
+
+def _cond_mean(pred, tree):
+    return lax.cond(pred, client_mean, lambda t: t, tree)
+
+
+def _comm(cfg: FederatedConfig, step, tree):
+    """Communication schedule: averaging every I steps; with
+    ``hierarchy_period = k > 0`` only every k-th round crosses pod groups
+    (pod-local grouped mean otherwise) — the beyond-paper hierarchical
+    schedule for the multi-pod mesh (cross-pod traffic ÷ k)."""
+    is_comm = (step + 1) % cfg.local_steps == 0
+    if cfg.hierarchy_period <= 0:
+        return _cond_mean(is_comm, tree)
+    round_idx = (step + 1) // cfg.local_steps
+    is_global = round_idx % cfg.hierarchy_period == 0
+
+    def do_comm(t):
+        return lax.cond(is_global, client_mean,
+                        lambda tt: client_mean_grouped(tt, cfg.hierarchy_groups),
+                        t)
+
+    return lax.cond(is_comm, do_comm, lambda t: t, tree)
+
+
+def _alpha(cfg: FederatedConfig, t):
+    return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# FedBiO (Algorithm 1) at model scale
+# ---------------------------------------------------------------------------
+
+def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
+                           n_micro: int = 1, remat: bool = True,
+                           use_flash: bool = False, use_lru_kernel: bool = False,
+                           fuse_oracles: bool = False):
+    f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
+                              remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+    M = cfg.num_clients
+
+    def init(key):
+        p = model.init(key)
+        x, y = p["body"], p["head"]
+        return FedBiOTrainState(_bcast(x, M), _bcast(y, M),
+                                _bcast(tree_zeros_like(y), M),
+                                jnp.zeros((), jnp.int32))
+
+    def local(x, y, u, batch):
+        if fuse_oracles:
+            omega, mu, p = hg.fused_oracles(g, f, x, y, u, batch)
+            nu = mu
+            u_new = jax.tree.map(lambda v, r: v - cfg.lr_u * r.astype(v.dtype),
+                                 u, p)
+        else:
+            omega = hg.grad_y(g, x, y, batch)
+            nu = hg.nu_direction(g, f, x, y, u, batch, batch)
+            u_new = hg.u_step(g, f, x, y, u, batch, batch, cfg.lr_u)
+        y_new = jax.tree.map(lambda v, o: v - cfg.lr_y * o.astype(v.dtype), y, omega)
+        x_new = jax.tree.map(lambda v, o: v - cfg.lr_x * o.astype(v.dtype), x, nu)
+        return x_new, y_new, u_new
+
+    vlocal = jax.vmap(local)
+
+    def train_step(state: FedBiOTrainState, batch):
+        x, y, u = vlocal(state.x, state.y, state.u, batch)
+        x = _comm(cfg, state.step, x)
+        y = _comm(cfg, state.step, y)
+        u = _comm(cfg, state.step, u)
+        new = FedBiOTrainState(x, y, u, state.step + 1)
+        # cheap progress metric: lower loss on the train stream of client 0
+        return new, {"step": new.step}
+
+    return init, train_step
+
+
+# ---------------------------------------------------------------------------
+# FedBiOAcc (Algorithm 2) at model scale
+# ---------------------------------------------------------------------------
+
+def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
+                              n_micro: int = 1, remat: bool = True,
+                              use_flash: bool = False,
+                              use_lru_kernel: bool = False,
+                              fuse_storm: bool = False,
+                              fuse_oracles: bool = False):
+    f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
+                              remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+    M = cfg.num_clients
+
+    def oracles(x, y, u, batch):
+        if fuse_oracles:
+            return hg.fused_oracles(g, f, x, y, u, batch)
+        omega = hg.grad_y(g, x, y, batch)
+        mu = hg.nu_direction(g, f, x, y, u, batch, batch)
+        p = hg.u_residual(g, f, x, y, u, batch, batch)
+        return omega, mu, p
+
+    voracles = jax.vmap(oracles)
+
+    def init(key):
+        p = model.init(key)
+        x, y = _bcast(p["body"], M), _bcast(p["head"], M)
+        u = _bcast(tree_zeros_like(p["head"]), M)
+        return FedBiOAccTrainState(
+            x, y, u, tree_zeros_like(y), tree_zeros_like(x), tree_zeros_like(u),
+            jnp.zeros((), jnp.int32))
+
+    def train_step(state: FedBiOAccTrainState, batch):
+        t = state.step
+        a = _alpha(cfg, t)
+        decay = 1.0 - cfg.c_nu * a * a     # shared c for the fused path
+        # 1) old-iterate oracle FIRST (frees the old body afterwards)
+        o_old, m_old, p_old = voracles(state.x, state.y, state.u, batch)
+        # 2) partial momentum: m ← (1-cα²)(m − o_old)
+        omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
+                             state.omega, o_old)
+        nu = jax.tree.map(lambda m, o: decay * (m - o), state.nu, m_old)
+        q = jax.tree.map(lambda m, o: (1.0 - cfg.c_u * a * a) * (m - o),
+                         state.q, p_old)
+        # 3) variable update with the *entering* momenta (Alg. 2 line 4)
+        x = jax.tree.map(lambda v, m: v - (cfg.lr_x * a * m).astype(v.dtype),
+                         state.x, state.nu)
+        y = jax.tree.map(lambda v, m: v - (cfg.lr_y * a * m).astype(v.dtype),
+                         state.y, state.omega)
+        u = jax.tree.map(lambda v, m: v - (cfg.lr_u * a * m).astype(v.dtype),
+                         state.u, state.q)
+        x, y, u = _comm(cfg, t, x), _comm(cfg, t, y), _comm(cfg, t, u)
+        # 4) new-iterate oracle, same batch (STORM correction)
+        o_new, m_new, p_new = voracles(x, y, u, batch)
+        omega = jax.tree.map(jnp.add, omega, o_new)
+        nu = jax.tree.map(jnp.add, nu, m_new)
+        q = jax.tree.map(jnp.add, q, p_new)
+        omega = _comm(cfg, t, omega)
+        nu = _comm(cfg, t, nu)
+        q = _comm(cfg, t, q)
+        new = FedBiOAccTrainState(x, y, u, omega, nu, q, t + 1)
+        return new, {"step": new.step}
+
+    return init, train_step
+
+
+# ---------------------------------------------------------------------------
+# FedBiO with local lower level (Algorithm 3) at model scale — Eq. (5):
+# per-client PRIVATE heads (personalisation); only the body is averaged.
+# ---------------------------------------------------------------------------
+
+def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
+                                 n_micro: int = 1, remat: bool = True,
+                                 use_flash: bool = False,
+                                 use_lru_kernel: bool = False):
+    """Each client solves its own lower problem y^(m) (its private head); the
+    unbiased local hyper-gradient is estimated with the truncated Neumann
+    series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated."""
+    f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
+                              remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+    M = cfg.num_clients
+
+    def init(key):
+        keys = jax.random.split(key, M + 1)
+        p = model.init(keys[0])
+        # heads start from per-client inits (they are never synchronised)
+        heads = jax.tree.map(
+            lambda *vs: jnp.stack(vs),
+            *[model.init(k)["head"] for k in keys[1:]])
+        return FedBiOTrainState(_bcast(p["body"], M), heads,
+                                _bcast(tree_zeros_like(p["head"]), M),
+                                jnp.zeros((), jnp.int32))
+
+    def local(x, y, batch):
+        omega = hg.grad_y(g, x, y, batch)
+        nu = hg.neumann_hypergrad(g, f, x, y, batch, batch,
+                                  cfg.neumann_q, cfg.neumann_tau)
+        y_new = jax.tree.map(lambda v, o: v - cfg.lr_y * o.astype(v.dtype), y, omega)
+        x_new = jax.tree.map(lambda v, o: v - cfg.lr_x * o.astype(v.dtype), x, nu)
+        return x_new, y_new
+
+    vlocal = jax.vmap(local)
+
+    def train_step(state: FedBiOTrainState, batch):
+        x, y = vlocal(state.x, state.y, batch)
+        is_comm = (state.step + 1) % cfg.local_steps == 0
+        x = _cond_mean(is_comm, x)             # ONLY the body is averaged
+        new = FedBiOTrainState(x, y, state.u, state.step + 1)
+        return new, {"step": new.step}
+
+    return init, train_step
+
+
+# ---------------------------------------------------------------------------
+# FedBiOAcc with local lower level (Algorithm 4) at model scale
+# ---------------------------------------------------------------------------
+
+class FedBiOAccLocalTrainState(NamedTuple):
+    x: Any
+    y: Any               # private per-client heads
+    omega: Any           # y-momentum (private)
+    nu: Any              # x-momentum (averaged with x)
+    step: jnp.ndarray
+
+
+def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
+                                    n_micro: int = 1, remat: bool = True,
+                                    use_flash: bool = False,
+                                    use_lru_kernel: bool = False):
+    """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated."""
+    f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
+                              remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+    M = cfg.num_clients
+
+    def oracles(x, y, batch):
+        omega = hg.grad_y(g, x, y, batch)
+        nu = hg.neumann_hypergrad(g, f, x, y, batch, batch,
+                                  cfg.neumann_q, cfg.neumann_tau)
+        return omega, nu
+
+    voracles = jax.vmap(oracles)
+
+    def init(key):
+        keys = jax.random.split(key, M + 1)
+        p = model.init(keys[0])
+        heads = jax.tree.map(
+            lambda *vs: jnp.stack(vs),
+            *[model.init(k)["head"] for k in keys[1:]])
+        x = _bcast(p["body"], M)
+        return FedBiOAccLocalTrainState(
+            x, heads, tree_zeros_like(heads), tree_zeros_like(x),
+            jnp.zeros((), jnp.int32))
+
+    def train_step(state: FedBiOAccLocalTrainState, batch):
+        t = state.step
+        a = _alpha(cfg, t)
+        o_old, n_old = voracles(state.x, state.y, batch)
+        omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
+                             state.omega, o_old)
+        nu = jax.tree.map(lambda m, o: (1.0 - cfg.c_nu * a * a) * (m - o),
+                          state.nu, n_old)
+        x = jax.tree.map(lambda v, m: v - (cfg.lr_x * a * m).astype(v.dtype),
+                         state.x, state.nu)
+        y = jax.tree.map(lambda v, m: v - (cfg.lr_y * a * m).astype(v.dtype),
+                         state.y, state.omega)
+        is_comm = (t + 1) % cfg.local_steps == 0
+        x = _cond_mean(is_comm, x)              # x averaged, y private
+        o_new, n_new = voracles(x, y, batch)
+        omega = jax.tree.map(jnp.add, omega, o_new)
+        nu = jax.tree.map(jnp.add, nu, n_new)
+        nu = _cond_mean(is_comm, nu)            # ν averaged too (Alg. 4 l.14)
+        new = FedBiOAccLocalTrainState(x, y, omega, nu, t + 1)
+        return new, {"step": new.step}
+
+    return init, train_step
+
+
+# ---------------------------------------------------------------------------
+# FedAvg (single-level local-SGD baseline substrate)
+# ---------------------------------------------------------------------------
+
+def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
+                           n_micro: int = 1, remat: bool = True,
+                           momentum: float = 0.9, use_flash: bool = False,
+                           use_lru_kernel: bool = False):
+    from repro.core.model_problem import _microbatch_mean
+
+    def loss_fn(params, batch):
+        def one(mb):
+            l, _ = model.loss(params, mb, remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+            return l.astype(jnp.float32)
+        return _microbatch_mean(one, batch, n_micro)
+
+    M = cfg.num_clients
+
+    def init(key):
+        p = model.init(key)
+        return FedAvgTrainState(_bcast(p, M), _bcast(tree_zeros_like(p), M),
+                                jnp.zeros((), jnp.int32))
+
+    vgrad = jax.vmap(jax.grad(loss_fn))
+
+    def train_step(state: FedAvgTrainState, batch):
+        grads = vgrad(state.params, batch["train"])
+        mom = jax.tree.map(lambda m, gr: momentum * m + gr.astype(m.dtype),
+                           state.mom, grads)
+        params = jax.tree.map(lambda p, m: p - (cfg.lr_x * m).astype(p.dtype),
+                              state.params, mom)
+        is_comm = (state.step + 1) % cfg.local_steps == 0
+        params = _cond_mean(is_comm, params)
+        mom = _cond_mean(is_comm, mom)
+        new = FedAvgTrainState(params, mom, state.step + 1)
+        return new, {"step": new.step}
+
+    return init, train_step

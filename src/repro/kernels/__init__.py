@@ -1,0 +1,8 @@
+# TPU Pallas kernels for the compute hot-spots (DESIGN.md §6):
+#   storm — fused STORM variance-reduction + SGD update (HBM-bandwidth bound)
+#   flash — block-wise causal/sliding-window attention (VMEM-tiled)
+#   lru   — RG-LRU gated linear recurrence scan (time-tiled, state in VMEM)
+# Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with padding/reshape logic) and ref.py (pure-jnp oracle used by the
+# allclose test sweeps). Validated with interpret=True on CPU; TPU is the
+# compilation target.

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the windowed flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float = None):
+    """q, k, v: [BH, S, D] — dense masked attention in fp32."""
+    BH, S, D = q.shape
+    kv_len = k.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(kv_len)[None, :]
+    ok = jnp.ones((S, kv_len), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window and window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

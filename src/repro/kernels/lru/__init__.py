@@ -1,0 +1,1 @@
+from repro.kernels.lru.ops import lru_scan  # noqa: F401

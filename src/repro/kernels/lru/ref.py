@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the LRU scan kernel (associative-scan based)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def lru_scan_ref(a, b, h0=None):
+    """h_t = a_t·h_{t−1} + b_t along axis 1; a, b: [B, S, C]."""
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h

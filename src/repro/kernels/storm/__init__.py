@@ -1,0 +1,1 @@
+from repro.kernels.storm.ops import storm_update  # noqa: F401

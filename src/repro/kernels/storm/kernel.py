@@ -1,0 +1,65 @@
+"""Fused STORM momentum + SGD update — Pallas TPU kernel.
+
+FedBiOAcc triples the elementwise optimizer traffic (three momentum sequences
+over the full parameter tree, each needing two oracle values). Unfused, the
+update chain
+
+    p_new = p − lr·m                          (variable step, Alg. 2 line 4)
+    m_new = g_new + decay·(m − g_old)         (STORM correction, lines 10-12)
+
+reads p, m, g_new, g_old and writes two intermediates plus two outputs — on
+TPU this is purely HBM-bandwidth bound. The kernel streams all four inputs
+through VMEM once and writes the two outputs: 6 HBM transfers vs 10 for the
+naive chain (XLA usually fuses some of it; the kernel makes the floor
+explicit and is the §Perf "memory term" optimization for the train step).
+
+Layout: inputs are flattened to [N] and tiled as (BLOCK,) VMEM blocks on a 1D
+grid. Scalars (lr, decay) arrive via scalar prefetch (SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 64 * 1024   # elements per VMEM tile (bf16: 128 KiB/input, 4 inputs
+                    # + 2 outputs ≈ 768 KiB of VMEM — comfortably under 16 MiB)
+
+
+def _storm_kernel(scal_ref, p_ref, m_ref, gnew_ref, gold_ref,
+                  pout_ref, mout_ref):
+    lr = scal_ref[0]
+    decay = scal_ref[1]
+    p = p_ref[...]
+    m = m_ref[...].astype(jnp.float32)
+    g_new = gnew_ref[...].astype(jnp.float32)
+    g_old = gold_ref[...].astype(jnp.float32)
+    # variable step with the *entering* momentum (Alg. 2 ordering)
+    pout_ref[...] = (p.astype(jnp.float32) - lr * m).astype(p_ref.dtype)
+    mout_ref[...] = (g_new + decay * (m - g_old)).astype(mout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def storm_update_flat(p, m, g_new, g_old, lr, decay, *, interpret: bool = True):
+    """p, m, g_new, g_old: flat [N] arrays (N a multiple of BLOCK)."""
+    n = p.shape[0]
+    assert n % BLOCK == 0, n
+    grid = (n // BLOCK,)
+    scal = jnp.stack([jnp.asarray(lr, jnp.float32),
+                      jnp.asarray(decay, jnp.float32)])
+    block = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _storm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # (lr, decay) scalars
+            block, block, block, block,
+        ],
+        out_specs=[block, block],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=interpret,
+    )(scal, p, m, g_new, g_old)

@@ -1,0 +1,65 @@
+"""jit'd pytree wrapper around the fused STORM kernel.
+
+Handles arbitrary pytrees: leaves are flattened, concatenated per-dtype,
+padded to the kernel tile size, updated in one fused pass and scattered back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.storm.kernel import BLOCK, storm_update_flat
+
+
+def _flatten_group(leaves):
+    flat = [l.reshape(-1) for l in leaves]
+    sizes = [f.shape[0] for f in flat]
+    cat = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+    pad = (-cat.shape[0]) % BLOCK
+    if pad:
+        cat = jnp.pad(cat, (0, pad))
+    return cat, sizes, pad
+
+
+def _unflatten_group(cat, sizes, pad, leaves):
+    if pad:
+        cat = cat[:-pad] if pad else cat
+    out, off = [], 0
+    for l, s in zip(leaves, sizes):
+        out.append(cat[off:off + s].reshape(l.shape))
+        off += s
+    return out
+
+
+def storm_update(params, mom, g_new, g_old, lr, decay, *, interpret: bool = True):
+    """Fused p_new = p − lr·m ; m_new = g_new + decay·(m − g_old) over pytrees.
+
+    Leaves are grouped by dtype-pair and processed in single fused streams.
+    Returns (params_new, mom_new) with the input structures.
+    """
+    p_leaves, treedef = jax.tree.flatten(params)
+    m_leaves = treedef.flatten_up_to(mom)
+    gn_leaves = treedef.flatten_up_to(g_new)
+    go_leaves = treedef.flatten_up_to(g_old)
+
+    groups = {}
+    for i, (p, m) in enumerate(zip(p_leaves, m_leaves)):
+        groups.setdefault((p.dtype, m.dtype), []).append(i)
+
+    p_out = [None] * len(p_leaves)
+    m_out = [None] * len(m_leaves)
+    for (_, _), idxs in groups.items():
+        pc, sizes, pad = _flatten_group([p_leaves[i] for i in idxs])
+        mc, _, _ = _flatten_group([m_leaves[i] for i in idxs])
+        gnc, _, _ = _flatten_group([jnp.asarray(gn_leaves[i], mc.dtype)
+                                    for i in idxs])
+        goc, _, _ = _flatten_group([jnp.asarray(go_leaves[i], mc.dtype)
+                                    for i in idxs])
+        pn, mn = storm_update_flat(pc, mc, gnc, goc, lr, decay,
+                                   interpret=interpret)
+        pn_leaves = _unflatten_group(pn, sizes, pad, [p_leaves[i] for i in idxs])
+        mn_leaves = _unflatten_group(mn, sizes, pad, [m_leaves[i] for i in idxs])
+        for j, i in enumerate(idxs):
+            p_out[i] = pn_leaves[j]
+            m_out[i] = mn_leaves[j]
+    return treedef.unflatten(p_out), treedef.unflatten(m_out)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused STORM update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def storm_update_ref(p, m, g_new, g_old, lr, decay):
+    """Elementwise reference (fp32 accumulation, matching the kernel):
+
+        p_new = p − lr·m
+        m_new = g_new + decay·(m − g_old)
+    """
+    m32 = m.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * m32).astype(p.dtype)
+    m_new = (g_new.astype(jnp.float32)
+             + decay * (m32 - g_old.astype(jnp.float32))).astype(m.dtype)
+    return p_new, m_new

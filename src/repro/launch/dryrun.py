@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape) on the
+# production mesh with 512 placeholder host devices, and extract the roofline
+# inputs (HLO FLOPs / bytes from cost_analysis, collective bytes parsed from
+# the compiled HLO, per-device memory from memory_analysis).
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results.json
+#
+# The env override above must precede ANY other import (jax locks the device
+# count on first initialisation).
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax                    # noqa: E402
+import jax.numpy as jnp       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import (INPUT_SHAPES, FederatedConfig, MeshConfig)  # noqa: E402
+from repro.configs import ARCHS, get_config                 # noqa: E402
+from repro.launch import archspec                           # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models import build_model                        # noqa: E402
+from repro.sharding import rules                            # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in the compiled HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        m = re.search(r"=\s*(.*?)\s+(%?)([a-z0-9\-]+)", line)
+        if not m:
+            continue
+        op, op_m = None, None
+        for c in _COLLECTIVES:
+            # match op name incl. async variants (all-reduce-start)
+            m = re.search(rf"\s{c}(-start)?\(", line)
+            if m:
+                op, op_m = c, m
+                break
+        if op is None:
+            continue
+        # result signature = everything between "=" and the op name
+        # (handles tuple results like "= (bf16[..], bf16[..]) all-to-all(...)")
+        eq = line.index(" = ")
+        sig = line[eq + 3:op_m.start()]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(sig):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+                optimized: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this combo (no
+    device allocation)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    spec = archspec.deploy_spec(arch, optimized)
+    S, B = shape.seq_len, shape.global_batch
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+
+    def lm_batch(lead):
+        b = {"tokens": jax.ShapeDtypeStruct(lead + (S,), i32),
+             "labels": jax.ShapeDtypeStruct(lead + (S,), i32)}
+        if cfg.family == "vlm":
+            b["patches"] = jax.ShapeDtypeStruct(
+                lead + (cfg.num_patches, cfg.frontend_dim), bf16)
+        if cfg.family == "audio":
+            b = {"frames": jax.ShapeDtypeStruct(lead + (S, cfg.frontend_dim), bf16),
+                 "labels": jax.ShapeDtypeStruct(lead + (S,), i32)}
+        return b
+
+    if shape.kind == "train":
+        M = archspec.num_clients(arch, mesh_cfg, optimized)
+        per = B // M
+        one = lm_batch((M, per))
+        return {"train": one, "val": one}
+    if shape.kind == "prefill":
+        return lm_batch((B,))
+    # decode: one token + position
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+# ---------------------------------------------------------------------------
+# builders per mode
+# ---------------------------------------------------------------------------
+
+def build_train(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
+                optimized: bool = False):
+    from repro.federation.trainer import (make_fedbio_train_step,
+                                          make_fedbioacc_train_step)
+    cfg = get_config(arch)
+    spec = archspec.deploy_spec(arch, optimized)
+    M = archspec.num_clients(arch, mesh_cfg, optimized)
+    model = build_model(cfg)
+    fed = FederatedConfig(algorithm=spec.algorithm, num_clients=M,
+                          local_steps=4, placement=spec.placement)
+    make = (make_fedbio_train_step if spec.algorithm == "fedbio"
+            else make_fedbioacc_train_step)
+    init, step = make(model, fed, n_micro=spec.n_micro_train, remat=True,
+                      fuse_oracles=spec.fuse_oracles)
+    state_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    batch_shapes = input_specs(arch, shape_name, mesh_cfg, optimized)
+
+    state_spec = rules.state_specs(state_shapes, mesh_cfg, placement=spec.placement)
+    batch_spec = rules.batch_specs(batch_shapes, mesh_cfg, client_axis=True,
+                                   placement=spec.placement)
+    in_sh = (_named(mesh, state_spec), _named(mesh, batch_spec))
+    out_sh = (_named(mesh, state_spec), _named(mesh, jax.tree.map(
+        lambda _: P(), jax.eval_shape(step, state_shapes, batch_shapes)[1])))
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return jitted, (state_shapes, batch_shapes)
+
+
+def build_prefill(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
+    cfg = get_config(arch)
+    spec = archspec.deploy_spec(arch)
+    model = build_model(cfg)
+    S = INPUT_SHAPES[shape_name].seq_len
+    batch_shapes = input_specs(arch, shape_name, mesh_cfg)
+
+    if cfg.family == "audio":
+        def fn(params, batch):
+            logits, _ = model.forward(params, batch, remat=True)
+            return logits[:, -1, :]
+    else:
+        def fn(params, batch):
+            last, caches = model.prefill(params, batch, cache_len=S)
+            return last, caches
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_spec = rules.param_specs(params_shapes, mesh_cfg, placement="client_sharded",
+                               client_axis=False, fsdp=spec.serve_fsdp)
+    b_spec = rules.batch_specs(batch_shapes, mesh_cfg, client_axis=False)
+    jitted = jax.jit(fn, in_shardings=(_named(mesh, p_spec), _named(mesh, b_spec)))
+    return jitted, (params_shapes, batch_shapes)
+
+
+def build_decode(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
+    cfg = get_config(arch)
+    spec = archspec.deploy_spec(arch)
+    model = build_model(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    S, B = shape.seq_len, shape.global_batch
+    cache_len = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+
+    def fn(params, caches, tokens, pos):
+        from repro.sharding.hints import sharding_hints
+        with sharding_hints():
+            return model.decode_step(params, caches, tokens, pos)
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, cache_len))
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_spec = rules.param_specs(params_shapes, mesh_cfg, placement="client_sharded",
+                               client_axis=False, fsdp=spec.serve_fsdp)
+    c_spec = rules.cache_specs(cache_shapes, mesh_cfg)
+    jitted = jax.jit(fn, in_shardings=(
+        _named(mesh, p_spec), _named(mesh, c_spec),
+        NamedSharding(mesh, P()), NamedSharding(mesh, P())),
+        donate_argnums=(1,))
+    return jitted, (params_shapes, cache_shapes, tok, pos)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            keep_hlo: bool = False, optimized: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    ok, reason = archspec.shape_applicable(arch, cfg, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "optimized": optimized}
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+
+    mesh_cfg = MeshConfig(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = INPUT_SHAPES[shape_name].kind
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            jitted, args = build_train(arch, shape_name, mesh, mesh_cfg,
+                                       optimized=optimized)
+        elif kind == "prefill":
+            jitted, args = build_prefill(arch, shape_name, mesh, mesh_cfg)
+        else:
+            jitted, args = build_decode(arch, shape_name, mesh, mesh_cfg)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # --- memory analysis ---
+    mem: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:            # pragma: no cover
+        mem["error"] = str(e)
+
+    # --- cost analysis ---
+    cost: Dict[str, float] = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "bytes accessed output", "optimal_seconds"):
+            if k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:            # pragma: no cover
+        cost["error"] = str(e)
+
+    # --- collective schedule ---
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec.update(status="OK", kind=kind, lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1), memory=mem, cost=cost,
+               collectives=coll, hlo_bytes=len(hlo))
+    if keep_hlo:
+        rec["hlo"] = hlo
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf-optimized deployment (fused oracles, "
+                         "client_pure placement for small archs)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) on the chosen mesh")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for arch, shape_name, _, _ in archspec.all_combos():
+            combos.append((arch, shape_name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape_name in combos:
+        print(f"=== {arch} × {shape_name} (multi_pod={args.multi_pod}) ===",
+              flush=True)
+        try:
+            rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                          optimized=args.optimized)
+        except Exception as e:        # record failures — they are bugs
+            rec = {"arch": arch, "shape": shape_name,
+                   "multi_pod": args.multi_pod, "optimized": args.optimized,
+                   "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}"}
+        print(json.dumps({k: v for k, v in rec.items() if k != "hlo"},
+                         indent=1), flush=True)
+        records.append(rec)
+        if args.out:
+            with open(args.out, "a") as fh:
+                fh.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(r["status"] == "OK" for r in records)
+    n_skip = sum(r["status"] == "SKIP" for r in records)
+    n_fail = sum(r["status"] == "FAIL" for r in records)
+    print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

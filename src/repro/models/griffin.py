@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The block is: RMSNorm -> two linear branches (recurrent + gate); the recurrent
+branch passes through a short causal conv then the RG-LRU gated linear
+recurrence; output = W_out(lru_out * GeLU(gate_branch)).
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(x_t W_a + b_a)           # recurrence gate
+    i_t = sigmoid(x_t W_x + b_x)           # input gate
+    log a_t = -c * softplus(Lambda) * r_t  # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses an associative scan over time (O(log T) depth) or the
+Pallas time-tiled scan kernel (`repro.kernels.lru`); decode is a single fused
+update carrying ``h``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+_C = 8.0   # Griffin's fixed recurrence sharpness constant
+
+
+def init_rec(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    w = cfg.resolved_lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "in_x": dense_init(ks[0], (d, w), dtype),
+        "in_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(ks[3], (w, w), dtype),
+        "ba": jnp.zeros((w,), dtype),
+        "wx": dense_init(ks[4], (w, w), dtype),
+        "bx": jnp.zeros((w,), dtype),
+        # Lambda init so that a = exp(-c*softplus(L)) spans (0.9, 0.999)
+        "Lambda": jnp.linspace(-2.0, 1.0, w).astype(jnp.float32),
+        "out": dense_init(ks[5], (w, d), dtype, scale=1.0 / math.sqrt(w)),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rg_lru_gates(params, x):
+    """Compute per-step (log_a, beta) for h_t = a_t h_{t-1} + beta_t."""
+    r = jax.nn.sigmoid((x @ params["wa"]).astype(jnp.float32) + params["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["wx"]).astype(jnp.float32) + params["bx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["Lambda"]) * r            # [B,S,W]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * x.astype(jnp.float32))
+    return a, beta
+
+
+def linear_scan(a, b, h0=None, use_kernel: bool = False):
+    """h_t = a_t * h_{t-1} + b_t along axis 1. a, b: [B, S, W] (fp32)."""
+    if use_kernel:
+        from repro.kernels.lru import ops as lru_ops
+        return lru_ops.lru_scan(a, b, h0)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rec(params, x, cfg: ModelConfig, cache=None, use_kernel: bool = False):
+    """Griffin recurrent block. cache = {h:[B,W], conv:[B, Wc-1, W]} for decode."""
+    B, S, _ = x.shape
+    Wc = params["conv_w"].shape[0]
+    h_in = rmsnorm(params["ln"], x, cfg.norm_eps)
+    xr = h_in @ params["in_x"]
+    gate = h_in @ params["in_gate"]
+
+    if cache is None:
+        xr_pre = xr                                                # pre-conv inputs
+        xr = _causal_conv(xr, params["conv_w"], params["conv_b"])
+        a, beta = rg_lru_gates(params, xr)
+        h = linear_scan(a, beta, use_kernel=use_kernel)            # [B,S,W] fp32
+        h_last = h[:, -1, :]
+        conv_tail = xr_pre[:, max(S - (Wc - 1), 0):, :]
+        if S < Wc - 1:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (Wc - 1 - S, 0), (0, 0)))
+        new_cache = {"h": h_last, "conv": conv_tail.astype(x.dtype)}
+    else:
+        conv_buf = jnp.concatenate([cache["conv"], xr.astype(x.dtype)], axis=1)
+        xr = jnp.einsum("bwc,wc->bc", conv_buf, params["conv_w"]) + params["conv_b"]
+        xr = xr[:, None, :]
+        a, beta = rg_lru_gates(params, xr)
+        h_new = a[:, 0] * cache["h"] + beta[:, 0]
+        h = h_new[:, None, :]
+        new_cache = {"h": h_new, "conv": conv_buf[:, 1:, :]}
+
+    out = (h.astype(x.dtype) * jax.nn.gelu(gate, approximate=True)) @ params["out"]
+    return out, new_cache
+
+
+def init_rec_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.resolved_lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

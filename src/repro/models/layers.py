@@ -1,0 +1,300 @@
+"""Shared neural building blocks (pure-JAX, pytree params, functional apply).
+
+Conventions
+-----------
+* Params are nested dicts of ``jnp.ndarray``; per-layer stacks carry a leading
+  repetition axis and are consumed with ``lax.scan`` (keeps HLO small for
+  126-layer models and compiles fast under 512-way SPMD).
+* Compute dtype follows the input; normalisation / softmax statistics in fp32.
+* ``cache`` pytrees hold decode state (KV ring buffers / recurrent states).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = 1.0 / (theta ** (freq / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv          # [..., S, half]
+    ang = ang[..., None, :]                                       # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window / softcap / bidirectional)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, hq * hd), dtype),
+        "wk": dense_init(k2, (d, hkv * hd), dtype),
+        "wv": dense_init(k3, (d, hkv * hd), dtype),
+        "wo": dense_init(k4, (hq * hd, d), dtype, scale=1.0 / math.sqrt(hq * hd)),
+    }
+
+
+def _softcap(x, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """Additive mask bias [..., Sq, Sk] in fp32."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        ok &= diff >= 0
+    if window and window > 0:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention(params, x, cfg: ModelConfig, *, window: int, positions,
+              kv_cache=None, cache_index=None, use_flash: bool = False):
+    """Self attention.
+
+    Training / prefill: ``kv_cache is None`` -> full sequence, returns (out, (k, v)).
+    Decode: ``kv_cache = (k, v)`` ring/linear buffers of length S_cache and
+    ``cache_index`` scalar -> single-token query, returns (out, (k, v) updated).
+    """
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rep = hq // hkv
+
+    q = (x @ params["wq"]).reshape(B, S, hq, hd)
+    k = (x @ params["wk"]).reshape(B, S, hkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+
+    if kv_cache is None:
+        if use_flash:
+            from repro.kernels.flash import ops as flash_ops
+            kf = jnp.repeat(k, rep, axis=2)
+            vf = jnp.repeat(v, rep, axis=2)
+            out = flash_ops.flash_attention(
+                q, kf, vf, causal=cfg.causal, window=window,
+                softcap=cfg.attn_softcap, scale=scale)
+        else:
+            # grouped GQA einsum: never materialises the rep-expanded kv
+            qg = q.reshape(B, S, hkv, rep, hd)
+            logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32) * scale
+            logits = _softcap(logits, cfg.attn_softcap)
+            bias = _mask_bias(positions, positions, causal=cfg.causal, window=window)
+            logits = logits + bias[:, None, None, :, :]
+            probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+            out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v).reshape(B, S, hq, hd)
+        out = out.reshape(B, S, hq * hd) @ params["wo"]
+        return out, (k, v)
+
+    # ----- decode: single token, update cache -----
+    # ``cache_index`` may be a scalar (uniform position) or a [B] vector
+    # (continuous batching: each request at its own position).
+    from repro.sharding.hints import hint
+    ck, cv = kv_cache                       # [B, S_cache, hkv, hd]
+    S_cache = ck.shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(cache_index), (B,))
+    slot = pos_b % S_cache                  # ring-buffer slot per request
+    barange = jnp.arange(B)
+    ck = ck.at[barange, slot].set(k[:, 0])
+    cv = cv.at[barange, slot].set(v[:, 0])
+    # keep the cache B×S sharded; replicate the (tiny) q instead — forces the
+    # partial-softmax plan rather than an all-gather of the cache (§Perf)
+    ck = hint(ck, "data", "model", None, None)
+    cv = hint(cv, "data", "model", None, None)
+    qg = hint(q.reshape(B, S, hkv, rep, hd), "data", None, None, None, None)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, ck).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.attn_softcap)
+    # true position held in each ring slot: newest token sits at `slot`
+    slots = jnp.arange(S_cache)
+    k_pos = pos_b[:, None] - ((slot[:, None] - slots[None, :]) % S_cache)
+    valid = (k_pos >= 0) & (k_pos <= pos_b[:, None])
+    if window and window > 0:
+        valid &= k_pos > (pos_b[:, None] - window)
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)   # [B, S_cache]
+    logits = logits + bias[:, None, None, None, :]
+    logits = hint(logits, "data", None, None, None, "model")
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, cv).reshape(B, S, hq, hd)
+    out = hint(out, "data", None, None, None)
+    out = out.reshape(B, S, hq * hd) @ params["wo"]
+    return out, (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU / plain GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, (d_model, d_ff), dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype, scale=1.0 / math.sqrt(d_ff)),
+    }
+    if gated:
+        p["wg"] = dense_init(k2, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params, x, activation: str = "silu"):
+    h = x @ params["wi"]
+    if "wg" in params:
+        g = x @ params["wg"]
+        act = jax.nn.gelu(g, approximate=True) if activation == "gelu" else jax.nn.silu(g)
+        h = act * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (dense dispatch — TPU-friendly, capacity-free)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    d, dff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, E), dtype, scale=0.02),
+        "wi": dense_init(k1, (E, d, dff), dtype),
+        "wg": dense_init(k2, (E, d, dff), dtype),
+        "wo": dense_init(k3, (E, dff, d), dtype, scale=1.0 / math.sqrt(dff)),
+    }
+
+
+MOE_DENSE_TOKEN_LIMIT = 8192   # below this token count use the exact dense path
+
+
+def moe_mlp(params, x, cfg: ModelConfig, capacity_factor: float = 1.25):
+    """Top-k routed expert MLP.
+
+    Two TPU-friendly paths, selected statically by token count:
+
+    * **dense combine** (small T, smoke tests): every expert runs on every
+      token, weighted combine — exact, no drops, O(T·E·d_ff) FLOPs.
+    * **capacity dispatch** (production shapes): tokens are scattered into
+      per-expert buffers ``[E, C, d]`` with ``C = T·k/E·cf``; overflow drops
+      (standard Switch/GShard semantics). Expert matmuls are batched einsums
+      with the expert axis model-sharded; under SPMD the scatter/gather lower
+      to all-to-all traffic, which is what the roofline should see.
+
+    Returns (out, aux) where aux is the Switch load-balancing loss.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    logits = (x @ params["router"]).astype(jnp.float32)            # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = lax.top_k(probs, k)                           # [B,S,k]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=(0, 1))                              # [E]
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=-2),
+                  axis=(0, 1)) / k
+    aux = E * jnp.sum(me * ce)
+
+    if T <= MOE_DENSE_TOKEN_LIMIT:
+        combine = jnp.sum(
+            jax.nn.one_hot(top_idx, E, dtype=x.dtype) * top_w[..., None].astype(x.dtype),
+            axis=-2)                                               # [B,S,E]
+        h = jnp.einsum("bsd,edf->bsef", x, params["wi"])
+        g = jnp.einsum("bsd,edf->bsef", x, params["wg"])
+        h = jax.nn.silu(g) * h
+        y = jnp.einsum("bsef,efd->bsed", h, params["wo"])
+        out = jnp.einsum("bsed,bse->bsd", y, combine)
+        return out, aux
+
+    # ---- capacity-based dispatch ----
+    C = int(T * k // E * capacity_factor) or 1
+    xf = x.reshape(T, d)
+    e_idx = top_idx.reshape(T, k)                                  # expert per slot
+    w = top_w.reshape(T, k).astype(x.dtype)
+    # position of each (token, slot) within its expert, in token order
+    onehot = jax.nn.one_hot(e_idx.reshape(T * k), E, dtype=jnp.int32)   # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1                  # [T*k, E]
+    pos = jnp.sum(pos * onehot, axis=-1).reshape(T, k)             # [T, k]
+    keep = (pos >= 0) & (pos < C)
+    pos_c = jnp.where(keep, pos, 0)
+    e_c = jnp.where(keep, e_idx, 0)
+    contrib = xf[:, None, :] * keep[..., None].astype(x.dtype)     # [T,k,d]
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[e_c.reshape(-1), pos_c.reshape(-1)].add(
+        contrib.reshape(T * k, d))
+    h = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, params["wg"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, params["wo"])
+    gathered = y[e_c.reshape(-1), pos_c.reshape(-1)].reshape(T, k, d)
+    out = jnp.sum(gathered * (w * keep.astype(x.dtype))[..., None], axis=1)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig, dtype):
+    return {"table": embed_init(key, (cfg.vocab_size, cfg.d_model), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(head_params, x):
+    return x @ head_params["w"]
+
+
+def head_init(key, cfg: ModelConfig, dtype):
+    return {"w": dense_init(key, (cfg.d_model, cfg.vocab_size), dtype)}

@@ -1,0 +1,173 @@
+"""Top-level model API.
+
+``build_model(cfg)`` returns a :class:`Model` bundle of pure functions:
+
+* ``init(key)``                        -> params ``{"body": ..., "head": ...}``
+* ``forward(params, batch, ...)``      -> logits ``[B, S_total, V]``
+* ``loss(params, batch, ...)``         -> (scalar, aux dict)
+* ``prefill(params, batch, cache_len)``-> (last_logits, caches)
+* ``decode_step(params, caches, tokens, pos)`` -> (logits, caches)
+* ``init_cache(batch, cache_len)``     -> zeroed cache pytree
+
+The body/head split is the bilevel split used by the FedBiO problems: the
+*upper* variable x is the body, the *lower* variable y is the output head
+(see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import stack as stk
+from repro.models.layers import (dense_init, embed, embedding_init, head_init,
+                                 rmsnorm, rmsnorm_init, _softcap)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(body, batch: Dict[str, Any], cfg: ModelConfig):
+    """Returns (x [B, S_total, d], positions [B, S_total], label_offset)."""
+    if cfg.family == "audio":
+        x = batch["frames"] @ body["frontend_proj"]
+        offset = 0
+    elif cfg.family == "vlm":
+        tok = embed(body["embed"], batch["tokens"])
+        patches = batch["patches"] @ body["patch_proj"]
+        x = jnp.concatenate([patches.astype(tok.dtype), tok], axis=1)
+        offset = patches.shape[1]
+    else:
+        x = embed(body["embed"], batch["tokens"])
+        offset = 0
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return x, positions, offset
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16) -> Model:
+    def init(key):
+        kb, kh, ke, kf = jax.random.split(key, 4)
+        body: Dict[str, Any] = {
+            "stages": stk.init_stack(kb, cfg, dtype),
+            "final_ln": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if cfg.family == "audio":
+            body["frontend_proj"] = dense_init(kf, (cfg.frontend_dim, cfg.d_model), dtype)
+        else:
+            body["embed"] = embedding_init(ke, cfg, dtype)
+            if cfg.family == "vlm":
+                body["patch_proj"] = dense_init(kf, (cfg.frontend_dim, cfg.d_model), dtype)
+        head = head_init(kh, cfg, dtype)
+        return {"body": body, "head": head}
+
+    def _run(params, x, positions, *, caches=None, cache_index=None,
+             remat=False, use_flash=False, use_lru_kernel=False):
+        body, head = params["body"], params["head"]
+        x, new_caches, aux = stk.apply_stack(
+            body["stages"], x, cfg, positions=positions, caches=caches,
+            cache_index=cache_index, remat=remat, use_flash=use_flash,
+            use_lru_kernel=use_lru_kernel)
+        x = rmsnorm(body["final_ln"], x, cfg.norm_eps)
+        logits = x @ head["w"]
+        logits = _softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        return logits, new_caches, aux
+
+    def forward(params, batch, *, remat=False, use_flash=False,
+                use_lru_kernel=False):
+        x, positions, offset = _embed_inputs(params["body"], batch, cfg)
+        logits, _, aux = _run(params, x, positions, remat=remat,
+                              use_flash=use_flash, use_lru_kernel=use_lru_kernel)
+        return logits[:, offset:, :], aux
+
+    def loss(params, batch, *, remat=False, use_flash=False,
+             use_lru_kernel=False, aux_weight: float = 0.01):
+        """Masked CE: positions with ``labels < 0`` are ignored (padding /
+        prompt-only spans)."""
+        logits, aux = forward(params, batch, remat=remat, use_flash=use_flash,
+                              use_lru_kernel=use_lru_kernel)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        total = ce + aux_weight * aux
+        return total, {"ce": ce, "moe_aux": aux}
+
+    def init_cache(batch_size: int, cache_len: int):
+        return stk.init_cache(cfg, batch_size, cache_len, dtype)
+
+    def prefill(params, batch, cache_len: int, *, use_flash=False,
+                use_lru_kernel=False):
+        x, positions, offset = _embed_inputs(params["body"], batch, cfg)
+        B, S = positions.shape
+        logits, seq_caches, _ = _run(params, x, positions, use_flash=use_flash,
+                                     use_lru_kernel=use_lru_kernel)
+        # convert full-sequence kv into decode ring buffers
+        caches = init_cache(B, cache_len)
+        new = []
+        for (unit, reps), zero_stage, seq_stage in zip(
+                stk.stages_for(cfg), caches, seq_caches):
+            stage_out = {}
+            for i, kind in enumerate(unit):
+                name = f"{i}_{kind}"
+                if kind in ("rec", "ssm"):
+                    stage_out[name] = seq_stage[name]
+                    continue
+                zk, zv = zero_stage[name]
+                sk, sv = seq_stage[name]          # [reps, B, S, hkv, hd]
+                L = zk.shape[2]
+                Lt = min(S, L)
+                tail_k, tail_v = sk[:, :, S - Lt:], sv[:, :, S - Lt:]
+                pad = L - Lt
+                if pad:
+                    tail_k = jnp.pad(tail_k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                    tail_v = jnp.pad(tail_v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                shift = (S - Lt) % L
+                stage_out[name] = (jnp.roll(tail_k, shift, axis=2),
+                                   jnp.roll(tail_v, shift, axis=2))
+            new.append(stage_out)
+        return logits[:, -1, :], new
+
+    def decode_step(params, caches, tokens, pos, *, use_lru_kernel=False):
+        """tokens: [B, 1] int32; pos: scalar int32 or [B] vector of 0-based
+        next positions (continuous batching)."""
+        body = params["body"]
+        if cfg.family == "audio":
+            raise ValueError("encoder-only model has no decode step")
+        x = embed(body["embed"], tokens)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        B = x.shape[0]
+        pos = jnp.asarray(pos)
+        positions = (jnp.broadcast_to(pos[None, None], (B, 1)) if pos.ndim == 0
+                     else pos[:, None])
+        logits, new_caches, _ = _run(params, x, positions, caches=caches,
+                                     cache_index=pos,
+                                     use_lru_kernel=use_lru_kernel)
+        return logits[:, 0, :], new_caches
+
+    return Model(cfg=cfg, init=init, forward=forward, loss=loss,
+                 prefill=prefill, decode_step=decode_step,
+                 init_cache=init_cache)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD — state-space duality) mixer block, chunked-scan formulation.
+
+Follows the minimal SSD reference (Dao & Gu, 2024, arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the output is a
+masked quadratic (attention-like) form, across chunks a linear recurrence on
+the per-chunk states. The cross-chunk scan is a `lax.scan`; everything else is
+einsums that map directly onto the MXU.
+
+Decode maintains the O(1) recurrent state ``h: [B, H, P, N]`` plus a causal
+conv ring of the last (conv_width-1) inputs — this is what makes `long_500k`
+decoding feasible for the ssm family.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N           # x, B, C share the conv (ngroups=1)
+    return d_inner, N, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, N, conv_dim = _dims(cfg)
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * N + H   # z, x, B, C, dt
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_ln": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype, scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, N, _ = _dims(cfg)
+    H = cfg.ssm_heads
+    z, xs, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time. xBC: [B, L, C]; w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(W):
+        out = out + pad[:, i:i + xBC.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """a: [..., Q] -> lower-triangular pairwise segment sums [..., Q, Q]."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD forward.
+
+    x:  [B, L, H, P]   dt: [B, L, H]   A: [H] (negative)
+    Bm: [B, L, N]      Cm: [B, L, N]
+    Returns (y [B, L, H, P], h_final [B, H, P, N]).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    Lp = ((L + Q - 1) // Q) * Q
+    if Lp != L:
+        # zero-pad: dt==0 -> unit decay, zero input; state and outputs unchanged
+        pad = Lp - L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    L_orig, L = L, Lp
+    C = L // Q
+    xdt = x * dt[..., None]                                   # input weighting
+    a = (dt * A).astype(jnp.float32)                          # log decay per step
+
+    xc = xdt.reshape(Bsz, C, Q, H, P)
+    ac = a.reshape(Bsz, C, Q, H).transpose(0, 3, 1, 2)        # [B,H,C,Q]
+    Bc = Bm.reshape(Bsz, C, Q, N)
+    Cc = Cm.reshape(Bsz, C, Q, N)
+
+    A_cumsum = jnp.cumsum(ac, axis=-1)                        # [B,H,C,Q]
+    # 1) intra-chunk (quadratic) term
+    Lmat = jnp.exp(_segsum(ac))                               # [B,H,C,Q,Q]
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, Lmat.astype(x.dtype), xc)
+    # 2) per-chunk final states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)     # [B,H,C,Q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bc, decay_states.astype(x.dtype), xc)  # [B,C,H,P,N]
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cumsum[..., -1])                  # [B,H,C]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+
+    def step(h, inp):
+        st, dec = inp                                         # st: [B,H,P,N], dec: [B,H]
+        h_new = h * dec[..., None, None].astype(x.dtype) + st
+        return h_new, h
+
+    (h_final, prev_states) = lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # [B,C,H,P,N]
+    # 4) inter-chunk output contribution
+    state_decay = jnp.exp(A_cumsum)                           # [B,H,C,Q]
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cc, prev_states, state_decay.astype(x.dtype))
+    y = (Y_diag + Y_off).reshape(Bsz, L, H, P)[:, :L_orig]
+    return y, h_final
+
+
+def apply_ssm(params, x, cfg: ModelConfig, cache=None):
+    """Mamba-2 block. Training/prefill when cache is None (returns new cache
+    holding final recurrent + conv state); decode when cache is given (S==1).
+    """
+    B, S, _ = x.shape
+    d_inner, N, conv_dim = _dims(cfg)
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+
+    h_in = rmsnorm(params["ln"], x, cfg.norm_eps)
+    proj = h_in @ params["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)
+
+    A = -jnp.exp(params["A_log"])                              # [H], negative
+    Wc = params["conv_w"].shape[0]
+
+    if cache is None:
+        conv_out = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        xh = xs.reshape(B, S, H, P)
+        y, h_final = ssd_chunked(xh, dtv.astype(x.dtype), A.astype(x.dtype),
+                                 Bm, Cm, min(cfg.ssm_chunk, S))
+        new_cache = {"h": h_final, "conv": xBC[:, S - (Wc - 1):, :] if S >= Wc - 1
+                     else jnp.pad(xBC, ((0, 0), (Wc - 1 - S, 0), (0, 0)))}
+    else:
+        # decode: S == 1
+        conv_buf = jnp.concatenate([cache["conv"], xBC], axis=1)   # [B, Wc, C]
+        conv_out = jnp.einsum("bwc,wc->bc", conv_buf, params["conv_w"])
+        conv_out = jax.nn.silu(conv_out + params["conv_b"])[:, None, :]
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+        dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # [B,H]
+        xh = xs.reshape(B, H, P)
+        dec = jnp.exp(dtv * A).astype(x.dtype)                     # [B,H]
+        h = cache["h"] * dec[..., None, None]
+        h = h + jnp.einsum("bh,bn,bhp->bhpn", dtv.astype(x.dtype), Bm[:, 0], xh)
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h).reshape(B, 1, H, P)
+        h_final = h
+        new_cache = {"h": h_final, "conv": conv_buf[:, 1:, :]}
+
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xs.reshape(B, S, H, P)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(params["out_ln"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, N, conv_dim = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }

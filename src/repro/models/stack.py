@@ -1,0 +1,196 @@
+"""Generic layer stack.
+
+A model is a sequence of **stages**; each stage repeats a **unit** (a short
+tuple of layer kinds, e.g. ``("local", "attn")`` for gemma2's alternating
+pattern or ``("rec", "rec", "attn")`` for recurrentgemma) ``reps`` times.
+Per-stage parameters are stacked on a leading reps axis and consumed with
+``lax.scan`` — a 126-layer llama lowers to a single scanned block, keeping the
+HLO tiny and SPMD compile times manageable.
+
+Layer kinds:
+    attn   full-context GQA attention + FFN (dense MLP or MoE)
+    local  sliding-window GQA attention + FFN
+    rec    Griffin RG-LRU recurrent block + FFN
+    ssm    Mamba-2 SSD block (self-contained, no FFN)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import griffin, ssm
+from repro.models.layers import (attention, attn_init, mlp, mlp_init, moe_init,
+                                 moe_mlp, rmsnorm, rmsnorm_init)
+
+Stage = Tuple[Tuple[str, ...], int]
+
+
+def stages_for(cfg: ModelConfig) -> List[Stage]:
+    kinds = list(cfg.layer_kinds())
+    if cfg.family == "hybrid":
+        unit: Tuple[str, ...] = ("rec", "rec", "attn")
+    elif cfg.attention_pattern == "local_global":
+        unit = ("local", "attn")
+    else:
+        unit = (kinds[0],)
+    stages: List[Stage] = []
+    i, u = 0, len(unit)
+    full = 0
+    while i + u <= len(kinds) and tuple(kinds[i:i + u]) == unit:
+        full += 1
+        i += u
+    if full:
+        stages.append((unit, full))
+    # remainder: consecutive same-kind runs
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        stages.append(((kinds[i],), j - i))
+        i = j
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype):
+    if kind == "ssm":
+        return {"ssm": ssm.init_ssm(key, cfg, dtype)}
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {}
+    if kind == "rec":
+        p["mix"] = griffin.init_rec(k1, cfg, dtype)
+    else:
+        p["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+        p["mix"] = attn_init(k1, cfg, dtype)
+    p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.num_experts:
+        p["ffn"] = moe_init(k2, cfg, dtype)
+    else:
+        gated = cfg.family != "audio"
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, gated=gated)
+    return p
+
+
+def _init_unit(key, unit: Tuple[str, ...], cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, len(unit))
+    return {f"{i}_{kind}": _init_layer(keys[i], kind, cfg, dtype)
+            for i, kind in enumerate(unit)}
+
+
+def init_stack(key, cfg: ModelConfig, dtype):
+    stages = stages_for(cfg)
+    params = []
+    for si, (unit, reps) in enumerate(stages):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, reps)
+        stacked = jax.vmap(lambda k: _init_unit(k, unit, cfg, dtype))(keys)
+        params.append(stacked)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return griffin.init_rec_cache(cfg, batch, dtype)
+    length = cache_len
+    if kind == "local" and cfg.window_size:
+        length = min(cfg.window_size, cache_len)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return (jnp.zeros((batch, length, hkv, hd), dtype),
+            jnp.zeros((batch, length, hkv, hd), dtype))
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    caches = []
+    for unit, reps in stages_for(cfg):
+        unit_cache = {f"{i}_{kind}": _layer_cache(kind, cfg, batch, cache_len, dtype)
+                      for i, kind in enumerate(unit)}
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), unit_cache)
+        caches.append(stacked)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _apply_layer(kind, p, x, cfg, positions, cache, cache_index, use_flash,
+                 use_lru_kernel):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        out, nc = ssm.apply_ssm(p["ssm"], x, cfg, cache)
+        return x + out, nc, aux
+    if kind == "rec":
+        out, nc = griffin.apply_rec(p["mix"], x, cfg, cache, use_kernel=use_lru_kernel)
+        x = x + out
+    else:
+        window = cfg.window_size if kind == "local" else 0
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        out, nc = attention(p["mix"], h, cfg, window=window, positions=positions,
+                            kv_cache=cache, cache_index=cache_index,
+                            use_flash=use_flash)
+        x = x + out
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        out, aux = moe_mlp(p["ffn"], h, cfg)
+    else:
+        act = "gelu" if cfg.family in ("audio",) or cfg.logit_softcap else "silu"
+        out = mlp(p["ffn"], h, activation=act)
+    return x + out, nc, aux
+
+
+def apply_stack(params, x, cfg: ModelConfig, *, positions, caches=None,
+                cache_index=None, remat: bool = False, use_flash: bool = False,
+                use_lru_kernel: bool = False):
+    """Run all stages. Returns (x, new_caches, aux_sum).
+
+    When ``caches is None`` in training mode, per-layer caches are still
+    returned as ``None`` (no state tracked) — prefill passes fresh zero caches
+    built by :func:`init_cache` filled via the no-cache path's returned kv.
+    """
+    stages = stages_for(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+
+    for si, (unit, reps) in enumerate(stages):
+        stage_params = params[si]
+        stage_cache = caches[si] if caches is not None else None
+
+        def unit_body(carry_x, xs, unit=unit):
+            p, c = xs
+            aux_acc = jnp.zeros((), jnp.float32)
+            ncs = {}
+            xcur = carry_x
+            for i, kind in enumerate(unit):
+                name = f"{i}_{kind}"
+                lcache = c[name] if c is not None else None
+                xcur, nc, aux = _apply_layer(
+                    kind, p[name], xcur, cfg, positions, lcache, cache_index,
+                    use_flash, use_lru_kernel)
+                ncs[name] = nc
+                aux_acc = aux_acc + aux
+            return xcur, (ncs, aux_acc)
+
+        body = jax.checkpoint(unit_body) if remat else unit_body
+
+        if caches is not None:
+            x, (ncs, auxs) = lax.scan(body, x, (stage_params, stage_cache))
+        else:
+            x, (ncs, auxs) = lax.scan(body, x, (stage_params, None))
+        new_caches.append(ncs)
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, new_caches, aux_total

@@ -1,0 +1,59 @@
+"""Minimal optimizer library (no optax offline) — pytree-generic.
+
+Each optimizer is ``(init_fn, update_fn)``:
+    opt_state = init_fn(params)
+    params, opt_state = update_fn(params, grads, opt_state, lr)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree_util import tree_zeros_like
+
+
+def sgd():
+    def init(params):
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(lambda p, g: p - (lr * g).astype(p.dtype), params, grads)
+        return new, state
+
+    return init, update
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False):
+    def init(params):
+        return tree_zeros_like(params)
+
+    def update(params, grads, m, lr):
+        m = jax.tree.map(lambda mm, g: beta * mm + g.astype(mm.dtype), m, grads)
+        step = (jax.tree.map(lambda mm, g: beta * mm + g.astype(mm.dtype), m, grads)
+                if nesterov else m)
+        new = jax.tree.map(lambda p, s: p - (lr * s).astype(p.dtype), params, step)
+        return new, m
+
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g).astype(v_.dtype),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, m_, v_: p - (lr * (m_ / bc1) /
+                                   (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return init, update

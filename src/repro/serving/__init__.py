@@ -1,0 +1,1 @@
+from repro.serving.engine import ServeEngine  # noqa: F401

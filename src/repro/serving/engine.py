@@ -1,0 +1,130 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of ``max_slots`` decode slots shares one batched KV/recurrent
+cache. Requests join as slots free up (each request is prefilled in
+isolation and its per-layer state *inserted* into its slot); every
+:meth:`step` decodes ONE token for all active slots at their own positions
+(vector ``pos`` support in ``decode_step``). Finished requests (EOS or
+length budget) release their slot immediately — no head-of-line blocking on
+long generations, the property that defines continuous batching.
+
+The engine is deliberately host-driven (Python queue + jitted insert/step
+functions): the jitted compute is batch-shape-stable so nothing recompiles
+as requests come and go.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+@dataclass
+class _Request:
+    rid: int
+    prompt: jnp.ndarray            # [S] int32
+    max_new: int
+    eos: Optional[int]
+    out: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_slots: int,
+                 cache_len: int, eos: Optional[int] = None):
+        if model.cfg.family == "audio":
+            raise ValueError("encoder-only model cannot be served for decode")
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.eos = eos
+        self.caches = model.init_cache(max_slots, cache_len)
+        self.pos = jnp.zeros((max_slots,), jnp.int32)     # next position
+        self.tok = jnp.zeros((max_slots, 1), jnp.int32)   # next input token
+        self.active: Dict[int, _Request] = {}             # slot -> request
+        self._next_rid = 0
+        self.waiting: List[_Request] = []
+
+        def _prefill(params, batch):
+            return model.prefill(params, batch, cache_len=cache_len)
+
+        def _insert(caches, single, slot):
+            """Scatter a single-request cache (batch dim 1) into `slot`."""
+            def one(c, s):
+                return c.at[:, slot].set(s[:, 0]) if c.ndim >= 2 else c
+            return jax.tree.map(one, caches, single)
+
+        def _step(params, caches, tok, pos):
+            return model.decode_step(params, caches, tok, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._insert = jax.jit(_insert)
+        self._step = jax.jit(_step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new: int, eos: Optional[int] = None) -> int:
+        """Queue a request; returns its id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(_Request(rid, jnp.asarray(prompt, jnp.int32),
+                                     max_new, eos if eos is not None else self.eos))
+        self._admit()
+        return rid
+
+    def _free_slots(self):
+        return [s for s in range(self.max_slots) if s not in self.active]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.pop(0)
+            batch = {"tokens": req.prompt[None, :],
+                     "labels": req.prompt[None, :]}
+            last, single = self._prefill(self.params, batch)
+            self.caches = self._insert(self.caches, single, slot)
+            first = jnp.argmax(last[0]).astype(jnp.int32)
+            req.out.append(int(first))
+            self.pos = self.pos.at[slot].set(req.prompt.shape[0])
+            self.tok = self.tok.at[slot, 0].set(first)
+            self.active[slot] = req
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[_Request]:
+        """Decode one token for every active slot; returns finished
+        requests (their slots are immediately refilled from the queue)."""
+        if not self.active:
+            self._admit()
+            if not self.active:
+                return []
+        logits, self.caches = self._step(self.params, self.caches, self.tok,
+                                         self.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.pos = self.pos + 1                     # inactive slots harmless
+        self.tok = nxt[:, None]
+        done = []
+        for slot, req in list(self.active.items()):
+            t = int(nxt[slot])
+            req.out.append(t)
+            finished = (len(req.out) >= req.max_new
+                        or (req.eos is not None and t == req.eos))
+            if finished:
+                done.append(req)
+                del self.active[slot]
+        if done:
+            self._admit()
+        return done
+
+    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Drain the queue; returns {request id: generated tokens}."""
+        results = {}
+        for _ in range(max_steps):
+            for req in self.step():
+                results[req.rid] = req.out
+            if not self.active and not self.waiting:
+                break
+        return results

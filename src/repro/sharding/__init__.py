@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_specs, cache_specs, param_specs,  # noqa: F401
+                                  state_specs)

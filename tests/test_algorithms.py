@@ -1,0 +1,140 @@
+"""Convergence of Algorithms 1–4 and every baseline on the heterogeneous
+stochastic quadratic bilevel problem, measured by the exact hyper-gradient
+norm ‖∇h(x̄)‖ (closed form)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import FederatedConfig
+from repro.core import make_algorithm, quadratic_problem
+
+ALGOS_GLOBAL = ["fedbio", "fedbioacc", "fednest"]
+ALGOS_LOCAL = ["fedbio_local", "fedbioacc_local"]
+# baselines whose hyper-gradient estimate averages *local* Neumann estimates:
+# unbiased only in the (near-)homogeneous regime — exactly the paper's
+# motivating observation (§1, §3).
+ALGOS_HOMOG = ["commfedbio", "stocbio", "mrbo"]
+
+
+def _run(prob, algo, rounds=120, return_g0=False, **kw):
+    params = dict(algorithm=algo, num_clients=prob.num_clients,
+                  local_steps=4, lr_x=0.03, lr_y=0.1, lr_u=0.1,
+                  neumann_q=10, neumann_tau=0.15)
+    params.update(kw)
+    cfg = FederatedConfig(**params)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(1))
+    x0 = alg.mean_x(state)
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+    if return_g0:
+        return x0, alg.mean_x(state)
+    return alg.mean_x(state)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return quadratic_problem(jax.random.PRNGKey(0), num_clients=8, dx=10,
+                             dy=10, noise=0.05)
+
+
+@pytest.mark.parametrize("algo", ALGOS_GLOBAL)
+def test_global_lower_converges(prob, algo):
+    x0 = jnp.zeros((10,))
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad(x0)))
+    xT = _run(prob, algo)
+    gT = float(jnp.linalg.norm(prob.exact_hypergrad(xT)))
+    assert gT < 0.35 * g0, (algo, g0, gT)
+
+
+@pytest.mark.parametrize("algo", ALGOS_HOMOG)
+def test_local_hypergrad_baselines_converge_when_homogeneous(algo):
+    prob_h = quadratic_problem(jax.random.PRNGKey(0), num_clients=8, dx=10,
+                               dy=10, noise=0.05, hetero=0.1)
+    kw = {"lr_x": 0.1, "rounds": 300} if algo == "mrbo" else {"rounds": 120}
+    x0, xT = _run(prob_h, algo, return_g0=True, **kw)
+    g0 = float(jnp.linalg.norm(prob_h.exact_hypergrad(x0)))
+    gT = float(jnp.linalg.norm(prob_h.exact_hypergrad(xT)))
+    assert gT < 0.35 * g0, (algo, g0, gT)
+
+
+def test_local_hypergrad_bias_stalls_under_heterogeneity(prob):
+    """The paper's motivating observation: averaging *local* hyper-gradients
+    (Eq. 3) is biased when the lower problem is federated; the iterates stall
+    at a heterogeneity floor where FedBiO keeps descending."""
+    x0 = jnp.zeros((10,))
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad(x0)))
+    x_biased = _run(prob, "commfedbio")
+    g_biased = float(jnp.linalg.norm(prob.exact_hypergrad(x_biased)))
+    x_fed = _run(prob, "fedbio")
+    g_fed = float(jnp.linalg.norm(prob.exact_hypergrad(x_fed)))
+    assert g_biased > 2.0 * g_fed, (g_biased, g_fed)
+
+
+@pytest.mark.parametrize("algo", ALGOS_LOCAL)
+def test_local_lower_converges(prob, algo):
+    x0 = jnp.zeros((10,))
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad_local(x0)))
+    xT = _run(prob, algo)
+    gT = float(jnp.linalg.norm(prob.exact_hypergrad_local(xT)))
+    assert gT < 0.35 * g0, (algo, g0, gT)
+
+
+def test_deterministic_drift_floor_scales_with_lr():
+    """Theorem 1 structure: with constant step sizes the deterministic case
+    converges to a client-drift bias floor ∝ C'_γ·γ² (in ‖∇h‖²). Halving the
+    learning rates must shrink the floor monotonically and substantially."""
+    prob = quadratic_problem(jax.random.PRNGKey(5), num_clients=4, dx=8, dy=8,
+                             noise=0.0)
+    floors = []
+    for lr in (0.1, 0.05, 0.025):
+        xT = _run(prob, "fedbio", rounds=600, lr_x=lr, lr_y=3 * lr, lr_u=3 * lr)
+        floors.append(float(jnp.linalg.norm(prob.exact_hypergrad(xT))))
+    assert floors[0] > floors[1] > floors[2], floors
+    assert floors[2] < 0.55 * floors[0], floors
+
+
+def test_single_local_step_removes_drift_floor():
+    """With I = 1 (communicate every step) there is no client drift, so the
+    deterministic iterates reach a genuinely stationary point."""
+    prob = quadratic_problem(jax.random.PRNGKey(5), num_clients=4, dx=8, dy=8,
+                             noise=0.0)
+    xT = _run(prob, "fedbio", rounds=1200, local_steps=1,
+              lr_x=0.05, lr_y=0.15, lr_u=0.15)
+    gT = float(jnp.linalg.norm(prob.exact_hypergrad(xT)))
+    assert gT < 5e-2, gT
+
+
+def test_lower_solution_tracked():
+    """FedBiO's ȳ tracks y_{x̄} (the Lyapunov ‖ȳ − y_x̄‖² term shrinks)."""
+    prob = quadratic_problem(jax.random.PRNGKey(7), num_clients=4, dx=8, dy=8,
+                             noise=0.0)
+    cfg = FederatedConfig(algorithm="fedbio", num_clients=4, local_steps=4,
+                          lr_x=0.03, lr_y=0.1, lr_u=0.1)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(1))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(2)
+    for _ in range(300):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+    xbar = alg.mean_x(state)
+    ybar = jax.tree.map(lambda v: jnp.mean(v, 0), state.y)
+    err = float(jnp.linalg.norm(ybar - prob.exact_lower_sol(xbar)))
+    # tracks up to the constant-step drift floor
+    assert err < 0.15, err
+
+
+def test_heterogeneity_does_not_break_convergence():
+    """Clients with very different objectives (large ζ) still converge —
+    the paper's central robustness claim for local updates."""
+    prob = quadratic_problem(jax.random.PRNGKey(9), num_clients=8, dx=8, dy=8,
+                             noise=0.05, hetero=3.0)
+    x0 = jnp.zeros((8,))
+    g0 = float(jnp.linalg.norm(prob.exact_hypergrad(x0)))
+    xT = _run(prob, "fedbioacc", rounds=150)
+    gT = float(jnp.linalg.norm(prob.exact_hypergrad(xT)))
+    assert gT < 0.4 * g0, (g0, gT)

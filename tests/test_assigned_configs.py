@@ -1,0 +1,47 @@
+"""Guard: the committed architecture configs must match the assigned table
+verbatim (layers, d_model, heads, GQA kv, d_ff, vocab, family extras)."""
+import pytest
+
+from repro.configs import ARCHS
+
+# (family, L, d_model, H, kv, d_ff, vocab, extras)
+ASSIGNED = {
+    "recurrentgemma-9b": ("hybrid", 38, 4096, 16, 1, 12288, 256000,
+                          {"window_size": 2048}),
+    "gemma2-2b": ("dense", 26, 2304, 8, 4, 9216, 256000,
+                  {"attention_pattern": "local_global", "logit_softcap": 30.0}),
+    "mamba2-130m": ("ssm", 24, 768, 0, 0, 0, 50280, {"ssm_state": 128}),
+    "llama3-405b": ("dense", 126, 16384, 128, 8, 53248, 128256, {}),
+    "olmoe-1b-7b": ("moe", 16, 2048, 16, 16, 1024, 50304,
+                    {"num_experts": 64, "experts_per_token": 8}),
+    "granite-3-8b": ("dense", 40, 4096, 32, 8, 12800, 49155, {}),
+    "hubert-xlarge": ("audio", 48, 1280, 16, 16, 5120, 504,
+                      {"causal": False}),
+    "granite-moe-1b-a400m": ("moe", 24, 1024, 16, 8, 512, 49155,
+                             {"num_experts": 32, "experts_per_token": 8}),
+    "internvl2-76b": ("vlm", 80, 8192, 64, 8, 28672, 128256,
+                      {"num_patches": 256}),
+    "granite-8b": ("dense", 36, 4096, 32, 8, 14336, 49152, {}),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_config_matches_assignment(arch):
+    cfg = ARCHS[arch]
+    fam, L, d, H, kv, ff, V, extras = ASSIGNED[arch]
+    assert cfg.family == fam
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    for k, v in extras.items():
+        assert getattr(cfg, k) == v, (k, getattr(cfg, k), v)
+    assert cfg.source, "every config must cite its source"
+
+
+def test_all_ten_present():
+    assert len(ARCHS) == 10
+    families = {c.family for c in ARCHS.values()}
+    assert families == {"dense", "moe", "ssm", "hybrid", "audio", "vlm"}

@@ -1,0 +1,56 @@
+"""Causality property (hypothesis): for every decoder family, perturbing
+tokens after position t must not change logits at or before t; for the
+encoder (bidirectional) it must."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models import build_model
+
+_DECODERS = ["granite-8b", "gemma2-2b", "mamba2-130m", "recurrentgemma-9b",
+             "olmoe-1b-7b"]
+
+_CACHE = {}
+
+
+def _model(arch):
+    if arch not in _CACHE:
+        cfg = ARCHS[arch].reduced()
+        m = build_model(cfg, dtype=jnp.float32)
+        _CACHE[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+    return _CACHE[arch]
+
+
+@pytest.mark.parametrize("arch", _DECODERS)
+@settings(max_examples=5, deadline=None)
+@given(t=st.integers(4, 28), seed=st.integers(0, 2**30))
+def test_future_tokens_do_not_leak(arch, t, seed):
+    cfg, model, params = _model(arch)
+    key = jax.random.PRNGKey(seed)
+    S = 32
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    toks2 = toks.at[0, t:].set(
+        jax.random.randint(jax.random.fold_in(key, 1), (S - t,), 0,
+                           cfg.vocab_size))
+    l1, _ = model.forward(params, {"tokens": toks, "labels": toks})
+    l2, _ = model.forward(params, {"tokens": toks2, "labels": toks2})
+    np.testing.assert_allclose(np.asarray(l1[:, :t]), np.asarray(l2[:, :t]),
+                               atol=1e-5)
+
+
+def test_encoder_is_bidirectional(rng):
+    cfg = ARCHS["hubert-xlarge"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init(rng)
+    B, S = 1, 32
+    frames = 0.3 * jax.random.normal(rng, (B, S, cfg.frontend_dim))
+    frames2 = frames.at[0, 20:].add(1.0)
+    l1, _ = model.forward(params, {"frames": frames,
+                                   "labels": jnp.zeros((B, S), jnp.int32)})
+    l2, _ = model.forward(params, {"frames": frames2,
+                                   "labels": jnp.zeros((B, S), jnp.int32)})
+    # early positions MUST change (bidirectional attention sees the future)
+    assert float(jnp.max(jnp.abs(l1[:, :10] - l2[:, :10]))) > 1e-4

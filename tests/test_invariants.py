@@ -1,0 +1,97 @@
+"""Hypothesis property tests on the system's invariants (brief deliverable c):
+communication operators, tree algebra, STORM telescoping, Neumann geometry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree_util import (client_mean, client_mean_grouped, tree_axpy,
+                                  tree_sqnorm, tree_sub, tree_vdot)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.sampled_from([2, 4, 8]), d=st.integers(1, 16),
+       seed=st.integers(0, 2**30))
+def test_client_mean_idempotent_and_preserving(m, d, seed):
+    """client_mean is an idempotent projection that preserves the total sum
+    (conservation: averaging neither creates nor destroys mass)."""
+    x = {"w": jax.random.normal(jax.random.PRNGKey(seed), (m, d))}
+    once = client_mean(x)
+    twice = client_mean(once)
+    np.testing.assert_allclose(once["w"], twice["w"], atol=1e-6)
+    np.testing.assert_allclose(jnp.sum(once["w"]), jnp.sum(x["w"]), rtol=1e-5)
+    # all clients identical after averaging
+    assert float(jnp.max(jnp.std(once["w"], axis=0))) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(groups=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**30))
+def test_grouped_mean_composes_to_global(groups, seed):
+    """grouped mean followed by global mean == global mean (hierarchical
+    schedule consistency), and groups=1 degenerates to the global mean."""
+    x = {"w": jax.random.normal(jax.random.PRNGKey(seed), (8, 5))}
+    g = client_mean_grouped(x, groups)
+    np.testing.assert_allclose(client_mean(g)["w"], client_mean(x)["w"],
+                               atol=1e-6)
+    if groups == 1:
+        np.testing.assert_allclose(g["w"], client_mean(x)["w"], atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 32), seed=st.integers(0, 2**30))
+def test_tree_algebra(n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = {"x": jax.random.normal(k1, (n,))}
+    b = {"x": jax.random.normal(k2, (n,))}
+    # polarisation identity: <a,b> = (|a+b|^2 - |a-b|^2) / 4
+    lhs = float(tree_vdot(a, b))
+    apb = tree_axpy(1.0, a, b)
+    amb = tree_sub(b, a)
+    rhs = float(tree_sqnorm(apb) - tree_sqnorm(amb)) / 4.0
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30), steps=st.integers(1, 10))
+def test_storm_telescopes_to_sgd_in_deterministic_limit(seed, steps):
+    """With zero gradient noise, the STORM estimator equals the plain
+    gradient after every update (the correction telescopes away)."""
+    from repro.kernels.storm.ref import storm_update_ref
+    k = jax.random.PRNGKey(seed)
+    p = jax.random.normal(k, (16,))
+    m = jnp.zeros((16,))
+
+    def grad(p):
+        return 2.0 * p          # deterministic oracle
+
+    err0 = float(jnp.linalg.norm(m - grad(p)))
+    for _ in range(steps):
+        g_new = grad(p - 0.1 * m)      # gradient at the post-update point
+        g_old = grad(p)
+        p, m = storm_update_ref(p, m, g_new, g_old, 0.1, 0.9)
+    # m_{t} − g(p_{t}) = 0.9^t (m_0 − g(p_0)): geometric contraction
+    err = float(jnp.linalg.norm(m - grad(p)))
+    assert err <= 0.9 ** steps * err0 + 1e-5, (err, err0, steps)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_neumann_partial_sums_monotone(seed):
+    """Neumann partial sums of (I − τA)^k form a monotone approximation of
+    A⁻¹ in the A-norm for SPD A — the Eq. (6) estimator's bias shrinks with
+    every extra term."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q, _ = jnp.linalg.qr(jax.random.normal(k1, (6, 6)))
+    ev = jax.random.uniform(k2, (6,), minval=0.5, maxval=2.0)
+    A = (q * ev) @ q.T
+    v = jnp.ones((6,))
+    tau = 0.4
+    target = jnp.linalg.solve(A, v)
+    acc = jnp.zeros((6,))
+    term = v
+    errs = []
+    for _ in range(12):
+        acc = acc + tau * term
+        term = term - tau * (A @ term)
+        errs.append(float(jnp.linalg.norm(acc - target)))
+    assert all(e2 <= e1 + 1e-7 for e1, e2 in zip(errs, errs[1:])), errs

@@ -1,0 +1,93 @@
+"""Quantitative validation of the paper's headline claims (EXPERIMENTS.md
+§Paper-claims):
+
+* **Linear speed-up in M** (Thm 1/2): at fixed T, the stochastic error term
+  scales ≈ 1/M, so more clients → lower final ‖∇h‖ under noise.
+* **Communication efficiency** (Table 1): to reach a fixed ε, FedBiOAcc needs
+  fewer communicated floats than FedBiO, which needs far fewer than FedNest
+  (per-step averaging).
+* **Local steps trade-off**: more local steps per round reduce rounds-to-ε.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import FederatedConfig
+from repro.core import make_algorithm, quadratic_problem
+
+
+def _grad_trajectory(prob, algo, rounds, *, local_steps=4, lr_x=0.03,
+                     lr_y=0.1, lr_u=0.1, seed=2, **kw):
+    cfg = FederatedConfig(algorithm=algo, num_clients=prob.num_clients,
+                          local_steps=local_steps, lr_x=lr_x, lr_y=lr_y,
+                          lr_u=lr_u, neumann_q=10, neumann_tau=0.15, **kw)
+    alg = make_algorithm(prob, cfg)
+    state = alg.init(jax.random.PRNGKey(1))
+    rnd = jax.jit(alg.round)
+    key = jax.random.PRNGKey(seed)
+    traj = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state, _ = rnd(state, sub)
+        traj.append(float(jnp.linalg.norm(
+            prob.exact_hypergrad(alg.mean_x(state)))))
+    return traj, alg.comm_floats
+
+
+def test_linear_speedup_in_clients():
+    """Same per-client noise, same rounds: the M=16 run must end with a
+    meaningfully lower tail-averaged gradient norm than M=2 (Theorem 1's
+    σ²/(bM) term)."""
+    tails = {}
+    for M in (2, 16):
+        prob = quadratic_problem(jax.random.PRNGKey(0), num_clients=M,
+                                 dx=10, dy=10, noise=1.2, hetero=0.6)
+        traj, _ = _grad_trajectory(prob, "fedbio", rounds=150)
+        tails[M] = sum(traj[-30:]) / 30
+    assert tails[16] < 0.75 * tails[2], tails
+
+
+def test_fedbioacc_beats_fedbio_per_communication():
+    """Rounds (≙ communicated floats) to reach ε: the STORM-accelerated
+    variant must win at equal round budgets (communication complexity
+    O(ε⁻¹) vs O(ε⁻¹·⁵))."""
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.6, hetero=1.0)
+    # FedBiOAcc communicates 2x floats/round (momenta), so equal float
+    # budget = fedbio at 2x the rounds. The STORM schedule has a slow
+    # transient, so compare asymptotically: acc@150 vs bio@300 rounds.
+    traj_b, comm_b = _grad_trajectory(prob, "fedbio", rounds=300)
+    traj_a, comm_a = _grad_trajectory(prob, "fedbioacc", rounds=150)
+    assert comm_a == 2 * comm_b
+    tail_b = sum(traj_b[-30:]) / 30
+    tail_a = sum(traj_a[-30:]) / 30
+    assert tail_a < tail_b, (tail_a, tail_b)
+
+
+def test_fednest_needs_more_communication():
+    """FedNest converges well but communicates ~(N_y+N_u+1)× more floats per
+    round; at a fixed communication budget FedBiO reaches a lower error."""
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.3)
+    traj_f, comm_f = _grad_trajectory(prob, "fednest", rounds=30)
+    traj_b, comm_b = _grad_trajectory(prob, "fedbio", rounds=30 * comm_f // 30 // 1)
+    # equal float budget: fedbio gets comm_f/comm_b times the rounds
+    ratio = comm_f / comm_b
+    assert ratio > 2.0, ratio
+    traj_b, _ = _grad_trajectory(prob, "fedbio", rounds=int(30 * ratio))
+    assert sum(traj_b[-10:]) / 10 < sum(traj_f[-10:]) / 10 * 1.1
+
+
+def test_more_local_steps_fewer_rounds():
+    """Increasing I reduces the number of communication rounds needed to
+    reach a fixed accuracy (the whole point of local updates)."""
+    prob = quadratic_problem(jax.random.PRNGKey(6), num_clients=8, dx=10,
+                             dy=10, noise=0.3)
+    target_rounds = {}
+    for I in (1, 8):
+        traj, _ = _grad_trajectory(prob, "fedbio", rounds=200, local_steps=I)
+        g0 = traj[0]
+        eps = 0.5 * g0
+        hit = next((i for i, g in enumerate(traj) if g < eps), len(traj))
+        target_rounds[I] = hit
+    assert target_rounds[8] < target_rounds[1], target_rounds

@@ -1,0 +1,97 @@
+"""§Perf optimization variants must be *exactly* equivalent to the
+paper-faithful paths they replace (same math, different schedule)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FederatedConfig
+from repro.configs import ARCHS
+from repro.core import hypergrad as hg
+from repro.core.problems import quadratic_problem
+from repro.data import make_fed_batch_fn
+from repro.federation.trainer import (make_fedbio_train_step,
+                                      make_fedbioacc_train_step)
+from repro.models import build_model
+
+
+def test_fused_oracles_match_unfused_quadratic(rng):
+    prob = quadratic_problem(rng, num_clients=2, dx=6, dy=5, noise=0.1)
+    b = jax.tree.map(lambda v: v[0], prob.sample_batches(rng))
+    x, y, u = jnp.ones((6,)), 0.5 * jnp.ones((5,)), jnp.arange(5.0)
+    om1 = hg.grad_y(prob.g, x, y, b)
+    mu1 = hg.nu_direction(prob.g, prob.f, x, y, u, b, b)
+    p1 = hg.u_residual(prob.g, prob.f, x, y, u, b, b)
+    om2, mu2, p2 = hg.fused_oracles(prob.g, prob.f, x, y, u, b)
+    np.testing.assert_allclose(om1, om2, rtol=1e-6)
+    np.testing.assert_allclose(mu1, mu2, rtol=1e-6)
+    np.testing.assert_allclose(p1, p2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("maker", [make_fedbio_train_step,
+                                   make_fedbioacc_train_step])
+def test_fused_train_step_matches_model_scale(maker, rng):
+    cfg = ARCHS["granite-8b"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=2, local_steps=2, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05)
+    init1, step1 = maker(model, fed, n_micro=1, remat=False,
+                         fuse_oracles=False)
+    init2, step2 = maker(model, fed, n_micro=1, remat=False,
+                         fuse_oracles=True)
+    state = init1(rng)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=2, per_client=2, seq_len=32)
+    batch = batch_fn(rng)
+    # run two steps so FedBiOAcc's momenta are exercised
+    s1, _ = jax.jit(step1)(state, batch)
+    s2, _ = jax.jit(step2)(state, batch)
+    batch2 = batch_fn(jax.random.fold_in(rng, 1))
+    s1, _ = jax.jit(step1)(s1, batch2)
+    s2, _ = jax.jit(step2)(s2, batch2)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_grouped_gqa_matches_repeat(rng):
+    """The grouped einsum GQA path equals explicit kv-head repetition."""
+    from repro.config import ModelConfig
+    from repro.models.layers import attention, attn_init
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
+                      num_heads=8, num_kv_heads=2, d_ff=128, vocab_size=64)
+    params = attn_init(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 48, 64))
+    pos = jnp.broadcast_to(jnp.arange(48)[None], (2, 48))
+    out, _ = attention(params, x, cfg, window=0, positions=pos)
+    # reference with explicit repeat
+    import math
+    q = (x @ params["wq"]).reshape(2, 48, 8, 8)
+    k = (x @ params["wk"]).reshape(2, 48, 2, 8)
+    v = (x @ params["wv"]).reshape(2, 48, 2, 8)
+    from repro.models.layers import rope
+    q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+    kf, vf = jnp.repeat(k, 4, axis=2), jnp.repeat(v, 4, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / math.sqrt(8)
+    mask = jnp.tril(jnp.ones((48, 48), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", p, vf).reshape(2, 48, 64) @ params["wo"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_client_pure_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.config import MeshConfig
+    from repro.sharding import rules
+    model = build_model(ARCHS["mamba2-130m"])
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    M_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((256,) + s.shape, s.dtype), shapes)
+    specs = rules.param_specs(M_shapes, MeshConfig(),
+                              placement="client_pure", client_axis=True)
+    # client axis consumes the whole mesh, everything else unsharded
+    assert specs["head"]["w"] == P(("data", "model"), None, None)
+    stage = specs["body"]["stages"][0]["0_ssm"]["ssm"]
+    assert stage["in_proj"] == P(("data", "model"), None, None, None)

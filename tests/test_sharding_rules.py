@@ -1,0 +1,126 @@
+"""Partition-spec inference: known-leaf expectations, divisibility fallbacks,
+and an end-to-end pjit execution of the federated step on a debug mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig
+from repro.configs import ARCHS
+from repro.models import build_model
+from repro.sharding import rules
+
+
+@pytest.fixture(scope="module")
+def llama_param_shapes():
+    cfg = ARCHS["llama3-405b"]
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def _find(specs, *keys):
+    node = specs
+    for k in keys:
+        node = node[k]
+    return node
+
+
+def test_llama_specs_tensor_parallel(llama_param_shapes):
+    specs = rules.param_specs(llama_param_shapes, MeshConfig(),
+                              placement="client_sharded", client_axis=False,
+                              fsdp=False)
+    stage0 = specs["body"]["stages"][0]["0_attn"]
+    # column-parallel qkv: [reps, d, h*hd] -> (None, None, "model")
+    assert stage0["mix"]["wq"] == P(None, None, "model")
+    # row-parallel wo: [reps, h*hd, d] -> (None, "model", None)
+    assert stage0["mix"]["wo"] == P(None, "model", None)
+    assert stage0["ln1"]["scale"] == P(None, None)
+    # head [d, V]: vocab 128256 divisible -> (None, "model")
+    assert specs["head"]["w"] == P(None, "model")
+    # embed table [V, d] is COL -> model on last dim
+    assert specs["body"]["embed"]["table"] == P(None, "model")
+
+
+def test_llama_specs_fsdp(llama_param_shapes):
+    specs = rules.param_specs(llama_param_shapes, MeshConfig(),
+                              placement="client_replicated", client_axis=False)
+    stage0 = specs["body"]["stages"][0]["0_attn"]
+    # FSDP adds "data" on the remaining largest dim
+    assert stage0["mix"]["wq"] == P(None, "data", "model")
+    assert stage0["mix"]["wo"] == P(None, "model", "data")
+
+
+def test_vocab_not_divisible_falls_back():
+    cfg = ARCHS["hubert-xlarge"]     # vocab 504, not divisible by 16
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = rules.param_specs(shapes, MeshConfig(), client_axis=False,
+                              fsdp=False)
+    # head w [1280, 504]: model goes to d_model instead
+    assert specs["head"]["w"] == P("model", None)
+
+
+def test_moe_expert_parallel():
+    cfg = ARCHS["olmoe-1b-7b"]
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = rules.param_specs(shapes, MeshConfig(), client_axis=False,
+                              fsdp=False)
+    ffn = specs["body"]["stages"][0]["0_attn"]["ffn"]
+    # experts [reps, E, d, f] -> E sharded over "model"
+    assert ffn["wi"] == P(None, "model", None, None)
+    assert ffn["router"] == P(None, None, None)
+
+
+def test_client_axis_sharding():
+    cfg = ARCHS["gemma2-2b"]
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    M_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((16,) + s.shape, s.dtype), shapes)
+    specs = rules.param_specs(M_shapes, MeshConfig(),
+                              placement="client_sharded", client_axis=True)
+    assert specs["head"]["w"] == P("data", None, "model")
+    multi = rules.param_specs(M_shapes, MeshConfig(multi_pod=True),
+                              placement="client_sharded", client_axis=True)
+    assert multi["head"]["w"] == P(("pod", "data"), None, "model")
+
+
+def test_generic_cache_specs():
+    mesh = MeshConfig()
+    caches = [{"0_attn": (jax.ShapeDtypeStruct((13, 128, 32768, 8, 128), jnp.bfloat16),) * 2}]
+    specs = rules.cache_specs(caches, mesh)
+    k_spec = specs[0]["0_attn"][0]
+    # [reps, B, S, hkv, hd]: B -> data, S -> model (sharding hd/hkv forces a
+    # full cache gather every attention layer — §Perf pair 2)
+    assert k_spec == P(None, "data", "model", None, None)
+
+
+def test_end_to_end_pjit_step_runs(rng):
+    """The federated train step executes under pjit with inferred specs on a
+    (1,1) debug mesh — catches spec/shape mismatches structurally."""
+    from repro.config import FederatedConfig
+    from repro.data import make_fed_batch_fn
+    from repro.federation.trainer import make_fedbioacc_train_step
+    from repro.launch.mesh import make_debug_mesh
+
+    cfg = ARCHS["gemma2-2b"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=2, local_steps=2)
+    init, step = make_fedbioacc_train_step(model, fed, n_micro=1, remat=False)
+    state = init(rng)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=2, per_client=1, seq_len=16)
+    batch = batch_fn(rng)
+    mesh = make_debug_mesh(1, 1)
+    mesh_cfg = MeshConfig()
+    s_spec = rules.state_specs(jax.eval_shape(lambda: state),
+                               mesh_cfg, placement="client_sharded")
+    # a (1,1) mesh accepts any spec axes? no — axes names must exist; debug
+    # mesh has ("data","model") so specs are valid.
+    from jax.sharding import NamedSharding
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), s_spec,
+                         is_leaf=lambda s: isinstance(s, P))
+    with mesh:
+        jitted = jax.jit(step, in_shardings=(in_sh, None))
+        new, _ = jitted(state, batch)
+    assert int(new.step) == 1
