@@ -1,6 +1,6 @@
 """Benchmark harness — one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
 
 Benchmarks (paper artifact → benchmark):
   * Table 1 (communication / oracle complexities)    → bench_table1_complexity
@@ -11,7 +11,10 @@ Benchmarks (paper artifact → benchmark):
   * §Roofline summary (from the dry-run artifacts)   → bench_roofline_summary
 
 Output: ``name,us_per_call,derived`` CSV rows (derived = the benchmark's
-headline metric).
+headline metric). ``--json`` additionally writes ``BENCH_kernels.json`` at
+the repo root — the machine-readable kernel perf trajectory (fused
+triple-sequence STORM vs the 9-pass tree-map chain, with the bytes-moved
+model behind each number).
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ from repro.core import (data_cleaning_problem, hyperrep_problem,
 from repro.core.problems import fair_federated_problem
 
 ROWS = []
+KERNEL_JSON = {}          # machine-readable kernel results (--json)
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -225,6 +229,9 @@ def bench_kernels(fast: bool):
                                       {"x": go}, 0.1, 0.9))
     t_r = timeit(lambda: jax.jit(storm_update_ref)(p, m, gn, go, 0.1, 0.9))
     emit("kernel/storm", t_k, f"ref_us={t_r:.0f};interpret_mode=True;n={n}")
+    KERNEL_JSON["storm_single"] = {"n_elements": n, "kernel_us": round(t_k, 1),
+                                   "ref_us": round(t_r, 1),
+                                   "backend": jax.default_backend()}
 
     B, S, H, D = 1, 256, 2, 64
     q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, D))
@@ -245,6 +252,94 @@ def bench_kernels(fast: bool):
     t_r = timeit(lambda: jax.jit(lru_scan_ref)(a, b))
     emit("kernel/lru", t_k, f"ref_us={t_r:.0f};interpret_mode=True;"
                             f"shape=2x256x128")
+
+    bench_storm_triple(fast)
+
+
+def bench_storm_triple(fast: bool):
+    """Triple-sequence fused STORM step (flat substrate, one launch + one
+    add) vs the 9-pass tree-map chain the unfused train step runs — the
+    §Perf memory-term optimization of the FedBiOAcc local step."""
+    from repro.optim import flat
+
+    key = jax.random.PRNGKey(7)
+    # a model-shaped tree: many body leaves, a few head/aux leaves
+    leaf = 1 << 14
+    counts = {"x": 48, "y": 8, "u": 8}
+    vt = {s: {f"l{i}": jax.random.normal(jax.random.fold_in(key, 100 * j + i),
+                                         (leaf,))
+              for i in range(n)}
+          for j, (s, n) in enumerate(counts.items())}
+    rand = lambda off: jax.tree.map(
+        lambda v: jax.random.normal(jax.random.fold_in(key, off), v.shape), vt)
+    mt, got, gnt = rand(1), rand(2), rand(3)
+    lrs, decays = (0.05, 0.1, 0.2), (0.99, 0.98, 0.97)
+    n_total = sum(counts.values()) * leaf
+    n_leaves = sum(counts.values())
+
+    block = 1 << 16
+    spec = flat.make_spec(vt, sections=("x", "y", "u"), block=block)
+    # flatten ONCE at "init" — the substrate keeps state flat across steps
+    v_b, m_b, go_b, gn_b = (flat.flatten_tree(spec, t)
+                            for t in (vt, mt, got, gnt))
+
+    @jax.jit
+    def fused_step(v_b, m_b, go_b, gn_b):
+        v_b, mp_b = flat.storm_partial_step(spec, v_b, m_b, go_b, lrs, decays)
+        return v_b, flat.buffers_add(mp_b, gn_b)
+
+    @jax.jit
+    def treemap_step(vt, mt, got, gnt):
+        sections = ("x", "y", "u")
+        mp = {s: jax.tree.map(lambda m, o: decays[i] * (m - o),
+                              mt[s], got[s]) for i, s in enumerate(sections)}
+        vn = {s: jax.tree.map(lambda v, m: v - lrs[i] * m, vt[s], mt[s])
+              for i, s in enumerate(sections)}
+        mn = {s: jax.tree.map(jnp.add, mp[s], gnt[s]) for s in sections}
+        return vn, mn
+
+    def timeit(fn, n):
+        r = fn()
+        jax.block_until_ready(r)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = fn()
+        jax.block_until_ready(r)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    reps = 10 if fast else 30
+    t_fused = timeit(lambda: fused_step(v_b, m_b, go_b, gn_b), reps)
+    t_tree = timeit(lambda: treemap_step(vt, mt, got, gnt), reps)
+
+    # bytes-moved model (f32): the fused schedule streams v,m,g_old and
+    # writes v',m_part (5N) + the correction add (3N) = 8N floats; the
+    # 9-pass chain touches 3 arrays per pass = 27N floats.
+    bytes_fused = 8 * n_total * 4
+    bytes_tree = 27 * n_total * 4
+    emit("kernel/storm3_fused", t_fused,
+         f"treemap_us={t_tree:.0f};speedup={t_tree / t_fused:.2f}x;"
+         f"n={n_total};leaves={n_leaves};block={block};"
+         f"bytes_model_fused={bytes_fused};bytes_model_treemap={bytes_tree}")
+    KERNEL_JSON["storm_triple"] = {
+        "n_elements": n_total,
+        "n_leaves": n_leaves,
+        "block": block,
+        "dtype": "float32",
+        "fused_us": round(t_fused, 1),
+        "treemap_us": round(t_tree, 1),
+        "speedup": round(t_tree / t_fused, 3),
+        "bytes_moved_model": {
+            "fused": bytes_fused,
+            "treemap_chain": bytes_tree,
+            "note": "floats touched per step: fused = 5N (one triple-"
+                    "sequence launch) + 3N (correction add); tree-map "
+                    "chain = 9 passes x 3 arrays",
+        },
+        "backend": jax.default_backend(),
+        # off-TPU the substrate lowers to the bit-identical jnp path; the
+        # Pallas kernel (compiled) is the TPU production path
+        "impl": "pallas" if jax.default_backend() == "tpu" else "jnp-flat",
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -281,12 +376,27 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="reduced round counts (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_kernels.json (machine-readable kernel "
+                         "perf trajectory) at the repo root")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for b in BENCHES:
         if args.only and args.only not in b.__name__:
             continue
         b(args.fast)
+    if args.json:
+        if not KERNEL_JSON:    # e.g. --only excluded bench_kernels
+            print("BENCH_kernels.json NOT written: bench_kernels did not "
+                  "run, refusing to clobber the recorded trajectory",
+                  flush=True)
+            return
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_kernels.json")
+        with open(path, "w") as fh:
+            json.dump(KERNEL_JSON, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {os.path.normpath(path)}", flush=True)
 
 
 if __name__ == '__main__':

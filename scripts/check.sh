@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Smoke gate: the tier-1 suite plus a fast benchmark pass (with the
+# machine-readable kernel perf artifact, BENCH_kernels.json).
+#
+#   ./scripts/check.sh            # full tier-1 + fast benchmarks
+#   ./scripts/check.sh --bench    # benchmarks only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--bench" ]]; then
+    python -m pytest -x -q
+fi
+python -m benchmarks.run --fast --json
+echo "check.sh: OK"

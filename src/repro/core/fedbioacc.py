@@ -12,6 +12,19 @@ Per step t (learning-rate schedule α_t = δ/(u0 + t)^{1/3}):
 
 where μ = ∇_x f − ∇_xy g·u and p = ∇²_yy g·u − ∇_y f. The same fresh
 minibatch is evaluated at the old and new iterate — the STORM correction.
+
+§Perf fusion flags (FederatedConfig):
+
+* ``fuse_oracles`` — one forward-over-reverse linearization yields all three
+  oracle directions from ONE shared minibatch (``hypergrad.fused_oracles``);
+  the step then samples 1 batch instead of 5.
+* ``fuse_storm`` — the scan carry keeps (x, y, u) and (ν, ω, q) as flat
+  per-dtype buffers (``repro.optim.flat``, flattened once per round) and the
+  9-pass tree-map momentum/variable chain becomes one triple-sequence Pallas
+  launch + one elementwise add per local step. The old-iterate oracle is
+  evaluated *before* the variable step (same value — it only reads the
+  entering iterate), which is what lets the variable step and the partial
+  momentum share a single launch.
 """
 from __future__ import annotations
 
@@ -25,7 +38,8 @@ from repro.config import FederatedConfig
 from repro.core import hypergrad as hg
 from repro.core.problems import Problem
 from repro.core.fedbio import Algorithm, _broadcast_clients
-from repro.core.tree_util import client_mean, tree_axpy, tree_size, tree_sub, tree_zeros_like
+from repro.core.tree_util import client_mean, tree_size, tree_zeros_like
+from repro.optim import flat
 
 
 class FedBiOAccState(NamedTuple):
@@ -45,12 +59,23 @@ def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
     def alpha(t):
         return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
 
-    def oracles(x, y, u, batches):
-        by, bf1, bg1, bf2, bg2 = batches
-        omega = hg.grad_y(g, x, y, by)
-        mu = hg.nu_direction(g, f, x, y, u, bg1, bf1)
-        p = hg.u_residual(g, f, x, y, u, bg2, bf2)
-        return omega, mu, p
+    if cfg.fuse_oracles:
+        def sample(k):
+            return problem.sample_batches(k)
+
+        def oracles(x, y, u, batch):
+            return hg.fused_oracles(g, f, x, y, u, batch)
+    else:
+        def sample(k):
+            return tuple(problem.sample_batches(kk)
+                         for kk in jax.random.split(k, 5))
+
+        def oracles(x, y, u, batches):
+            by, bf1, bg1, bf2, bg2 = batches
+            omega = hg.grad_y(g, x, y, by)
+            mu = hg.nu_direction(g, f, x, y, u, bg1, bf1)
+            p = hg.u_residual(g, f, x, y, u, bg2, bf2)
+            return omega, mu, p
 
     voracles = jax.vmap(oracles)
 
@@ -61,57 +86,103 @@ def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
         x = _broadcast_clients(x1, M)
         y = _broadcast_clients(y1, M)
         u = _broadcast_clients(u1, M)
-        ks = jax.random.split(k2, 5)
-        batches = tuple(problem.sample_batches(kk) for kk in ks)
-        omega, nu, q = voracles(x, y, u, batches)
+        omega, nu, q = voracles(x, y, u, sample(k2))
         return FedBiOAccState(x, y, u, omega, nu, q, jnp.zeros((), jnp.int32))
 
+    def body(carry, inp):
+        x, y, u, omega, nu, q, t = carry
+        k, is_comm = inp
+        a = alpha(t)
+        # --- variable update (line 4) ---
+        x_new = jax.tree.map(lambda v, m: v - cfg.lr_x * a * m, x, nu)
+        y_new = jax.tree.map(lambda v, m: v - cfg.lr_y * a * m, y, omega)
+        u_new = jax.tree.map(lambda v, m: v - cfg.lr_u * a * m, u, q)
+        # --- communication of variables (lines 5-9) ---
+        x_new = lax.cond(is_comm, client_mean, lambda v: v, x_new)
+        y_new = lax.cond(is_comm, client_mean, lambda v: v, y_new)
+        u_new = lax.cond(is_comm, client_mean, lambda v: v, u_new)
+        # --- STORM momentum with shared minibatch (lines 10-12) ---
+        batches = sample(k)
+        o_new, m_new, p_new = voracles(x_new, y_new, u_new, batches)
+        o_old, m_old, p_old = voracles(x, y, u, batches)
+        ca2 = (a * a)
+
+        def storm(new, mom, old, c):
+            return jax.tree.map(
+                lambda gn, mo, go: gn + (1.0 - c * ca2) * (mo - go),
+                new, mom, old)
+
+        omega = storm(o_new, omega, o_old, cfg.c_omega)
+        nu = storm(m_new, nu, m_old, cfg.c_nu)
+        q = storm(p_new, q, p_old, cfg.c_u)
+        # --- communication of momenta (lines 13-17) ---
+        omega = lax.cond(is_comm, client_mean, lambda v: v, omega)
+        nu = lax.cond(is_comm, client_mean, lambda v: v, nu)
+        q = lax.cond(is_comm, client_mean, lambda v: v, q)
+        return (x_new, y_new, u_new, omega, nu, q, t + 1), None
+
+    # flat-buffer variant of the same step: one fused triple-sequence launch
+    # (variable step + partial momentum) + one add per local step
+    x1s, y1s = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+    spec = (flat.make_spec({"x": x1s, "y": y1s, "u": y1s},
+                           sections=("x", "y", "u"),
+                           block=cfg.fuse_storm_block)
+            if cfg.fuse_storm else None)
+
+    def body_flat(carry, inp):
+        vars_b, mom_b, t = carry
+        k, is_comm = inp
+        a = alpha(t)
+        ca2 = (a * a)
+        batches = sample(k)
+        vt = flat.unflatten_tree(spec, vars_b)
+        # old-iterate oracle FIRST — reads only the entering iterate, so the
+        # variable step and the partial momentum fuse into one launch
+        o_old, m_old, p_old = voracles(vt["x"], vt["y"], vt["u"], batches)
+        g_old = flat.flatten_tree(spec, {"x": m_old, "y": o_old, "u": p_old},
+                                  batch_dims=1, dtype=jnp.float32)
+        lrs = (cfg.lr_x * a, cfg.lr_y * a, cfg.lr_u * a)
+        decays = (1.0 - cfg.c_nu * ca2, 1.0 - cfg.c_omega * ca2,
+                  1.0 - cfg.c_u * ca2)
+        vars_b, mom_b = flat.storm_partial_step(spec, vars_b, mom_b,
+                                                g_old, lrs, decays)
+        vars_b = lax.cond(is_comm, client_mean, lambda v: v, vars_b)
+        vt2 = flat.unflatten_tree(spec, vars_b)
+        o_new, m_new, p_new = voracles(vt2["x"], vt2["y"], vt2["u"], batches)
+        g_new = flat.flatten_tree(spec, {"x": m_new, "y": o_new, "u": p_new},
+                                  batch_dims=1, dtype=jnp.float32)
+        mom_b = flat.buffers_add(mom_b, g_new)
+        mom_b = lax.cond(is_comm, client_mean, lambda v: v, mom_b)
+        return (vars_b, mom_b, t + 1), None
+
     def round(state: FedBiOAccState, key):
-        def body(carry, inp):
-            x, y, u, omega, nu, q, t = carry
-            k, is_comm = inp
-            a = alpha(t)
-            # --- variable update (line 4) ---
-            x_new = jax.tree.map(lambda v, m: v - cfg.lr_x * a * m, x, nu)
-            y_new = jax.tree.map(lambda v, m: v - cfg.lr_y * a * m, y, omega)
-            u_new = jax.tree.map(lambda v, m: v - cfg.lr_u * a * m, u, q)
-            # --- communication of variables (lines 5-9) ---
-            x_new = lax.cond(is_comm, client_mean, lambda v: v, x_new)
-            y_new = lax.cond(is_comm, client_mean, lambda v: v, y_new)
-            u_new = lax.cond(is_comm, client_mean, lambda v: v, u_new)
-            # --- STORM momentum with shared minibatch (lines 10-12) ---
-            ks = jax.random.split(k, 5)
-            batches = tuple(problem.sample_batches(kk) for kk in ks)
-            o_new, m_new, p_new = voracles(x_new, y_new, u_new, batches)
-            o_old, m_old, p_old = voracles(x, y, u, batches)
-            ca2 = (a * a)
-
-            def storm(new, mom, old, c):
-                return jax.tree.map(
-                    lambda gn, mo, go: gn + (1.0 - c * ca2) * (mo - go),
-                    new, mom, old)
-
-            omega = storm(o_new, omega, o_old, cfg.c_omega)
-            nu = storm(m_new, nu, m_old, cfg.c_nu)
-            q = storm(p_new, q, p_old, cfg.c_u)
-            # --- communication of momenta (lines 13-17) ---
-            omega = lax.cond(is_comm, client_mean, lambda v: v, omega)
-            nu = lax.cond(is_comm, client_mean, lambda v: v, nu)
-            q = lax.cond(is_comm, client_mean, lambda v: v, q)
-            return (x_new, y_new, u_new, omega, nu, q, t + 1), None
-
         I = cfg.local_steps
         keys = jax.random.split(key, I)
         is_comm = jnp.arange(1, I + 1) == I          # communicate on last local step
-        carry = (state.x, state.y, state.u, state.omega, state.nu, state.q, state.t)
-        carry, _ = lax.scan(body, carry, (keys, is_comm))
-        new = FedBiOAccState(*carry)
+        if not cfg.fuse_storm:
+            carry = (state.x, state.y, state.u, state.omega, state.nu,
+                     state.q, state.t)
+            carry, _ = lax.scan(body, carry, (keys, is_comm))
+            new = FedBiOAccState(*carry)
+            return new, {"t": new.t}
+        # flatten once per round; the scan carry stays flat across all I
+        # local steps, pytree views appear only at the oracle boundaries
+        vars_b = flat.flatten_tree(
+            spec, {"x": state.x, "y": state.y, "u": state.u}, batch_dims=1)
+        mom_b = flat.flatten_tree(
+            spec, {"x": state.nu, "y": state.omega, "u": state.q},
+            batch_dims=1, dtype=jnp.float32)
+        (vars_b, mom_b, t), _ = lax.scan(body_flat, (vars_b, mom_b, state.t),
+                                         (keys, is_comm))
+        vt = flat.unflatten_tree(spec, vars_b)
+        mt = flat.unflatten_tree(spec, mom_b)
+        new = FedBiOAccState(vt["x"], vt["y"], vt["u"], mt["y"], mt["x"],
+                             mt["u"], t)
         return new, {"t": new.t}
 
     def mean_x(state):
         return jax.tree.map(lambda v: jnp.mean(v, axis=0), state.x)
 
-    x1, y1 = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
     # x + y + u + three momenta per client per round
-    comm = 2 * (tree_size(x1) + 2 * tree_size(y1))
+    comm = 2 * (tree_size(x1s) + 2 * tree_size(y1s))
     return Algorithm("fedbioacc", init, round, comm, mean_x)

@@ -16,6 +16,22 @@ Memory discipline (what makes llama3-405b lowerable):
   evaluate the old-iterate oracle **before** applying the update, so XLA can
   free it (documented deviation: at communication steps the pre-averaging
   local iterate is used as the "old" point, exactly as Alg. 2 lines 10-12).
+
+Fused STORM substrate (``fuse_storm=True`` on ``make_fedbioacc_train_step``):
+the (x, y, u) trees and their three momenta are flattened ONCE at init into
+contiguous per-dtype [M, N] buffers (``repro.optim.flat``); the per-step
+9-pass ``jax.tree.map`` chain (partial momentum ×3, variable step ×3,
+correction add ×3) collapses to ONE triple-sequence Pallas launch plus one
+elementwise add, and each ``client_mean`` becomes one reduction per dtype
+buffer instead of one per leaf. The train state is then a
+``FlatFedBiOAccTrainState``; pytree views are materialized only at oracle
+boundaries inside the step and via ``train_step.views(state)`` for
+eval/checkpoint. Momenta live in f32 buffers regardless of the parameter
+dtype — the unfused arithmetic promotes them the same way, and the STORM
+correction g_new − g_old is a small difference bf16 would destroy. The
+fused trajectory matches the unfused one to float rounding for f32 states
+and to bf16 rounding for bf16 states (test-asserted in
+tests/test_flat_substrate.py).
 """
 from __future__ import annotations
 
@@ -30,6 +46,7 @@ from repro.core import hypergrad as hg
 from repro.core.model_problem import make_model_bilevel
 from repro.core.tree_util import client_mean, client_mean_grouped, tree_zeros_like
 from repro.models.registry import Model
+from repro.optim import flat
 
 
 class FedBiOTrainState(NamedTuple):
@@ -46,6 +63,17 @@ class FedBiOAccTrainState(NamedTuple):
     omega: Any           # y-momentum
     nu: Any              # x-momentum (body-sized)
     q: Any               # u-momentum
+    step: jnp.ndarray
+
+
+class FlatFedBiOAccTrainState(NamedTuple):
+    """FedBiOAcc state on the flat-buffer substrate (``fuse_storm=True``).
+
+    ``vars``/``mom`` are tuples of per-dtype [M, N] buffers holding the
+    x|y|u (resp. ν|ω|q) sections, tile-padded per ``repro.optim.flat``.
+    """
+    vars: Any
+    mom: Any
     step: jnp.ndarray
 
 
@@ -143,7 +171,22 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               use_flash: bool = False,
                               use_lru_kernel: bool = False,
                               fuse_storm: bool = False,
-                              fuse_oracles: bool = False):
+                              fuse_oracles: bool = False,
+                              storm_block: int | None = None):
+    """FedBiOAcc (Alg. 2) train step.
+
+    ``fuse_oracles`` shares one forward-over-reverse linearization across the
+    three oracle directions (see ``hypergrad.fused_oracles``).
+
+    ``fuse_storm`` switches the state to the flat-buffer substrate: the init
+    flattens (x, y, u) and the three momenta into per-dtype [M, N] buffers
+    and the step advances all three STORM sequences with one triple-sequence
+    Pallas launch + one add. The returned ``train_step`` then consumes and
+    produces ``FlatFedBiOAccTrainState`` and exposes
+    ``train_step.views(state) -> FedBiOAccTrainState`` (pytree views for
+    eval/checkpoint) and ``train_step.spec`` (the buffer layout).
+    ``storm_block`` overrides the kernel tile size (testing/small models).
+    """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -159,10 +202,18 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 
     voracles = jax.vmap(oracles)
 
-    def init(key):
+    def init_trees(key):
         p = model.init(key)
         x, y = _bcast(p["body"], M), _bcast(p["head"], M)
         u = _bcast(tree_zeros_like(p["head"]), M)
+        return x, y, u
+
+    if fuse_storm:
+        return _make_fedbioacc_flat(model, cfg, voracles, init_trees,
+                                    storm_block)
+
+    def init(key):
+        x, y, u = init_trees(key)
         return FedBiOAccTrainState(
             x, y, u, tree_zeros_like(y), tree_zeros_like(x), tree_zeros_like(u),
             jnp.zeros((), jnp.int32))
@@ -198,6 +249,66 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
         new = FedBiOAccTrainState(x, y, u, omega, nu, q, t + 1)
         return new, {"step": new.step}
 
+    return init, train_step
+
+
+def _make_fedbioacc_flat(model: Model, cfg: FederatedConfig, voracles,
+                         init_trees, storm_block):
+    """fuse_storm=True path: flat-buffer state + triple-sequence kernel."""
+    tmpl = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # u shares the head's structure/dtypes (tree_zeros_like at init)
+    spec = flat.make_spec(
+        {"x": tmpl["body"], "y": tmpl["head"], "u": tmpl["head"]},
+        sections=("x", "y", "u"),
+        block=storm_block if storm_block else flat.BLOCK)
+
+    def init(key):
+        x, y, u = init_trees(key)
+        vars_b = flat.flatten_tree(spec, {"x": x, "y": y, "u": u},
+                                   batch_dims=1)
+        # momenta live in f32 buffers regardless of the variable dtype —
+        # the unfused path promotes them the same way (f32 schedule scalar ×
+        # momentum), and the STORM correction g_new − g_old is a small
+        # difference bf16 would largely destroy
+        mom_b = tuple(jnp.zeros(b.shape, jnp.float32) for b in vars_b)
+        return FlatFedBiOAccTrainState(vars_b, mom_b,
+                                       jnp.zeros((), jnp.int32))
+
+    def train_step(state: FlatFedBiOAccTrainState, batch):
+        t = state.step
+        a = _alpha(cfg, t)
+        # 1) old-iterate oracle on transient pytree views
+        vt = flat.unflatten_tree(spec, state.vars)
+        o_old, m_old, p_old = voracles(vt["x"], vt["y"], vt["u"], batch)
+        g_old = flat.flatten_tree(spec, {"x": m_old, "y": o_old, "u": p_old},
+                                  batch_dims=1, dtype=jnp.float32)
+        # 2+3) partial momentum + variable step: ONE fused launch per dtype
+        # (scalar order matches the unfused expressions bit-for-bit)
+        lrs = (cfg.lr_x * a, cfg.lr_y * a, cfg.lr_u * a)
+        decays = (1.0 - cfg.c_nu * a * a, 1.0 - cfg.c_omega * a * a,
+                  1.0 - cfg.c_u * a * a)
+        vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
+                                                g_old, lrs, decays)
+        vars_b = _comm(cfg, t, vars_b)      # one all-reduce per dtype buffer
+        # 4) new-iterate oracle, same batch; STORM correction is one add
+        vt2 = flat.unflatten_tree(spec, vars_b)
+        o_new, m_new, p_new = voracles(vt2["x"], vt2["y"], vt2["u"], batch)
+        g_new = flat.flatten_tree(spec, {"x": m_new, "y": o_new, "u": p_new},
+                                  batch_dims=1, dtype=jnp.float32)
+        mom_b = flat.buffers_add(mom_b, g_new)
+        mom_b = _comm(cfg, t, mom_b)
+        new = FlatFedBiOAccTrainState(vars_b, mom_b, t + 1)
+        return new, {"step": new.step}
+
+    def views(state: FlatFedBiOAccTrainState) -> FedBiOAccTrainState:
+        vt = flat.unflatten_tree(spec, state.vars)
+        mt = flat.unflatten_tree(spec, state.mom)
+        return FedBiOAccTrainState(vt["x"], vt["y"], vt["u"], mt["y"],
+                                   mt["x"], mt["u"], state.step)
+
+    train_step.spec = spec
+    train_step.views = views
+    init.spec = spec
     return init, train_step
 
 

@@ -1,8 +1,14 @@
 # TPU Pallas kernels for the compute hot-spots (DESIGN.md §6):
-#   storm — fused STORM variance-reduction + SGD update (HBM-bandwidth bound)
+#   storm — fused STORM variance-reduction + SGD update (HBM-bandwidth bound).
+#           Single-sequence (storm_update) plus the triple-sequence variants
+#           (storm3_*): one launch streams the x/ν, y/ω, u/q segments of a
+#           flat buffer with per-tile (lr, decay) scalars from SMEM — the
+#           compute side of the flat-buffer substrate in repro.optim.flat
+#           (enabled by fuse_storm=True in the FedBiOAcc train steps).
 #   flash — block-wise causal/sliding-window attention (VMEM-tiled)
 #   lru   — RG-LRU gated linear recurrence scan (time-tiled, state in VMEM)
 # Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # wrapper with padding/reshape logic) and ref.py (pure-jnp oracle used by the
 # allclose test sweeps). Validated with interpret=True on CPU; TPU is the
-# compilation target.
+# compilation target (interpret=None auto-selects; off-TPU the flat substrate
+# dispatches to bit-identical jnp lowerings of the triple-sequence update).

@@ -13,8 +13,25 @@ through VMEM once and writes the two outputs: 6 HBM transfers vs 10 for the
 naive chain (XLA usually fuses some of it; the kernel makes the floor
 explicit and is the §Perf "memory term" optimization for the train step).
 
+Two kernel families live here:
+
+* ``storm_update_flat`` — the original single-sequence update: one (lr,
+  decay) pair for the whole buffer.
+* ``storm3_update_flat`` / ``storm3_step_flat`` — the **triple-sequence**
+  update used by the flat-buffer substrate (``repro.optim.flat``). The three
+  FedBiOAcc sequences x/ν, y/ω, u/q are laid out as contiguous,
+  tile-aligned segments of ONE flat buffer; per-*block* (lr, decay) scalars
+  arrive through SMEM and are indexed with ``pl.program_id``, so a single
+  launch streams all three sequences with their own hyper-parameters.
+  ``storm3_step_flat`` is the half-step variant (variable step + partial
+  momentum ``decay·(m − g_old)``) used inside the real train step, where the
+  new-iterate oracle — and hence ``g_new`` — only exists after the updated
+  variables have been communicated.
+
 Layout: inputs are flattened to [N] and tiled as (BLOCK,) VMEM blocks on a 1D
-grid. Scalars (lr, decay) arrive via scalar prefetch (SMEM).
+grid. Scalars (lr, decay — one pair, or one pair per block) arrive via
+scalar prefetch (SMEM). ``interpret`` defaults to auto: Pallas interpreter
+everywhere except on a real TPU backend.
 """
 from __future__ import annotations
 
@@ -27,6 +44,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 64 * 1024   # elements per VMEM tile (bf16: 128 KiB/input, 4 inputs
                     # + 2 outputs ≈ 768 KiB of VMEM — comfortably under 16 MiB)
+
+
+def _resolve_interpret(interpret):
+    """interpret=None → auto: compile on TPU, interpret elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _storm_kernel(scal_ref, p_ref, m_ref, gnew_ref, gold_ref,
@@ -43,7 +67,8 @@ def _storm_kernel(scal_ref, p_ref, m_ref, gnew_ref, gold_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def storm_update_flat(p, m, g_new, g_old, lr, decay, *, interpret: bool = True):
+def storm_update_flat(p, m, g_new, g_old, lr, decay, *,
+                      interpret: bool | None = None):
     """p, m, g_new, g_old: flat [N] arrays (N a multiple of BLOCK)."""
     n = p.shape[0]
     assert n % BLOCK == 0, n
@@ -61,5 +86,106 @@ def storm_update_flat(p, m, g_new, g_old, lr, decay, *, interpret: bool = True):
         out_specs=[block, block],
         out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
                    jax.ShapeDtypeStruct((n,), m.dtype)],
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(scal, p, m, g_new, g_old)
+
+
+# ---------------------------------------------------------------------------
+# Triple-sequence kernels (flat-buffer substrate)
+# ---------------------------------------------------------------------------
+
+def _storm3_kernel(lrs_ref, decays_ref, p_ref, m_ref, gnew_ref, gold_ref,
+                   pout_ref, mout_ref):
+    i = pl.program_id(0)
+    lr = lrs_ref[i]
+    decay = decays_ref[i]
+    m = m_ref[...].astype(jnp.float32)
+    g_new = gnew_ref[...].astype(jnp.float32)
+    g_old = gold_ref[...].astype(jnp.float32)
+    pout_ref[...] = (p_ref[...].astype(jnp.float32) - lr * m).astype(pout_ref.dtype)
+    mout_ref[...] = (g_new + decay * (m - g_old)).astype(mout_ref.dtype)
+
+
+def _storm3_step_kernel(lrs_ref, decays_ref, p_ref, m_ref, gold_ref,
+                        pout_ref, mout_ref):
+    i = pl.program_id(0)
+    lr = lrs_ref[i]
+    decay = decays_ref[i]
+    m = m_ref[...].astype(jnp.float32)
+    g_old = gold_ref[...].astype(jnp.float32)
+    pout_ref[...] = (p_ref[...].astype(jnp.float32) - lr * m).astype(pout_ref.dtype)
+    mout_ref[...] = (decay * (m - g_old)).astype(mout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def storm3_update_flat(p, m, g_new, g_old, lrs, decays, *,
+                       block: int = BLOCK, interpret: bool | None = None):
+    """Full triple-sequence fused STORM update on one flat buffer.
+
+    p, m, g_new, g_old: [N] with N a multiple of ``block``; segment
+    boundaries are block-aligned. lrs, decays: [N // block] per-block
+    hyper-parameters (constant within a segment), read from SMEM.
+    """
+    n = p.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    assert lrs.shape == decays.shape == grid, (lrs.shape, grid)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _storm3_kernel,
+        grid=grid,
+        in_specs=[smem, smem, bspec, bspec, bspec, bspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=_resolve_interpret(interpret),
+    )(lrs.astype(jnp.float32), decays.astype(jnp.float32), p, m, g_new, g_old)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def storm3_step_flat(p, m, g_old, lrs, decays, *,
+                     block: int = BLOCK, interpret: bool | None = None):
+    """Half-step: p_new = p − lr·m ; m_part = decay·(m − g_old).
+
+    This is the launch the real FedBiOAcc step uses — the new-iterate
+    gradient is only available after communication, so the STORM correction
+    ``m_part + g_new`` is completed by a single elementwise add later.
+    """
+    n = p.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    assert lrs.shape == decays.shape == grid, (lrs.shape, grid)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _storm3_step_kernel,
+        grid=grid,
+        in_specs=[smem, smem, bspec, bspec, bspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=_resolve_interpret(interpret),
+    )(lrs.astype(jnp.float32), decays.astype(jnp.float32), p, m, g_old)
+
+
+# ---------------------------------------------------------------------------
+# jnp lowerings of the triple-sequence updates — the ref.py oracles, jitted.
+# The substrate (repro.optim.flat) dispatches here off-TPU: the Pallas
+# interpreter exists for kernel validation, not speed, while these compile to
+# a handful of fused XLA loops over the flat buffer (still far fewer passes
+# than the per-leaf tree-map chain). Delegating keeps ref.py the single
+# source of the jnp math, with the Pallas kernel as the independent
+# implementation the test sweeps compare against.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def storm3_update_flat_jnp(p, m, g_new, g_old, lrs, decays, *, block: int):
+    from repro.kernels.storm.ref import storm3_update_ref
+    return storm3_update_ref(p, m, g_new, g_old, lrs, decays, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def storm3_step_flat_jnp(p, m, g_old, lrs, decays, *, block: int):
+    from repro.kernels.storm.ref import storm3_step_ref
+    return storm3_step_ref(p, m, g_old, lrs, decays, block)

@@ -2,6 +2,11 @@
 
 Handles arbitrary pytrees: leaves are flattened, concatenated per-dtype,
 padded to the kernel tile size, updated in one fused pass and scattered back.
+
+This wrapper re-flattens on every call — fine for one-off updates and tests.
+Hot training loops should use ``repro.optim.flat``, which flattens ONCE at
+init and keeps the state flat across steps (the triple-sequence substrate).
+``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
 """
 from __future__ import annotations
 
@@ -31,7 +36,8 @@ def _unflatten_group(cat, sizes, pad, leaves):
     return out
 
 
-def storm_update(params, mom, g_new, g_old, lr, decay, *, interpret: bool = True):
+def storm_update(params, mom, g_new, g_old, lr, decay, *,
+                 interpret: bool | None = None):
     """Fused p_new = p − lr·m ; m_new = g_new + decay·(m − g_old) over pytrees.
 
     Leaves are grouped by dtype-pair and processed in single fused streams.

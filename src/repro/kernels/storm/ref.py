@@ -15,3 +15,32 @@ def storm_update_ref(p, m, g_new, g_old, lr, decay):
     m_new = (g_new.astype(jnp.float32)
              + decay * (m32 - g_old.astype(jnp.float32))).astype(m.dtype)
     return p_new, m_new
+
+
+def storm3_update_ref(p, m, g_new, g_old, lrs, decays, block):
+    """Triple-sequence reference: per-block (lr, decay) scalars expanded to
+    per-element, then the same fp32 elementwise update as the kernel.
+
+    Single source of the jnp math — kernel.py's ``storm3_*_flat_jnp``
+    lowerings (the off-TPU production path) delegate here, so the Pallas
+    kernel stays the only independent implementation and the
+    kernel-vs-ref test sweeps remain meaningful.
+    """
+    lr = jnp.repeat(jnp.asarray(lrs, jnp.float32), block)
+    decay = jnp.repeat(jnp.asarray(decays, jnp.float32), block)
+    m32 = m.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * m32).astype(p.dtype)
+    m_new = (g_new.astype(jnp.float32)
+             + decay * (m32 - g_old.astype(jnp.float32))).astype(m.dtype)
+    return p_new, m_new
+
+
+def storm3_step_ref(p, m, g_old, lrs, decays, block):
+    """Half-step reference: p − lr·m and the partial momentum
+    decay·(m − g_old) (the correction add happens post-communication)."""
+    lr = jnp.repeat(jnp.asarray(lrs, jnp.float32), block)
+    decay = jnp.repeat(jnp.asarray(decays, jnp.float32), block)
+    m32 = m.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * m32).astype(p.dtype)
+    m_part = (decay * (m32 - g_old.astype(jnp.float32))).astype(m.dtype)
+    return p_new, m_part

@@ -55,6 +55,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--fuse-storm", action="store_true",
+                    help="fedbioacc only: flat-buffer substrate + "
+                         "triple-sequence fused STORM update")
+    ap.add_argument("--fuse-oracles", action="store_true",
+                    help="share one linearization (and one batch) across "
+                         "the three oracle directions")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -64,7 +70,19 @@ def main(argv=None):
     fed = FederatedConfig(algorithm=args.algo, num_clients=args.clients,
                           local_steps=args.local_steps, lr_x=args.lr_x,
                           lr_y=args.lr_y, lr_u=args.lr_u)
-    init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False)
+    fuse_kw = {}
+    if args.fuse_oracles:
+        if args.algo not in ("fedbio", "fedbioacc"):
+            ap.error("--fuse-oracles requires --algo fedbio or fedbioacc")
+        fuse_kw["fuse_oracles"] = True
+    if args.fuse_storm:
+        if args.algo != "fedbioacc":
+            ap.error("--fuse-storm requires --algo fedbioacc")
+        fuse_kw["fuse_storm"] = True
+    init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False,
+                                    **fuse_kw)
+    # flat-substrate states expose pytree views for eval/checkpoint
+    as_view = step.views if hasattr(step, "views") else (lambda s: s)
     batch_fn = make_fed_batch_fn(cfg, num_clients=args.clients,
                                  per_client=args.per_client, seq_len=args.seq,
                                  seed=args.seed)
@@ -73,6 +91,7 @@ def main(argv=None):
     jstep = jax.jit(step, donate_argnums=(0,))
 
     def eval_loss(state):
+        state = as_view(state)
         p = (state.params if hasattr(state, "params")
              else {"body": state.x, "head": state.y})
         p0 = jax.tree.map(lambda v: v[0], p)
@@ -93,7 +112,7 @@ def main(argv=None):
                             "wall_s": round(time.time() - t0, 1)})
             print(json.dumps(history[-1]), flush=True)
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, state._asdict(),
+            save_checkpoint(args.ckpt_dir, as_view(state)._asdict(),
                             {"step": t + 1, "arch": cfg.name})
             print(f"checkpoint @ step {t+1} -> {args.ckpt_dir}")
     assert not any(jnp.isnan(jnp.asarray(h["val_loss"])) for h in history)

@@ -1,1 +1,13 @@
+# Optimizer substrate:
+#   optimizers — minimal pytree sgd/momentum/adam (no optax offline)
+#   flat       — flat-buffer STORM substrate: the (x, y, u) trees and their
+#                momenta are flattened once at init into contiguous per-dtype,
+#                tile-padded buffers; the triple-sequence Pallas kernel then
+#                advances all three FedBiOAcc momentum sequences in one launch
+#                (enabled via make_fedbioacc_train_step(..., fuse_storm=True)
+#                and FederatedConfig.fuse_storm for the core algorithms).
 from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401
+from repro.optim.flat import (FlatSpec, buffers_add, flatten_tree,  # noqa: F401
+                              make_spec, storm_full_update,
+                              storm_partial_step, unflatten_tree,
+                              zeros_buffers)

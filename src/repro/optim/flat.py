@@ -1,0 +1,244 @@
+"""Flat-buffer optimizer substrate for the STORM-accelerated train steps.
+
+FedBiOAcc runs STORM variance reduction on *three* parallel sequences — the
+body/ν, head/ω and auxiliary/q pairs — over the full parameter tree every
+local step. Expressed as per-leaf ``jax.tree.map`` chains that is ~9
+elementwise passes per step, each dispatched once per leaf; on accelerators
+it is pure HBM-bandwidth traffic and the dominant "memory term" of the step.
+
+This module flattens the (x, y, u) trees and their momenta **once at init**
+into contiguous per-dtype buffers and keeps all training state flat across
+steps (callers jit with buffer donation). Pytree views are materialized only
+at oracle / eval / checkpoint boundaries via ``unflatten_tree``.
+
+Layout (``FlatSpec``):
+
+* Leaves are grouped by dtype → one 1-D buffer per dtype.
+* Within a buffer, leaves are ordered by **section** (e.g. ``("x","y","u")``)
+  and each section is zero-padded up to the kernel tile size ``block``, so
+  every tile belongs to exactly one section. ``_Group.section_ids`` maps
+  tile → section; at step time the per-section (lr, decay) scalars are
+  gathered into per-tile SMEM tables for the triple-sequence Pallas kernel
+  (``storm3_step_flat`` / ``storm3_update_flat``).
+* Leaf offset metadata (``_Leaf``) makes flatten/unflatten pure
+  reshape+concat / slice+reshape — no data-dependent work.
+* Buffers may carry leading batch dims (``batch_dims=1`` for the federated
+  client axis M → buffers are [M, N]); ``client_mean`` on such a buffer is
+  ONE reduction per dtype instead of one per leaf.
+
+The padding tiles are zero and stay zero under every substrate op (the
+update is elementwise and 0 − lr·0 = 0), so round-trips are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.storm.kernel import (BLOCK, storm3_step_flat,
+                                        storm3_step_flat_jnp,
+                                        storm3_update_flat,
+                                        storm3_update_flat_jnp)
+
+
+class _Leaf(NamedTuple):
+    index: int          # position in the spec treedef's leaf order
+    shape: tuple        # original leaf shape (without batch dims)
+    size: int
+    offset: int         # element offset inside the dtype buffer
+
+
+class _Group(NamedTuple):
+    dtype: Any                  # np.dtype of the buffer
+    leaves: tuple               # of _Leaf, ascending offset
+    padded: int                 # buffer length — multiple of block
+    block: int
+    section_ids: np.ndarray     # [padded // block] int32 — tile → section
+
+
+class FlatSpec(NamedTuple):
+    treedef: Any
+    num_leaves: int
+    sections: tuple             # section names, () when unsectioned
+    groups: tuple               # of _Group
+
+
+def _round_up(n: int, block: int) -> int:
+    return n + (-n) % block
+
+
+def make_spec(tree, *, sections: Sequence[str] | None = None,
+              block: int = BLOCK) -> FlatSpec:
+    """Build the flat layout for ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``sections``: top-level dict keys of ``tree`` whose subtrees must occupy
+    contiguous, tile-aligned runs of each dtype buffer (the x|y|u segments of
+    the triple-sequence kernel). Buffer order follows ``sections``, not the
+    treedef's internal key order.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if sections is None:
+        sec_names = ()
+        sec_of_leaf = [0] * len(leaves)
+        n_sections = 1
+    else:
+        sec_names = tuple(sections)
+        # label every leaf with its section index, in treedef leaf order
+        # (dict flattening sorts keys the same way for tree and labels)
+        sec_of_leaf = jax.tree.leaves(
+            {k: jax.tree.map(lambda _, s=i: s, tree[k])
+             for i, k in enumerate(sec_names)})
+        assert len(sec_of_leaf) == len(leaves), "sections must cover the tree"
+        n_sections = len(sec_names)
+
+    # dtype groups, ordered by first appearance in (section, leaf) order
+    order = sorted(range(len(leaves)), key=lambda i: (sec_of_leaf[i], i))
+    dtypes: list = []
+    for i in order:
+        dt = np.dtype(leaves[i].dtype)
+        if dt not in dtypes:
+            dtypes.append(dt)
+
+    groups = []
+    for dt in dtypes:
+        lfs, sec_ids, offset = [], [], 0
+        for s in range(n_sections):
+            start = offset
+            for i in order:
+                if sec_of_leaf[i] != s or np.dtype(leaves[i].dtype) != dt:
+                    continue
+                shape = tuple(leaves[i].shape)
+                size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+                lfs.append(_Leaf(i, shape, size, offset))
+                offset += size
+            if offset > start:     # section present in this dtype group
+                offset = _round_up(offset, block)
+                sec_ids += [s] * ((offset - start) // block)
+        if not lfs:
+            continue
+        groups.append(_Group(dt, tuple(lfs), offset, block,
+                             np.asarray(sec_ids, np.int32)))
+    return FlatSpec(treedef, len(leaves), sec_names, tuple(groups))
+
+
+def flatten_tree(spec: FlatSpec, tree, *, batch_dims: int = 0, dtype=None):
+    """Pack ``tree`` into the spec's flat buffers (tuple, one per dtype).
+
+    Leaves may carry ``batch_dims`` leading axes (shared across the tree);
+    buffers then have shape ``batch_shape + (padded,)``. ``dtype`` overrides
+    every buffer's dtype (same layout) — used to keep momenta and oracle
+    gradients in f32 buffers alongside low-precision variable buffers.
+    """
+    leaves = spec.treedef.flatten_up_to(tree)
+    bufs = []
+    for grp in spec.groups:
+        out_dt = dtype if dtype is not None else grp.dtype
+        batch_shape = tuple(
+            jnp.shape(leaves[grp.leaves[0].index])[:batch_dims])
+        parts, cursor = [], 0
+        for lf in grp.leaves:
+            if lf.offset > cursor:
+                parts.append(jnp.zeros(batch_shape + (lf.offset - cursor,),
+                                       out_dt))
+            x = jnp.asarray(leaves[lf.index], out_dt)
+            parts.append(x.reshape(batch_shape + (-1,)))
+            cursor = lf.offset + lf.size
+        if cursor < grp.padded:
+            parts.append(jnp.zeros(batch_shape + (grp.padded - cursor,),
+                                   out_dt))
+        bufs.append(parts[0] if len(parts) == 1
+                    else jnp.concatenate(parts, axis=-1))
+    return tuple(bufs)
+
+
+def unflatten_tree(spec: FlatSpec, bufs):
+    """Materialize the pytree view of flat buffers (slice + reshape only)."""
+    leaves = [None] * spec.num_leaves
+    for grp, buf in zip(spec.groups, bufs):
+        batch_shape = tuple(buf.shape[:-1])
+        for lf in grp.leaves:
+            seg = buf[..., lf.offset:lf.offset + lf.size]
+            leaves[lf.index] = seg.reshape(batch_shape + lf.shape)
+    return spec.treedef.unflatten(leaves)
+
+
+def zeros_buffers(spec: FlatSpec, *, batch_shape: tuple = ()):
+    return tuple(jnp.zeros(batch_shape + (g.padded,), g.dtype)
+                 for g in spec.groups)
+
+
+def _per_tile(grp: _Group, buf, table):
+    """Per-section scalar table → per-tile SMEM array for ``buf``
+    (section pattern repeats over any leading batch dims)."""
+    reps = int(np.prod(buf.shape[:-1], dtype=np.int64)) if buf.ndim > 1 else 1
+    seg = np.tile(grp.section_ids, reps)
+    return jnp.stack(table)[seg]
+
+
+def _dispatch(interpret):
+    """Pick the lowering for the triple-sequence update.
+
+    ``interpret=None`` (the default) → the Pallas kernel, compiled, on TPU;
+    the bit-identical jnp lowering elsewhere (the interpreter validates the
+    kernel but is far slower than XLA's fused loops). An explicit True/False
+    forces the Pallas kernel with that interpret flag.
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return "pallas", False
+        return "jnp", None
+    return "pallas", interpret
+
+
+def storm_partial_step(spec: FlatSpec, var_bufs, mom_bufs, g_old_bufs,
+                       lrs, decays, *, interpret: bool | None = None):
+    """One fused triple-sequence launch per dtype buffer:
+
+        v_new  = v − lr_sec·m            (variable step, entering momentum)
+        m_part = decay_sec·(m − g_old)   (partial STORM momentum)
+
+    ``lrs``/``decays``: one scalar per section (traced OK). The correction
+    ``m_part + g_new`` is a single elementwise add once the new-iterate
+    oracle exists (after communication).
+    """
+    mode, flag = _dispatch(interpret)
+    out_v, out_m = [], []
+    for grp, v, m, go in zip(spec.groups, var_bufs, mom_bufs, g_old_bufs):
+        args = (v.reshape(-1), m.reshape(-1), go.reshape(-1),
+                _per_tile(grp, v, lrs), _per_tile(grp, v, decays))
+        if mode == "pallas":
+            vn, mn = storm3_step_flat(*args, block=grp.block, interpret=flag)
+        else:
+            vn, mn = storm3_step_flat_jnp(*args, block=grp.block)
+        out_v.append(vn.reshape(v.shape))
+        out_m.append(mn.reshape(m.shape))
+    return tuple(out_v), tuple(out_m)
+
+
+def storm_full_update(spec: FlatSpec, var_bufs, mom_bufs, g_new_bufs,
+                      g_old_bufs, lrs, decays, *,
+                      interpret: bool | None = None):
+    """Full fused update (v − lr·m, g_new + decay·(m − g_old)) — usable when
+    both oracle values are already in hand (benchmarks, single-shot tests)."""
+    mode, flag = _dispatch(interpret)
+    out_v, out_m = [], []
+    for grp, v, m, gn, go in zip(spec.groups, var_bufs, mom_bufs,
+                                 g_new_bufs, g_old_bufs):
+        args = (v.reshape(-1), m.reshape(-1), gn.reshape(-1), go.reshape(-1),
+                _per_tile(grp, v, lrs), _per_tile(grp, v, decays))
+        if mode == "pallas":
+            vn, mn = storm3_update_flat(*args, block=grp.block,
+                                        interpret=flag)
+        else:
+            vn, mn = storm3_update_flat_jnp(*args, block=grp.block)
+        out_v.append(vn.reshape(v.shape))
+        out_m.append(mn.reshape(m.shape))
+    return tuple(out_v), tuple(out_m)
+
+
+def buffers_add(a, b):
+    """Elementwise a + b over buffer tuples (the STORM correction add)."""
+    return tuple(x + y for x, y in zip(a, b))

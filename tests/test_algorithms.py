@@ -86,12 +86,19 @@ def test_local_lower_converges(prob, algo):
 def test_deterministic_drift_floor_scales_with_lr():
     """Theorem 1 structure: with constant step sizes the deterministic case
     converges to a client-drift bias floor ∝ C'_γ·γ² (in ‖∇h‖²). Halving the
-    learning rates must shrink the floor monotonically and substantially."""
+    learning rates must shrink the floor monotonically and substantially.
+
+    The ∝ γ scaling of ‖∇h‖ only holds in the asymptotic (small-γ) regime —
+    at γ_x ≥ 0.05 the floor is still dominated by the lower-level solve
+    inexactness and barely moves — so probe γ_x ∈ {0.05, 0.025, 0.0125} and
+    scale the round budget with 1/γ so every run actually reaches its floor
+    (the floors are fixed points: more rounds do not change them)."""
     prob = quadratic_problem(jax.random.PRNGKey(5), num_clients=4, dx=8, dy=8,
                              noise=0.0)
     floors = []
-    for lr in (0.1, 0.05, 0.025):
-        xT = _run(prob, "fedbio", rounds=600, lr_x=lr, lr_y=3 * lr, lr_u=3 * lr)
+    for lr in (0.05, 0.025, 0.0125):
+        xT = _run(prob, "fedbio", rounds=int(60 / lr), lr_x=lr,
+                  lr_y=3 * lr, lr_u=3 * lr)
         floors.append(float(jnp.linalg.norm(prob.exact_hypergrad(xT))))
     assert floors[0] > floors[1] > floors[2], floors
     assert floors[2] < 0.55 * floors[0], floors

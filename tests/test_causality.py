@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS
 from repro.models import build_model

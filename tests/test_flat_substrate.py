@@ -1,0 +1,337 @@
+"""Flat-buffer STORM substrate (repro.optim.flat): layout round-trips, the
+triple-sequence fused step vs the 9-pass tree-map reference (bit-exact), and
+end-to-end trajectory equivalence of fuse_storm=True/False in both the core
+algorithm and the model-scale trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import flat
+
+
+def _mixed_tree():
+    return {
+        "x": {"w": jnp.arange(24.0).reshape(4, 6),
+              "b": (jnp.arange(7, dtype=jnp.bfloat16), jnp.float32(3.5))},
+        "y": {"h": jnp.arange(5.0) * 2.0, "hb": jnp.full((3,), 2, jnp.bfloat16)},
+        "u": {"h": jnp.zeros((5,)), "hb": jnp.zeros((3,), jnp.bfloat16)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_mixed_dtypes():
+    tree = _mixed_tree()
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    bufs = flat.flatten_tree(spec, tree)
+    assert len(bufs) == 2                      # one buffer per dtype
+    assert all(b.shape[-1] % 8 == 0 for b in bufs)
+    back = flat.unflatten_tree(spec, bufs)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert jnp.asarray(a).dtype == b.dtype
+        assert jnp.shape(a) == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_roundtrip_with_client_axis():
+    tree = _mixed_tree()
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    M = 3
+    btree = jax.tree.map(
+        lambda v: jnp.broadcast_to(jnp.asarray(v)[None],
+                                   (M,) + jnp.shape(v)), tree)
+    bufs = flat.flatten_tree(spec, btree, batch_dims=1)
+    assert all(b.shape[0] == M for b in bufs)
+    back = flat.unflatten_tree(spec, bufs)
+    for a, b in zip(jax.tree.leaves(btree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_sections_are_tile_aligned_and_ordered():
+    tree = _mixed_tree()
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    for grp in spec.groups:
+        # every tile belongs to exactly one section, sections appear in order
+        ids = list(grp.section_ids)
+        assert ids == sorted(ids)
+        assert grp.padded == len(ids) * grp.block
+        for lf in grp.leaves:
+            assert lf.offset + lf.size <= grp.padded
+
+
+def test_padding_is_zero_and_stays_zero():
+    tree = {"x": {"w": jnp.ones((5,))}, "y": {"h": jnp.ones((3,))},
+            "u": {"h": jnp.ones((3,))}}
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    (buf,) = flat.flatten_tree(spec, tree)
+    mom = tuple(jnp.ones_like(b) for b in (buf,))
+    g_old = tuple(jnp.full_like(b, 2.0) for b in (buf,))
+    (vn,), (mn,) = flat.storm_partial_step(spec, (buf,), mom, g_old,
+                                           (0.5, 0.5, 0.5), (0.9, 0.9, 0.9))
+    (grp,) = spec.groups
+    mask = np.ones(grp.padded, bool)
+    for lf in grp.leaves:
+        mask[lf.offset:lf.offset + lf.size] = False
+    # flatten_tree zero-fills the pad lanes; the elementwise update (with a
+    # zero-padded momentum input) must keep them zero
+    np.testing.assert_array_equal(np.asarray(buf)[mask], 0.0)
+    vn2, _ = flat.storm_partial_step(
+        spec, (buf,), (jnp.zeros_like(buf),), (jnp.zeros_like(buf),),
+        (0.5, 0.5, 0.5), (0.9, 0.9, 0.9))
+    np.testing.assert_array_equal(np.asarray(vn2[0])[mask], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused triple-sequence step vs the 9-pass tree-map chain
+# ---------------------------------------------------------------------------
+
+def _rand_like(key, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    ks = jax.random.split(key, len(leaves))
+    return treedef.unflatten([jax.random.normal(k, jnp.shape(l))
+                              for k, l in zip(ks, leaves)])
+
+
+def test_fused_step_bitexact_vs_treemap_chain(rng):
+    """The fused launch == the tree-map reference, stage by stage, bit for
+    bit (both under jit, f32): (a) one triple-sequence launch vs the 6-pass
+    partial-momentum + variable-step chain, (b) the correction add vs the
+    3-pass per-leaf add. (The end-to-end composition is compared at 1-2 ulp
+    separately — XLA may FMA-contract decay·(m−o)+g across the tree-map
+    chain, which no two-launch schedule can reproduce exactly.)"""
+    sections = ("x", "y", "u")
+    vt = {"x": {"w": jax.random.normal(rng, (16, 33)),
+                "b": jax.random.normal(jax.random.fold_in(rng, 1), (7,))},
+          "y": {"h": jax.random.normal(jax.random.fold_in(rng, 2), (91,))},
+          "u": {"h": jax.random.normal(jax.random.fold_in(rng, 3), (91,))}}
+    mt = _rand_like(jax.random.fold_in(rng, 4), vt)
+    got = _rand_like(jax.random.fold_in(rng, 5), vt)   # old-iterate oracle
+    gnt = _rand_like(jax.random.fold_in(rng, 6), vt)   # new-iterate oracle
+    lrs = (0.05, 0.1, 0.2)
+    decays = (0.99, 0.98, 0.97)
+    spec = flat.make_spec(vt, sections=sections, block=64)
+
+    @jax.jit
+    def fused(vt, mt, got, gnt):
+        v_b, m_b, go_b, gn_b = (flat.flatten_tree(spec, t)
+                                for t in (vt, mt, got, gnt))
+        # interpret=True pins the Pallas kernel (the bit-exact claim is about
+        # the kernel; the off-TPU jnp lowering is checked at 1 ulp below)
+        v_b, mp_b = flat.storm_partial_step(spec, v_b, m_b, go_b, lrs, decays,
+                                            interpret=True)
+        m_b = flat.buffers_add(mp_b, gn_b)
+        return (flat.unflatten_tree(spec, v_b),
+                flat.unflatten_tree(spec, mp_b),
+                flat.unflatten_tree(spec, m_b))
+
+    @jax.jit
+    def fused_dispatched(vt, mt, got, gnt):
+        v_b, m_b, go_b, gn_b = (flat.flatten_tree(spec, t)
+                                for t in (vt, mt, got, gnt))
+        v_b, mp_b = flat.storm_partial_step(spec, v_b, m_b, go_b, lrs, decays)
+        m_b = flat.buffers_add(mp_b, gn_b)
+        return (flat.unflatten_tree(spec, v_b),
+                flat.unflatten_tree(spec, mp_b),
+                flat.unflatten_tree(spec, m_b))
+
+    @jax.jit
+    def unfused_partial(vt, mt, got):   # partial momentum ×3 + var step ×3
+        mp = {s: jax.tree.map(lambda m, o: decays[i] * (m - o),
+                              mt[s], got[s]) for i, s in enumerate(sections)}
+        vn = {s: jax.tree.map(lambda v, m: v - lrs[i] * m, vt[s], mt[s])
+              for i, s in enumerate(sections)}
+        return vn, mp
+
+    @jax.jit
+    def unfused_add(mp, gnt):           # correction add ×3
+        return {s: jax.tree.map(jnp.add, mp[s], gnt[s]) for s in sections}
+
+    va, mpa, ma = fused(vt, mt, got, gnt)
+    vb, mpb = unfused_partial(vt, mt, got)
+    for a, b in zip(jax.tree.leaves((va, mpa)), jax.tree.leaves((vb, mpb))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mb = unfused_add(mpb, gnt)          # same entering partial momentum
+    for a, b in zip(jax.tree.leaves(ma), jax.tree.leaves(mb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @jax.jit
+    def unfused_chain(vt, mt, got, gnt):   # fully fused-by-XLA composition
+        vn, mp = unfused_partial(vt, mt, got)
+        return vn, unfused_add(mp, gnt)
+    vc, mc = unfused_chain(vt, mt, got, gnt)
+    for a, b in zip(jax.tree.leaves((va, ma)), jax.tree.leaves((vc, mc))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+    # the backend-dispatched lowering (jnp off-TPU) tracks the kernel to
+    # FMA-contraction noise (≤ 1-2 ulp)
+    vd, mpd, md = fused_dispatched(vt, mt, got, gnt)
+    for a, b in zip(jax.tree.leaves((va, mpa, ma)),
+                    jax.tree.leaves((vd, mpd, md))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_full_update_matches_single_sequence_kernel(rng):
+    """storm_full_update over a sectioned spec == three independent
+    single-sequence reference updates."""
+    from repro.kernels.storm.ref import storm_update_ref
+    vt = {"x": jax.random.normal(rng, (200,)),
+          "y": jax.random.normal(jax.random.fold_in(rng, 1), (130,)),
+          "u": jax.random.normal(jax.random.fold_in(rng, 2), (130,))}
+    mt = _rand_like(jax.random.fold_in(rng, 3), vt)
+    gnt = _rand_like(jax.random.fold_in(rng, 4), vt)
+    got = _rand_like(jax.random.fold_in(rng, 5), vt)
+    lrs, decays = (0.1, 0.2, 0.3), (0.9, 0.8, 0.7)
+    spec = flat.make_spec(vt, sections=("x", "y", "u"), block=64)
+    bufs = [flat.flatten_tree(spec, t) for t in (vt, mt, gnt, got)]
+    # interpret=True forces the Pallas kernel (interpreted) through the flat
+    # layer; the default dispatch is also checked against it below
+    v_b, m_b = flat.storm_full_update(spec, *bufs, lrs, decays,
+                                      interpret=True)
+    vn = flat.unflatten_tree(spec, v_b)
+    mn = flat.unflatten_tree(spec, m_b)
+    for i, s in enumerate(("x", "y", "u")):
+        pr, mr = storm_update_ref(vt[s], mt[s], gnt[s], got[s],
+                                  lrs[i], decays[i])
+        np.testing.assert_allclose(np.asarray(vn[s]), np.asarray(pr),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(mn[s]), np.asarray(mr),
+                                   rtol=1e-6, atol=1e-7)
+    # backend-dispatched lowering (jnp off-TPU) == Pallas kernel
+    v_d, m_d = flat.storm_full_update(spec, *bufs, lrs, decays)
+    for a, b in zip(v_b + m_b, v_d + m_d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-7, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: fuse_storm=True trajectories match the unfused path
+# ---------------------------------------------------------------------------
+
+def test_core_fedbioacc_fuse_storm_matches():
+    from repro.config import FederatedConfig
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.3, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm="fedbioacc", num_clients=8,
+                              local_steps=4, lr_x=0.03, lr_y=0.1, lr_u=0.1,
+                              **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        rnd = jax.jit(alg.round)
+        key = jax.random.PRNGKey(2)
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            state, _ = rnd(state, sub)
+        return state
+
+    a, b = run(), run(fuse_storm=True)
+    for n in ("x", "y", "u", "omega", "nu", "q"):
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(b, n)),
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+
+
+def test_core_fedbioacc_fuse_oracles_matches_in_deterministic_limit():
+    """With noise=0 every oracle draw is identical, so sharing one batch
+    across the three directions must reproduce the unfused trajectory."""
+    from repro.config import FederatedConfig
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.0, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm="fedbioacc", num_clients=8,
+                              local_steps=4, lr_x=0.03, lr_y=0.1, lr_u=0.1,
+                              **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        state, _ = jax.jit(alg.round)(state, jax.random.PRNGKey(2))
+        return state
+
+    a, b = run(), run(fuse_oracles=True)
+    c = run(fuse_oracles=True, fuse_storm=True)
+    for n in ("x", "y", "u", "omega", "nu", "q"):
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(b, n)),
+                                   rtol=1e-6, atol=1e-6, err_msg=n)
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(c, n)),
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+
+
+def test_trainer_fuse_storm_matches_unfused_trajectory():
+    """fuse_storm=True must reproduce the unfused model-scale FedBiOAcc
+    trajectory (flat state end-to-end, pytree views only at boundaries)."""
+    from repro.config import FederatedConfig
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.federation.trainer import (FlatFedBiOAccTrainState,
+                                          make_fedbioacc_train_step)
+    from repro.models import build_model
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=4, local_steps=3, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=2, seq_len=32)
+
+    i1, s1 = make_fedbioacc_train_step(model, fed, n_micro=1, remat=False)
+    i2, s2 = make_fedbioacc_train_step(model, fed, n_micro=1, remat=False,
+                                       fuse_storm=True)
+    st1 = i1(jax.random.PRNGKey(0))
+    st2 = i2(jax.random.PRNGKey(0))
+    assert isinstance(st2, FlatFedBiOAccTrainState)
+    j1 = jax.jit(s1)
+    j2 = jax.jit(s2, donate_argnums=(0,))   # flat buffers are donated
+    key = jax.random.PRNGKey(1)
+    for _ in range(4):                       # crosses a communication round
+        key, sub = jax.random.split(key)
+        b = batch_fn(sub)
+        st1, _ = j1(st1, b)
+        st2, _ = j2(st2, b)
+    v2 = s2.views(st2)
+    assert int(v2.step) == int(st1.step) == 4
+    for n in ("x", "y", "u", "omega", "nu", "q"):
+        for a, b in zip(jax.tree.leaves(getattr(st1, n)),
+                        jax.tree.leaves(getattr(v2, n))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5, err_msg=n)
+
+
+def test_trainer_fuse_storm_bf16_keeps_f32_momenta():
+    """At bf16 the flat substrate must hold the STORM momenta in f32 buffers
+    (the unfused arithmetic promotes them the same way); variables stay bf16
+    and the step stays finite."""
+    from repro.config import FederatedConfig
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.federation.trainer import make_fedbioacc_train_step
+    from repro.models import build_model
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    model = build_model(cfg, dtype=jnp.bfloat16)
+    fed = FederatedConfig(num_clients=2, local_steps=2, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=2, per_client=2, seq_len=32)
+    init, step = make_fedbioacc_train_step(model, fed, n_micro=1,
+                                           remat=False, fuse_storm=True)
+    state = init(jax.random.PRNGKey(0))
+    assert all(b.dtype == jnp.float32 for b in state.mom)
+    assert any(b.dtype == jnp.bfloat16 for b in state.vars)
+    state, _ = jax.jit(step)(state, batch_fn(jax.random.PRNGKey(1)))
+    assert all(b.dtype == jnp.float32 for b in state.mom)
+    v = step.views(state)
+    for n in ("omega", "nu", "q"):
+        assert all(l.dtype == jnp.float32
+                   for l in jax.tree.leaves(getattr(v, n))), n
+    for leaf in jax.tree.leaves(state.vars) + jax.tree.leaves(state.mom):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))

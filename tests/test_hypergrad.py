@@ -53,7 +53,9 @@ def test_u_step_fixed_point(prob):
     np.testing.assert_allclose(u_fix, u_star, rtol=1e-4, atol=1e-5)
     u = jnp.zeros((5,))
     errs = []
-    for _ in range(60):
+    # contraction factor is 1 − τ·λ_min(Ag) ≈ 0.895 → 60 iterations land
+    # right AT the 1e-3 ratio (0.895⁶⁰ ≈ 1.3e-3); 90 give real margin
+    for _ in range(90):
         u = hg.u_step(prob.g, prob.f, x, y, u, b, b, tau=0.1)
         errs.append(float(jnp.linalg.norm(u - u_star)))
     assert errs[-1] < 1e-3 * errs[0]

@@ -3,7 +3,11 @@ communication operators, tree algebra, STORM telescoping, Neumann geometry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.tree_util import (client_mean, client_mean_grouped, tree_axpy,
                                   tree_sqnorm, tree_sub, tree_vdot)
