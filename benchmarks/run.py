@@ -204,6 +204,19 @@ def bench_linear_speedup(fast: bool):
 # Kernels
 # ---------------------------------------------------------------------------
 
+def _timeit_us(fn, n):
+    """Warmed, device-synchronized mean wall time per call in µs — shared by
+    the substrate benches so their recorded numbers stay methodologically
+    comparable."""
+    r = fn()
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
 def bench_kernels(fast: bool):
     from repro.kernels.flash.ops import flash_attention
     from repro.kernels.flash.ref import flash_attention_ref
@@ -254,6 +267,7 @@ def bench_kernels(fast: bool):
                             f"shape=2x256x128")
 
     bench_storm_triple(fast)
+    bench_storm_local(fast)
 
 
 def bench_storm_triple(fast: bool):
@@ -298,18 +312,9 @@ def bench_storm_triple(fast: bool):
         mn = {s: jax.tree.map(jnp.add, mp[s], gnt[s]) for s in sections}
         return vn, mn
 
-    def timeit(fn, n):
-        r = fn()
-        jax.block_until_ready(r)
-        t0 = time.perf_counter()
-        for _ in range(n):
-            r = fn()
-        jax.block_until_ready(r)
-        return (time.perf_counter() - t0) / n * 1e6
-
     reps = 10 if fast else 30
-    t_fused = timeit(lambda: fused_step(v_b, m_b, go_b, gn_b), reps)
-    t_tree = timeit(lambda: treemap_step(vt, mt, got, gnt), reps)
+    t_fused = _timeit_us(lambda: fused_step(v_b, m_b, go_b, gn_b), reps)
+    t_tree = _timeit_us(lambda: treemap_step(vt, mt, got, gnt), reps)
 
     # bytes-moved model (f32): the fused schedule streams v,m,g_old and
     # writes v',m_part (5N) + the correction add (3N) = 8N floats; the
@@ -339,6 +344,101 @@ def bench_storm_triple(fast: bool):
         # off-TPU the substrate lowers to the bit-identical jnp path; the
         # Pallas kernel (compiled) is the TPU production path
         "impl": "pallas" if jax.default_backend() == "tpu" else "jnp-flat",
+    }
+
+
+def bench_storm_local(fast: bool):
+    """Local-lower-level variants on the sequence-spec engine: the
+    dual-sequence fused step (Alg. 4: x/ν averaged, y/ω private) vs its
+    tree-map chain, and the section-masked communication (one sliced
+    reduction for x, private y untouched) vs the per-leaf tree-map mean."""
+    from repro.optim import flat
+
+    key = jax.random.PRNGKey(11)
+    leaf = 1 << 14
+    M = 4                               # the trainer's default client count
+    counts = {"x": 48, "y": 8}          # body-heavy tree, private heads
+    vt = {s: {f"l{i}": jax.random.normal(
+        jax.random.fold_in(key, 100 * j + i), (M, leaf))
+        for i in range(n)}
+        for j, (s, n) in enumerate(counts.items())}
+    rand = lambda off: jax.tree.map(
+        lambda v: jax.random.normal(jax.random.fold_in(key, off), v.shape), vt)
+    mt, got = rand(1), rand(2)
+    lrs, decays = (0.05, 0.1), (0.99, 0.98)
+    n_total = sum(counts.values()) * leaf
+    n_x = counts["x"] * leaf
+
+    block = 1 << 13
+    tmpl = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), vt)
+    spec = flat.make_spec(tmpl, sections=("x", "y"), block=block)
+    v_b, m_b, go_b = (flat.flatten_tree(spec, t, batch_dims=1)
+                      for t in (vt, mt, got))
+
+    @jax.jit
+    def fused_step(v_b, m_b, go_b):
+        v_b, mp_b = flat.storm_partial_step(spec, v_b, m_b, go_b, lrs, decays)
+        # the communicated sections only — private y/ω sliced around
+        v_b = flat.client_mean_masked(spec, v_b, ("mean", "none"))
+        return v_b, mp_b
+
+    @jax.jit
+    def treemap_step(vt, mt, got):
+        sections = ("x", "y")
+        mp = {s: jax.tree.map(lambda m, o: decays[i] * (m - o),
+                              mt[s], got[s]) for i, s in enumerate(sections)}
+        vn = {s: jax.tree.map(lambda v, m: v - lrs[i] * m, vt[s], mt[s])
+              for i, s in enumerate(sections)}
+        from repro.core.tree_util import client_mean
+        vn["x"] = client_mean(vn["x"])           # per-leaf comm, x only
+        return vn, mp
+
+    @jax.jit
+    def masked_comm(v_b):
+        return flat.client_mean_masked(spec, v_b, ("mean", "none"))
+
+    @jax.jit
+    def treemap_comm(vt):
+        from repro.core.tree_util import client_mean
+        return dict(vt, x=client_mean(vt["x"]))
+
+    reps = 10 if fast else 30
+    t_fused = _timeit_us(lambda: fused_step(v_b, m_b, go_b), reps)
+    t_tree = _timeit_us(lambda: treemap_step(vt, mt, got), reps)
+    t_mcomm = _timeit_us(lambda: masked_comm(v_b), reps)
+    t_tcomm = _timeit_us(lambda: treemap_comm(vt), reps)
+
+    emit("kernel/storm2_local_fused", t_fused,
+         f"treemap_us={t_tree:.0f};speedup={t_tree / t_fused:.2f}x;"
+         f"n={n_total};clients={M};private_frac="
+         f"{1 - n_x / n_total:.2f}")
+    emit("kernel/masked_comm", t_mcomm,
+         f"treemap_us={t_tcomm:.0f};speedup={t_tcomm / t_mcomm:.2f}x;"
+         f"reduced_elems={M * n_x};private_elems={M * (n_total - n_x)}")
+    KERNEL_JSON["storm_dual_local"] = {
+        "n_elements": n_total, "clients": M, "block": block,
+        "dtype": "float32",
+        "fused_us": round(t_fused, 1),
+        "treemap_us": round(t_tree, 1),
+        "speedup": round(t_tree / t_fused, 3),
+        "note": "dual-sequence Alg. 4 step (partial STORM + var step + "
+                "masked comm of x only; y/ω private) vs per-leaf tree-map "
+                "chain + per-leaf x mean; off-TPU this is the jnp fallback "
+                "— the kernel + single-all-reduce win is the TPU path",
+        "backend": jax.default_backend(),
+        "impl": "pallas" if jax.default_backend() == "tpu" else "jnp-flat",
+    }
+    KERNEL_JSON["masked_comm"] = {
+        "n_elements": n_total, "clients": M,
+        "communicated_elements": n_x,
+        "private_elements": n_total - n_x,
+        "masked_us": round(t_mcomm, 1),
+        "treemap_us": round(t_tcomm, 1),
+        "speedup": round(t_tcomm / t_mcomm, 3),
+        "note": "section-masked client mean (one sliced reduction for the "
+                "x run; private y tiles pass through bit-identical) vs "
+                "per-leaf tree-map client_mean over the x tree",
+        "backend": jax.default_backend(),
     }
 
 

@@ -1,16 +1,34 @@
 #!/usr/bin/env bash
-# Smoke gate: the tier-1 suite plus a fast benchmark pass (with the
-# machine-readable kernel perf artifact, BENCH_kernels.json).
+# Smoke gate: the tier-1 suite, a fused smoke-train of every federated
+# algorithm, and a fast benchmark pass (with the machine-readable kernel
+# perf artifact, BENCH_kernels.json).
 #
-#   ./scripts/check.sh            # full tier-1 + fast benchmarks
+#   ./scripts/check.sh            # full tier-1 + smoke trains + benchmarks
 #   ./scripts/check.sh --bench    # benchmarks only
+#   ./scripts/check.sh --smoke    # smoke trains only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-if [[ "${1:-}" != "--bench" ]]; then
+if [[ "${1:-}" != "--bench" && "${1:-}" != "--smoke" ]]; then
     python -m pytest -x -q
 fi
-python -m benchmarks.run --fast --json
+
+if [[ "${1:-}" != "--bench" ]]; then
+    # every algorithm end-to-end on the flat substrate (sequence-spec engine:
+    # fused STORM/heavy-ball updates + section-masked communication) with the
+    # fused oracles on — the exact path `--fuse-storm --fuse-oracles` users run
+    for algo in fedbio fedbioacc fedbio_local fedbioacc_local fedavg; do
+        echo "smoke-train: $algo (fused)"
+        python -m repro.launch.train --arch mamba2-130m --reduced \
+            --algo "$algo" --steps 2 --clients 2 --per-client 1 --seq 32 \
+            --local-steps 2 --neumann-q 2 --log-every 1 \
+            --fuse-storm --fuse-oracles
+    done
+fi
+
+if [[ "${1:-}" != "--smoke" ]]; then
+    python -m benchmarks.run --fast --json
+fi
 echo "check.sh: OK"

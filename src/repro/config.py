@@ -170,13 +170,15 @@ class FederatedConfig:
     hierarchy_period: int = 0
     hierarchy_groups: int = 2
     # §Perf fusion flags (core algorithms; the model-scale trainer takes the
-    # same switches as keyword args):
+    # same switches as keyword args — uniformly on every algorithm):
     # fuse_oracles — share one forward-over-reverse linearization across the
-    #   three oracle directions AND one minibatch across them (FedBiOAcc then
-    #   samples 1 batch/step instead of 5; hypergrad.fused_oracles)
-    # fuse_storm — advance all three STORM sequences (x/ν, y/ω, u/q) on the
-    #   flat-buffer substrate with one triple-sequence Pallas launch per step
-    #   (repro.optim.flat); fuse_storm_block overrides the kernel tile size
+    #   oracle directions AND one minibatch across them (FedBiOAcc samples
+    #   1 batch/step instead of 5, the local variants 1 instead of 3;
+    #   hypergrad.fused_oracles / hypergrad.fused_local_oracles)
+    # fuse_storm — run the algorithm's sequence spec on the flat-buffer
+    #   substrate (repro.optim.sequences): one fused Pallas launch per step
+    #   + section-masked communication (private sections never all-reduced);
+    #   fuse_storm_block overrides the kernel tile size
     fuse_oracles: bool = False
     fuse_storm: bool = False
     fuse_storm_block: int = 1024

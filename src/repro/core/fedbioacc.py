@@ -19,12 +19,15 @@ minibatch is evaluated at the old and new iterate — the STORM correction.
   oracle directions from ONE shared minibatch (``hypergrad.fused_oracles``);
   the step then samples 1 batch instead of 5.
 * ``fuse_storm`` — the scan carry keeps (x, y, u) and (ν, ω, q) as flat
-  per-dtype buffers (``repro.optim.flat``, flattened once per round) and the
-  9-pass tree-map momentum/variable chain becomes one triple-sequence Pallas
-  launch + one elementwise add per local step. The old-iterate oracle is
-  evaluated *before* the variable step (same value — it only reads the
-  entering iterate), which is what lets the variable step and the partial
-  momentum share a single launch.
+  per-dtype buffers (flattened once per round) and the 9-pass tree-map
+  momentum/variable chain becomes one triple-sequence Pallas launch + one
+  elementwise add per local step.  The fused loop is the **sequence-spec
+  engine** (``repro.optim.sequences``): FedBiOAcc is declared as three
+  STORM sequences (x/ν, y/ω, u/q — all hierarchically communicated) and the
+  engine compiles the spec into the flat-substrate step.  The old-iterate
+  oracle is evaluated *before* the variable step (same value — it only
+  reads the entering iterate), which is what lets the variable step and the
+  partial momentum share a single launch.
 """
 from __future__ import annotations
 
@@ -39,7 +42,7 @@ from repro.core import hypergrad as hg
 from repro.core.problems import Problem
 from repro.core.fedbio import Algorithm, _broadcast_clients
 from repro.core.tree_util import client_mean, tree_size, tree_zeros_like
-from repro.optim import flat
+from repro.optim import sequences as seqs
 
 
 class FedBiOAccState(NamedTuple):
@@ -57,7 +60,7 @@ def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
     f, g = problem.f, problem.g
 
     def alpha(t):
-        return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+        return seqs.alpha_schedule(cfg, t)
 
     if cfg.fuse_oracles:
         def sample(k):
@@ -121,45 +124,27 @@ def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
         q = lax.cond(is_comm, client_mean, lambda v: v, q)
         return (x_new, y_new, u_new, omega, nu, q, t + 1), None
 
-    # flat-buffer variant of the same step: one fused triple-sequence launch
-    # (variable step + partial momentum) + one add per local step
+    # flat-buffer variant of the same step: FedBiOAcc's sequence spec (three
+    # hierarchically-communicated STORM sequences) compiled by the engine —
+    # one fused triple-sequence launch + one add per local step
     x1s, y1s = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
-    spec = (flat.make_spec({"x": x1s, "y": y1s, "u": y1s},
-                           sections=("x", "y", "u"),
-                           block=cfg.fuse_storm_block)
-            if cfg.fuse_storm else None)
 
-    def body_flat(carry, inp):
-        vars_b, mom_b, t = carry
-        k, is_comm = inp
-        a = alpha(t)
-        ca2 = (a * a)
-        batches = sample(k)
-        vt = flat.unflatten_tree(spec, vars_b)
-        # old-iterate oracle FIRST — reads only the entering iterate, so the
-        # variable step and the partial momentum fuse into one launch
-        o_old, m_old, p_old = voracles(vt["x"], vt["y"], vt["u"], batches)
-        g_old = flat.flatten_tree(spec, {"x": m_old, "y": o_old, "u": p_old},
-                                  batch_dims=1, dtype=jnp.float32)
-        lrs = (cfg.lr_x * a, cfg.lr_y * a, cfg.lr_u * a)
-        decays = (1.0 - cfg.c_nu * ca2, 1.0 - cfg.c_omega * ca2,
-                  1.0 - cfg.c_u * ca2)
-        vars_b, mom_b = flat.storm_partial_step(spec, vars_b, mom_b,
-                                                g_old, lrs, decays)
-        vars_b = lax.cond(is_comm, client_mean, lambda v: v, vars_b)
-        vt2 = flat.unflatten_tree(spec, vars_b)
-        o_new, m_new, p_new = voracles(vt2["x"], vt2["y"], vt2["u"], batches)
-        g_new = flat.flatten_tree(spec, {"x": m_new, "y": o_new, "u": p_new},
-                                  batch_dims=1, dtype=jnp.float32)
-        mom_b = flat.buffers_add(mom_b, g_new)
-        mom_b = lax.cond(is_comm, client_mean, lambda v: v, mom_b)
-        return (vars_b, mom_b, t + 1), None
+    def oracle(vt, batches):
+        omega, mu, p = voracles(vt["x"], vt["y"], vt["u"], batches)
+        return {"x": mu, "y": omega, "u": p}
+
+    # without_hierarchy: the reference loop always uses the paper's flat
+    # averaging, so fuse_storm stays a pure perf switch for any cfg
+    engine = (seqs.make_engine(cfg, seqs.SPECS["fedbioacc"].without_hierarchy(),
+                               {"x": x1s, "y": y1s, "u": y1s}, oracle,
+                               block=cfg.fuse_storm_block)
+              if cfg.fuse_storm else None)
 
     def round(state: FedBiOAccState, key):
         I = cfg.local_steps
         keys = jax.random.split(key, I)
-        is_comm = jnp.arange(1, I + 1) == I          # communicate on last local step
         if not cfg.fuse_storm:
+            is_comm = jnp.arange(1, I + 1) == I      # communicate on last local step
             carry = (state.x, state.y, state.u, state.omega, state.nu,
                      state.q, state.t)
             carry, _ = lax.scan(body, carry, (keys, is_comm))
@@ -167,17 +152,18 @@ def make_fedbioacc(problem: Problem, cfg: FederatedConfig) -> Algorithm:
             return new, {"t": new.t}
         # flatten once per round; the scan carry stays flat across all I
         # local steps, pytree views appear only at the oracle boundaries
-        vars_b = flat.flatten_tree(
-            spec, {"x": state.x, "y": state.y, "u": state.u}, batch_dims=1)
-        mom_b = flat.flatten_tree(
-            spec, {"x": state.nu, "y": state.omega, "u": state.q},
-            batch_dims=1, dtype=jnp.float32)
-        (vars_b, mom_b, t), _ = lax.scan(body_flat, (vars_b, mom_b, state.t),
-                                         (keys, is_comm))
-        vt = flat.unflatten_tree(spec, vars_b)
-        mt = flat.unflatten_tree(spec, mom_b)
-        new = FedBiOAccState(vt["x"], vt["y"], vt["u"], mt["y"], mt["x"],
-                             mt["u"], t)
+        st = engine.init_state({"x": state.x, "y": state.y, "u": state.u},
+                               {"nu": state.nu, "omega": state.omega,
+                                "q": state.q},
+                               step=state.t)
+
+        def body_flat(carry, k):
+            return engine.step(carry, sample(k)), None
+
+        st, _ = lax.scan(body_flat, st, keys)
+        vt, mt = engine.views(st)
+        new = FedBiOAccState(vt["x"], vt["y"], vt["u"], mt["omega"],
+                             mt["nu"], mt["q"], st.step)
         return new, {"t": new.t}
 
     def mean_x(state):

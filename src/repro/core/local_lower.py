@@ -7,6 +7,16 @@ Each client keeps a private lower variable y^(m) (never communicated); the
 local hyper-gradient Φ^(m) is *unbiased* here and is estimated with the
 truncated Neumann series (Eq. 6, Q terms). Only the upper variable (Alg. 3)
 — plus its STORM momentum (Alg. 4) — is averaged every I steps.
+
+§Perf fusion flags (FederatedConfig), mirroring ``core.fedbioacc``:
+
+* ``fuse_oracles`` — ω and Φ from shared linearizations on ONE minibatch
+  (``hypergrad.fused_local_oracles``): 1 batch/step instead of 3.
+* ``fuse_storm`` — the scan carry lives on the flat-buffer substrate via the
+  sequence-spec engine (``repro.optim.sequences``).  Both algorithms are
+  *dual*-sequence specs with a PRIVATE y sequence: the section-masked
+  communication averages only the x (and, for Alg. 4, ν) tiles — the
+  private heads never enter a reduction.
 """
 from __future__ import annotations
 
@@ -21,6 +31,8 @@ from repro.core import hypergrad as hg
 from repro.core.fedbio import Algorithm, _broadcast_clients
 from repro.core.problems import Problem
 from repro.core.tree_util import client_mean, tree_axpy, tree_size
+
+from repro.optim import sequences as seqs
 
 
 class FedBiOLocalState(NamedTuple):
@@ -37,9 +49,54 @@ class FedBiOAccLocalState(NamedTuple):
     t: jnp.ndarray
 
 
+def _make_local_oracles(problem: Problem, cfg: FederatedConfig):
+    """(sample, voracles) pair for the local-lower oracle directions (ω, Φ).
+
+    With ``cfg.fuse_oracles`` one shared minibatch feeds both directions
+    through ``hg.fused_local_oracles``; otherwise the paper's three
+    independent batches (B_y, B_g, B_f) are drawn.
+    """
+    f, g = problem.f, problem.g
+    if cfg.fuse_oracles:
+        def sample(k):
+            return problem.sample_batches(k)
+
+        def oracles(x, y, b):
+            return hg.fused_local_oracles(g, f, x, y, b,
+                                          cfg.neumann_q, cfg.neumann_tau)
+    else:
+        def sample(k):
+            return tuple(problem.sample_batches(kk)
+                         for kk in jax.random.split(k, 3))
+
+        def oracles(x, y, batches):
+            by, bx_g, bx_f = batches
+            omega = hg.grad_y(g, x, y, by)
+            nu = hg.neumann_hypergrad(g, f, x, y, bx_g, bx_f,
+                                      cfg.neumann_q, cfg.neumann_tau)
+            return omega, nu
+
+    return sample, jax.vmap(oracles)
+
+
+def _make_local_engine(problem: Problem, cfg: FederatedConfig, voracles,
+                       algo: str):
+    x1s, y1s = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+
+    def oracle(vt, batches):
+        omega, nu = voracles(vt["x"], vt["y"], batches)
+        return {"x": nu, "y": omega}
+
+    # without_hierarchy: the reference loops always use the paper's flat
+    # averaging, so fuse_storm stays a pure perf switch for any cfg
+    return seqs.make_engine(cfg, seqs.SPECS[algo].without_hierarchy(),
+                            {"x": x1s, "y": y1s}, oracle,
+                            block=cfg.fuse_storm_block)
+
+
 def make_fedbio_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
     M = problem.num_clients
-    f, g = problem.f, problem.g
+    sample, voracles = _make_local_oracles(problem, cfg)
 
     def init(key):
         x1, y1 = problem.init_xy(key)
@@ -47,24 +104,28 @@ def make_fedbio_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
             _broadcast_clients(x1, M), _broadcast_clients(y1, M),
             jnp.zeros((), jnp.int32))
 
-    def local_step(x, y, batches):
-        by, bx_g, bx_f = batches
-        omega = hg.grad_y(g, x, y, by)
-        nu = hg.neumann_hypergrad(g, f, x, y, bx_g, bx_f,
-                                  cfg.neumann_q, cfg.neumann_tau)
-        return tree_axpy(-cfg.lr_x, nu, x), tree_axpy(-cfg.lr_y, omega, y)
-
-    vstep = jax.vmap(local_step)
+    engine = (_make_local_engine(problem, cfg, voracles, "fedbio_local")
+              if cfg.fuse_storm else None)
 
     def round(state, key):
+        keys = jax.random.split(key, cfg.local_steps)
+        if cfg.fuse_storm:
+            st = engine.init_state({"x": state.x, "y": state.y}, step=state.t)
+
+            def body_flat(carry, k):
+                return engine.step(carry, sample(k)), None
+
+            st, _ = lax.scan(body_flat, st, keys)
+            vt, _ = engine.views(st)
+            return (FedBiOLocalState(vt["x"], vt["y"], st.step),
+                    {"t": st.step})
+
         def body(carry, k):
             x, y = carry
-            ks = jax.random.split(k, 3)
-            batches = tuple(problem.sample_batches(kk) for kk in ks)
-            x, y = vstep(x, y, batches)
-            return (x, y), None
+            omega, nu = voracles(x, y, sample(k))
+            return (tree_axpy(-cfg.lr_x, nu, x),
+                    tree_axpy(-cfg.lr_y, omega, y)), None
 
-        keys = jax.random.split(key, cfg.local_steps)
         (x, y), _ = lax.scan(body, (state.x, state.y), keys)
         x = client_mean(x)                      # only x is communicated
         new = FedBiOLocalState(x, y, state.t + cfg.local_steps)
@@ -79,31 +140,39 @@ def make_fedbio_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
 
 def make_fedbioacc_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
     M = problem.num_clients
-    f, g = problem.f, problem.g
+    sample, voracles = _make_local_oracles(problem, cfg)
 
     def alpha(t):
-        return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
-
-    def oracles(x, y, batches):
-        by, bx_g, bx_f = batches
-        omega = hg.grad_y(g, x, y, by)
-        nu = hg.neumann_hypergrad(g, f, x, y, bx_g, bx_f,
-                                  cfg.neumann_q, cfg.neumann_tau)
-        return omega, nu
-
-    voracles = jax.vmap(oracles)
+        return seqs.alpha_schedule(cfg, t)
 
     def init(key):
         k1, k2 = jax.random.split(key)
         x1, y1 = problem.init_xy(k1)
         x = _broadcast_clients(x1, M)
         y = _broadcast_clients(y1, M)
-        ks = jax.random.split(k2, 3)
-        batches = tuple(problem.sample_batches(kk) for kk in ks)
-        omega, nu = voracles(x, y, batches)
+        omega, nu = voracles(x, y, sample(k2))
         return FedBiOAccLocalState(x, y, omega, nu, jnp.zeros((), jnp.int32))
 
+    engine = (_make_local_engine(problem, cfg, voracles, "fedbioacc_local")
+              if cfg.fuse_storm else None)
+
     def round(state, key):
+        I = cfg.local_steps
+        keys = jax.random.split(key, I)
+        if cfg.fuse_storm:
+            st = engine.init_state({"x": state.x, "y": state.y},
+                                   {"nu": state.nu, "omega": state.omega},
+                                   step=state.t)
+
+            def body_flat(carry, k):
+                return engine.step(carry, sample(k)), None
+
+            st, _ = lax.scan(body_flat, st, keys)
+            vt, mt = engine.views(st)
+            return (FedBiOAccLocalState(vt["x"], vt["y"], mt["omega"],
+                                        mt["nu"], st.step),
+                    {"t": st.step})
+
         def body(carry, inp):
             x, y, omega, nu, t = carry
             k, is_comm = inp
@@ -111,8 +180,7 @@ def make_fedbioacc_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
             x_new = jax.tree.map(lambda v, m: v - cfg.lr_x * a * m, x, nu)
             y_new = jax.tree.map(lambda v, m: v - cfg.lr_y * a * m, y, omega)
             x_new = lax.cond(is_comm, client_mean, lambda v: v, x_new)
-            ks = jax.random.split(k, 3)
-            batches = tuple(problem.sample_batches(kk) for kk in ks)
+            batches = sample(k)
             o_new, n_new = voracles(x_new, y_new, batches)
             o_old, n_old = voracles(x, y, batches)
             ca2 = a * a
@@ -127,8 +195,6 @@ def make_fedbioacc_local(problem: Problem, cfg: FederatedConfig) -> Algorithm:
             nu = lax.cond(is_comm, client_mean, lambda v: v, nu)   # ν averaged too
             return (x_new, y_new, omega, nu, t + 1), None
 
-        I = cfg.local_steps
-        keys = jax.random.split(key, I)
         is_comm = jnp.arange(1, I + 1) == I
         carry = (state.x, state.y, state.omega, state.nu, state.t)
         carry, _ = lax.scan(body, carry, (keys, is_comm))

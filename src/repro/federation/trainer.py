@@ -4,34 +4,37 @@ multi-pod dry-run lowers).
 Every federated state tensor carries a leading client axis M. Under pjit the
 axis is sharded over the mesh "data" axis (``client_sharded``) or left
 replicated with the parameters FSDP-sharded instead (``client_replicated``,
-for the memory-giant archs — see DESIGN.md §4). ``client_mean`` under
-``lax.cond(step % I == 0)`` is the paper's communication round.
+for the memory-giant archs — see DESIGN.md §4).
 
-Memory discipline (what makes llama3-405b lowerable):
+Every factory here is a thin declaration over the **sequence-spec engine**
+(``repro.optim.sequences``): the algorithm is a tuple of named sequences —
+(variable section, momentum, lr key, STORM-constant key, comm policy) — and
+the per-sequence communication policies drive BOTH code paths:
 
-* FedBiO keeps **one** body-sized persistent tensor per client (x); the ν
-  direction is transient.
-* FedBiOAcc keeps two (x and its STORM momentum ν). The STORM correction
-  needs the *previous* iterate — instead of storing a third body copy we
-  evaluate the old-iterate oracle **before** applying the update, so XLA can
-  free it (documented deviation: at communication steps the pre-averaging
-  local iterate is used as the "old" point, exactly as Alg. 2 lines 10-12).
+* unfused (default): per-leaf tree-map updates, communication through
+  ``sequences.comm_tree`` — so ``cfg.hierarchy_period`` is honored uniformly
+  by all five algorithms (fedbio_local/fedbioacc_local/fedavg previously
+  bypassed the hierarchical schedule);
+* ``fuse_storm=True``: the state lives on the flat-buffer substrate
+  (``repro.optim.flat``) as per-dtype [M, N] buffers; each step is one fused
+  triple-sequence Pallas launch (+ one correction add for the STORM kind)
+  and each communication is one *section-masked* reduction per dtype buffer
+  — PRIVATE sections (the local-lower y/ω) are sliced around the reduction
+  and pass through bit-identical, so private state provably never enters an
+  all-reduce.  The returned ``train_step`` then consumes/produces a
+  ``sequences.FlatState`` and exposes ``train_step.views(state)`` (legacy
+  pytree state for eval/checkpoint) and ``train_step.spec`` (the layout).
 
-Fused STORM substrate (``fuse_storm=True`` on ``make_fedbioacc_train_step``):
-the (x, y, u) trees and their three momenta are flattened ONCE at init into
-contiguous per-dtype [M, N] buffers (``repro.optim.flat``); the per-step
-9-pass ``jax.tree.map`` chain (partial momentum ×3, variable step ×3,
-correction add ×3) collapses to ONE triple-sequence Pallas launch plus one
-elementwise add, and each ``client_mean`` becomes one reduction per dtype
-buffer instead of one per leaf. The train state is then a
-``FlatFedBiOAccTrainState``; pytree views are materialized only at oracle
-boundaries inside the step and via ``train_step.views(state)`` for
-eval/checkpoint. Momenta live in f32 buffers regardless of the parameter
-dtype — the unfused arithmetic promotes them the same way, and the STORM
-correction g_new − g_old is a small difference bf16 would destroy. The
-fused trajectory matches the unfused one to float rounding for f32 states
-and to bf16 rounding for bf16 states (test-asserted in
-tests/test_flat_substrate.py).
+Memory discipline (what makes llama3-405b lowerable): the STORM correction
+needs the *previous* iterate — instead of storing another body copy we
+evaluate the old-iterate oracle **before** applying the update, so XLA can
+free it (documented deviation: at communication steps the pre-averaging
+local iterate is used as the "old" point, exactly as Alg. 2 lines 10-12).
+Momenta live in f32 buffers regardless of the parameter dtype — the unfused
+arithmetic promotes them the same way, and the STORM correction
+g_new − g_old is a small difference bf16 would destroy.  Fused trajectories
+match unfused ones to float rounding (test-asserted in
+tests/test_flat_substrate.py and tests/test_sequences.py).
 """
 from __future__ import annotations
 
@@ -39,14 +42,14 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.config import FederatedConfig
 from repro.core import hypergrad as hg
 from repro.core.model_problem import make_model_bilevel
-from repro.core.tree_util import client_mean, client_mean_grouped, tree_zeros_like
+from repro.core.tree_util import tree_zeros_like
 from repro.models.registry import Model
-from repro.optim import flat
+from repro.optim import sequences as seqs
+from repro.optim.sequences import FlatState
 
 
 class FedBiOTrainState(NamedTuple):
@@ -66,14 +69,11 @@ class FedBiOAccTrainState(NamedTuple):
     step: jnp.ndarray
 
 
-class FlatFedBiOAccTrainState(NamedTuple):
-    """FedBiOAcc state on the flat-buffer substrate (``fuse_storm=True``).
-
-    ``vars``/``mom`` are tuples of per-dtype [M, N] buffers holding the
-    x|y|u (resp. ν|ω|q) sections, tile-padded per ``repro.optim.flat``.
-    """
-    vars: Any
-    mom: Any
+class FedBiOAccLocalTrainState(NamedTuple):
+    x: Any
+    y: Any               # private per-client heads
+    omega: Any           # y-momentum (private)
+    nu: Any              # x-momentum (averaged with x)
     step: jnp.ndarray
 
 
@@ -83,35 +83,117 @@ class FedAvgTrainState(NamedTuple):
     step: jnp.ndarray
 
 
+# Back-compat alias: the fuse_storm=True state of every algorithm is the
+# engine's FlatState (vars/mom buffer tuples + step).
+FlatFedBiOAccTrainState = FlatState
+
+
 def _bcast(tree, m):
     return jax.tree.map(lambda v: jnp.broadcast_to(v[None], (m,) + v.shape), tree)
 
 
-def _cond_mean(pred, tree):
-    return lax.cond(pred, client_mean, lambda t: t, tree)
+def _sgd(v, g, lr):
+    return jax.tree.map(lambda a, b: a - lr * b.astype(a.dtype), v, g)
 
 
-def _comm(cfg: FederatedConfig, step, tree):
-    """Communication schedule: averaging every I steps; with
-    ``hierarchy_period = k > 0`` only every k-th round crosses pod groups
-    (pod-local grouped mean otherwise) — the beyond-paper hierarchical
-    schedule for the multi-pod mesh (cross-pod traffic ÷ k)."""
-    is_comm = (step + 1) % cfg.local_steps == 0
-    if cfg.hierarchy_period <= 0:
-        return _cond_mean(is_comm, tree)
-    round_idx = (step + 1) // cfg.local_steps
-    is_global = round_idx % cfg.hierarchy_period == 0
-
-    def do_comm(t):
-        return lax.cond(is_global, client_mean,
-                        lambda tt: client_mean_grouped(tt, cfg.hierarchy_groups),
-                        t)
-
-    return lax.cond(is_comm, do_comm, lambda t: t, tree)
+def _comm_seqs(cfg, step, aspec, trees: dict):
+    """Communicate trees keyed by SECTION name under the sections' policies
+    (momenta are passed under their sequence's section too — e.g. ν under
+    "x"); returns the same keys so pairings stay structural."""
+    pol = dict(zip(aspec.sections, aspec.policies))
+    return {name: seqs.comm_tree(cfg, step, t, pol[name])
+            for name, t in trees.items()}
 
 
-def _alpha(cfg: FederatedConfig, t):
-    return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+def _private_heads_init(model: Model, key, m: int):
+    """Per-client head inits for the local-lower algorithms (the private
+    lower variables are never synchronised, so they must not start equal)."""
+    keys = jax.random.split(key, m + 1)
+    p = model.init(keys[0])
+    heads = jax.tree.map(lambda *vs: jnp.stack(vs),
+                         *[model.init(k)["head"] for k in keys[1:]])
+    return p, heads
+
+
+def _global_lower_setup(model: Model, cfg: FederatedConfig, f, g,
+                        fuse_oracles: bool):
+    """(voracle, templates, init_trees) shared by fedbio/fedbioacc: the
+    three global-lower oracle directions (μ, ω, u-residual p) keyed by
+    section, x|y|u section templates, and the broadcast client init."""
+    M = cfg.num_clients
+
+    def oracle(v, batch):
+        x, y, u = v["x"], v["y"], v["u"]
+        if fuse_oracles:
+            omega, mu, p = hg.fused_oracles(g, f, x, y, u, batch)
+        else:
+            omega = hg.grad_y(g, x, y, batch)
+            mu = hg.nu_direction(g, f, x, y, u, batch, batch)
+            p = hg.u_residual(g, f, x, y, u, batch, batch)
+        return {"x": mu, "y": omega, "u": p}
+
+    tmpl = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    templates = {"x": tmpl["body"], "y": tmpl["head"], "u": tmpl["head"]}
+
+    def init_trees(key):
+        p = model.init(key)
+        return {"x": _bcast(p["body"], M), "y": _bcast(p["head"], M),
+                "u": _bcast(tree_zeros_like(p["head"]), M)}
+
+    return jax.vmap(oracle), templates, init_trees
+
+
+def _local_lower_setup(model: Model, cfg: FederatedConfig, f, g,
+                       fuse_oracles: bool):
+    """(voracle, templates, init_trees) shared by the local-lower variants:
+    the (Φ, ω) oracle pair keyed by section, x|y templates, and the
+    broadcast-body / private-heads client init."""
+    M = cfg.num_clients
+
+    def oracle(v, batch):
+        x, y = v["x"], v["y"]
+        if fuse_oracles:
+            omega, nu = hg.fused_local_oracles(g, f, x, y, batch,
+                                               cfg.neumann_q, cfg.neumann_tau)
+        else:
+            omega = hg.grad_y(g, x, y, batch)
+            nu = hg.neumann_hypergrad(g, f, x, y, batch, batch,
+                                      cfg.neumann_q, cfg.neumann_tau)
+        return {"x": nu, "y": omega}
+
+    tmpl = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    templates = {"x": tmpl["body"], "y": tmpl["head"]}
+
+    def init_trees(key):
+        p, heads = _private_heads_init(model, key, M)
+        return {"x": _bcast(p["body"], M), "y": heads}
+
+    return jax.vmap(oracle), templates, init_trees
+
+
+def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
+                    init_trees, storm_block, to_state):
+    """fuse_storm=True path shared by all factories: compile the sequence
+    spec into the flat-substrate engine and wrap it as (init, train_step)."""
+    engine = seqs.make_engine(cfg, aspec, templates, voracle,
+                              block=storm_block)
+
+    def init(key):
+        return engine.init_state(init_trees(key))
+
+    def train_step(state: FlatState, batch):
+        new = engine.step(state, batch)
+        return new, {"step": new.step}
+
+    def views(state: FlatState):
+        vt, mt = engine.views(state)
+        return to_state(vt, mt, state.step)
+
+    train_step.spec = engine.spec
+    train_step.views = views
+    init.spec = engine.spec
+    init.views = views
+    return init, train_step
 
 
 # ---------------------------------------------------------------------------
@@ -121,42 +203,35 @@ def _alpha(cfg: FederatedConfig, t):
 def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            n_micro: int = 1, remat: bool = True,
                            use_flash: bool = False, use_lru_kernel: bool = False,
-                           fuse_oracles: bool = False):
+                           fuse_oracles: bool = False,
+                           fuse_storm: bool = False,
+                           storm_block: int | None = None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    M = cfg.num_clients
+    aspec = seqs.SPECS["fedbio"]
+    voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
+                                                         fuse_oracles)
+
+    if fuse_storm:
+        def to_state(vt, mt, step):
+            return FedBiOTrainState(vt["x"], vt["y"], vt["u"], step)
+
+        return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
+                               storm_block, to_state)
 
     def init(key):
-        p = model.init(key)
-        x, y = p["body"], p["head"]
-        return FedBiOTrainState(_bcast(x, M), _bcast(y, M),
-                                _bcast(tree_zeros_like(y), M),
+        tr = init_trees(key)
+        return FedBiOTrainState(tr["x"], tr["y"], tr["u"],
                                 jnp.zeros((), jnp.int32))
 
-    def local(x, y, u, batch):
-        if fuse_oracles:
-            omega, mu, p = hg.fused_oracles(g, f, x, y, u, batch)
-            nu = mu
-            u_new = jax.tree.map(lambda v, r: v - cfg.lr_u * r.astype(v.dtype),
-                                 u, p)
-        else:
-            omega = hg.grad_y(g, x, y, batch)
-            nu = hg.nu_direction(g, f, x, y, u, batch, batch)
-            u_new = hg.u_step(g, f, x, y, u, batch, batch, cfg.lr_u)
-        y_new = jax.tree.map(lambda v, o: v - cfg.lr_y * o.astype(v.dtype), y, omega)
-        x_new = jax.tree.map(lambda v, o: v - cfg.lr_x * o.astype(v.dtype), x, nu)
-        return x_new, y_new, u_new
-
-    vlocal = jax.vmap(local)
-
     def train_step(state: FedBiOTrainState, batch):
-        x, y, u = vlocal(state.x, state.y, state.u, batch)
-        x = _comm(cfg, state.step, x)
-        y = _comm(cfg, state.step, y)
-        u = _comm(cfg, state.step, u)
-        new = FedBiOTrainState(x, y, u, state.step + 1)
-        # cheap progress metric: lower loss on the train stream of client 0
+        gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
+        x = _sgd(state.x, gd["x"], cfg.lr_x)
+        y = _sgd(state.y, gd["y"], cfg.lr_y)
+        u = _sgd(state.u, gd["u"], cfg.lr_u)
+        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y, "u": u})
+        new = FedBiOTrainState(cd["x"], cd["y"], cd["u"], state.step + 1)
         return new, {"step": new.step}
 
     return init, train_step
@@ -176,60 +251,44 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
-    three oracle directions (see ``hypergrad.fused_oracles``).
-
-    ``fuse_storm`` switches the state to the flat-buffer substrate: the init
-    flattens (x, y, u) and the three momenta into per-dtype [M, N] buffers
-    and the step advances all three STORM sequences with one triple-sequence
-    Pallas launch + one add. The returned ``train_step`` then consumes and
-    produces ``FlatFedBiOAccTrainState`` and exposes
-    ``train_step.views(state) -> FedBiOAccTrainState`` (pytree views for
-    eval/checkpoint) and ``train_step.spec`` (the buffer layout).
+    three oracle directions (see ``hypergrad.fused_oracles``).  ``fuse_storm``
+    switches to the flat-substrate engine (see the module docstring);
     ``storm_block`` overrides the kernel tile size (testing/small models).
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    M = cfg.num_clients
-
-    def oracles(x, y, u, batch):
-        if fuse_oracles:
-            return hg.fused_oracles(g, f, x, y, u, batch)
-        omega = hg.grad_y(g, x, y, batch)
-        mu = hg.nu_direction(g, f, x, y, u, batch, batch)
-        p = hg.u_residual(g, f, x, y, u, batch, batch)
-        return omega, mu, p
-
-    voracles = jax.vmap(oracles)
-
-    def init_trees(key):
-        p = model.init(key)
-        x, y = _bcast(p["body"], M), _bcast(p["head"], M)
-        u = _bcast(tree_zeros_like(p["head"]), M)
-        return x, y, u
+    aspec = seqs.SPECS["fedbioacc"]
+    voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
+                                                         fuse_oracles)
 
     if fuse_storm:
-        return _make_fedbioacc_flat(model, cfg, voracles, init_trees,
-                                    storm_block)
+        def to_state(vt, mt, step):
+            return FedBiOAccTrainState(vt["x"], vt["y"], vt["u"], mt["omega"],
+                                       mt["nu"], mt["q"], step)
+
+        return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
+                               storm_block, to_state)
 
     def init(key):
-        x, y, u = init_trees(key)
+        tr = init_trees(key)
         return FedBiOAccTrainState(
-            x, y, u, tree_zeros_like(y), tree_zeros_like(x), tree_zeros_like(u),
+            tr["x"], tr["y"], tr["u"], tree_zeros_like(tr["y"]),
+            tree_zeros_like(tr["x"]), tree_zeros_like(tr["u"]),
             jnp.zeros((), jnp.int32))
 
     def train_step(state: FedBiOAccTrainState, batch):
         t = state.step
-        a = _alpha(cfg, t)
-        decay = 1.0 - cfg.c_nu * a * a     # shared c for the fused path
+        a = seqs.alpha_schedule(cfg, t)
         # 1) old-iterate oracle FIRST (frees the old body afterwards)
-        o_old, m_old, p_old = voracles(state.x, state.y, state.u, batch)
-        # 2) partial momentum: m ← (1-cα²)(m − o_old)
+        gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
+        # 2) partial momentum: m ← (1-cα²)(m − g_old)
         omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
-                             state.omega, o_old)
-        nu = jax.tree.map(lambda m, o: decay * (m - o), state.nu, m_old)
+                             state.omega, gd["y"])
+        nu = jax.tree.map(lambda m, o: (1.0 - cfg.c_nu * a * a) * (m - o),
+                          state.nu, gd["x"])
         q = jax.tree.map(lambda m, o: (1.0 - cfg.c_u * a * a) * (m - o),
-                         state.q, p_old)
+                         state.q, gd["u"])
         # 3) variable update with the *entering* momenta (Alg. 2 line 4)
         x = jax.tree.map(lambda v, m: v - (cfg.lr_x * a * m).astype(v.dtype),
                          state.x, state.nu)
@@ -237,78 +296,17 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                          state.y, state.omega)
         u = jax.tree.map(lambda v, m: v - (cfg.lr_u * a * m).astype(v.dtype),
                          state.u, state.q)
-        x, y, u = _comm(cfg, t, x), _comm(cfg, t, y), _comm(cfg, t, u)
+        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y, "u": u})
+        x, y, u = cd["x"], cd["y"], cd["u"]
         # 4) new-iterate oracle, same batch (STORM correction)
-        o_new, m_new, p_new = voracles(x, y, u, batch)
-        omega = jax.tree.map(jnp.add, omega, o_new)
-        nu = jax.tree.map(jnp.add, nu, m_new)
-        q = jax.tree.map(jnp.add, q, p_new)
-        omega = _comm(cfg, t, omega)
-        nu = _comm(cfg, t, nu)
-        q = _comm(cfg, t, q)
-        new = FedBiOAccTrainState(x, y, u, omega, nu, q, t + 1)
+        gd2 = voracle({"x": x, "y": y, "u": u}, batch)
+        omega = jax.tree.map(jnp.add, omega, gd2["y"])
+        nu = jax.tree.map(jnp.add, nu, gd2["x"])
+        q = jax.tree.map(jnp.add, q, gd2["u"])
+        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega, "u": q})
+        new = FedBiOAccTrainState(x, y, u, md["y"], md["x"], md["u"], t + 1)
         return new, {"step": new.step}
 
-    return init, train_step
-
-
-def _make_fedbioacc_flat(model: Model, cfg: FederatedConfig, voracles,
-                         init_trees, storm_block):
-    """fuse_storm=True path: flat-buffer state + triple-sequence kernel."""
-    tmpl = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    # u shares the head's structure/dtypes (tree_zeros_like at init)
-    spec = flat.make_spec(
-        {"x": tmpl["body"], "y": tmpl["head"], "u": tmpl["head"]},
-        sections=("x", "y", "u"),
-        block=storm_block if storm_block else flat.BLOCK)
-
-    def init(key):
-        x, y, u = init_trees(key)
-        vars_b = flat.flatten_tree(spec, {"x": x, "y": y, "u": u},
-                                   batch_dims=1)
-        # momenta live in f32 buffers regardless of the variable dtype —
-        # the unfused path promotes them the same way (f32 schedule scalar ×
-        # momentum), and the STORM correction g_new − g_old is a small
-        # difference bf16 would largely destroy
-        mom_b = tuple(jnp.zeros(b.shape, jnp.float32) for b in vars_b)
-        return FlatFedBiOAccTrainState(vars_b, mom_b,
-                                       jnp.zeros((), jnp.int32))
-
-    def train_step(state: FlatFedBiOAccTrainState, batch):
-        t = state.step
-        a = _alpha(cfg, t)
-        # 1) old-iterate oracle on transient pytree views
-        vt = flat.unflatten_tree(spec, state.vars)
-        o_old, m_old, p_old = voracles(vt["x"], vt["y"], vt["u"], batch)
-        g_old = flat.flatten_tree(spec, {"x": m_old, "y": o_old, "u": p_old},
-                                  batch_dims=1, dtype=jnp.float32)
-        # 2+3) partial momentum + variable step: ONE fused launch per dtype
-        # (scalar order matches the unfused expressions bit-for-bit)
-        lrs = (cfg.lr_x * a, cfg.lr_y * a, cfg.lr_u * a)
-        decays = (1.0 - cfg.c_nu * a * a, 1.0 - cfg.c_omega * a * a,
-                  1.0 - cfg.c_u * a * a)
-        vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
-                                                g_old, lrs, decays)
-        vars_b = _comm(cfg, t, vars_b)      # one all-reduce per dtype buffer
-        # 4) new-iterate oracle, same batch; STORM correction is one add
-        vt2 = flat.unflatten_tree(spec, vars_b)
-        o_new, m_new, p_new = voracles(vt2["x"], vt2["y"], vt2["u"], batch)
-        g_new = flat.flatten_tree(spec, {"x": m_new, "y": o_new, "u": p_new},
-                                  batch_dims=1, dtype=jnp.float32)
-        mom_b = flat.buffers_add(mom_b, g_new)
-        mom_b = _comm(cfg, t, mom_b)
-        new = FlatFedBiOAccTrainState(vars_b, mom_b, t + 1)
-        return new, {"step": new.step}
-
-    def views(state: FlatFedBiOAccTrainState) -> FedBiOAccTrainState:
-        vt = flat.unflatten_tree(spec, state.vars)
-        mt = flat.unflatten_tree(spec, state.mom)
-        return FedBiOAccTrainState(vt["x"], vt["y"], vt["u"], mt["y"],
-                                   mt["x"], mt["u"], state.step)
-
-    train_step.spec = spec
-    train_step.views = views
-    init.spec = spec
     return init, train_step
 
 
@@ -320,41 +318,41 @@ def _make_fedbioacc_flat(model: Model, cfg: FederatedConfig, voracles,
 def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  n_micro: int = 1, remat: bool = True,
                                  use_flash: bool = False,
-                                 use_lru_kernel: bool = False):
+                                 use_lru_kernel: bool = False,
+                                 fuse_oracles: bool = False,
+                                 fuse_storm: bool = False,
+                                 storm_block: int | None = None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
-    series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated."""
+    series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
+    the y sequence is declared PRIVATE and never enters a reduction."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    M = cfg.num_clients
+    aspec = seqs.SPECS["fedbio_local"]
+    voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
+                                                        fuse_oracles)
+
+    if fuse_storm:
+        def to_state(vt, mt, step):
+            # legacy state carries an (unused) u slot — zeros, like init
+            return FedBiOTrainState(vt["x"], vt["y"],
+                                    tree_zeros_like(vt["y"]), step)
+
+        return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
+                               storm_block, to_state)
 
     def init(key):
-        keys = jax.random.split(key, M + 1)
-        p = model.init(keys[0])
-        # heads start from per-client inits (they are never synchronised)
-        heads = jax.tree.map(
-            lambda *vs: jnp.stack(vs),
-            *[model.init(k)["head"] for k in keys[1:]])
-        return FedBiOTrainState(_bcast(p["body"], M), heads,
-                                _bcast(tree_zeros_like(p["head"]), M),
+        tr = init_trees(key)
+        return FedBiOTrainState(tr["x"], tr["y"], tree_zeros_like(tr["y"]),
                                 jnp.zeros((), jnp.int32))
 
-    def local(x, y, batch):
-        omega = hg.grad_y(g, x, y, batch)
-        nu = hg.neumann_hypergrad(g, f, x, y, batch, batch,
-                                  cfg.neumann_q, cfg.neumann_tau)
-        y_new = jax.tree.map(lambda v, o: v - cfg.lr_y * o.astype(v.dtype), y, omega)
-        x_new = jax.tree.map(lambda v, o: v - cfg.lr_x * o.astype(v.dtype), x, nu)
-        return x_new, y_new
-
-    vlocal = jax.vmap(local)
-
     def train_step(state: FedBiOTrainState, batch):
-        x, y = vlocal(state.x, state.y, batch)
-        is_comm = (state.step + 1) % cfg.local_steps == 0
-        x = _cond_mean(is_comm, x)             # ONLY the body is averaged
-        new = FedBiOTrainState(x, y, state.u, state.step + 1)
+        gd = voracle({"x": state.x, "y": state.y}, batch)
+        x = _sgd(state.x, gd["x"], cfg.lr_x)
+        y = _sgd(state.y, gd["y"], cfg.lr_y)
+        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y})
+        new = FedBiOTrainState(cd["x"], cd["y"], state.u, state.step + 1)
         return new, {"step": new.step}
 
     return init, train_step
@@ -364,62 +362,55 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
 # FedBiOAcc with local lower level (Algorithm 4) at model scale
 # ---------------------------------------------------------------------------
 
-class FedBiOAccLocalTrainState(NamedTuple):
-    x: Any
-    y: Any               # private per-client heads
-    omega: Any           # y-momentum (private)
-    nu: Any              # x-momentum (averaged with x)
-    step: jnp.ndarray
-
-
 def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     n_micro: int = 1, remat: bool = True,
                                     use_flash: bool = False,
-                                    use_lru_kernel: bool = False):
-    """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated."""
+                                    use_lru_kernel: bool = False,
+                                    fuse_oracles: bool = False,
+                                    fuse_storm: bool = False,
+                                    storm_block: int | None = None):
+    """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
+    (the y/ω sequence is PRIVATE)."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    M = cfg.num_clients
+    aspec = seqs.SPECS["fedbioacc_local"]
+    voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
+                                                        fuse_oracles)
 
-    def oracles(x, y, batch):
-        omega = hg.grad_y(g, x, y, batch)
-        nu = hg.neumann_hypergrad(g, f, x, y, batch, batch,
-                                  cfg.neumann_q, cfg.neumann_tau)
-        return omega, nu
+    if fuse_storm:
+        def to_state(vt, mt, step):
+            return FedBiOAccLocalTrainState(vt["x"], vt["y"], mt["omega"],
+                                            mt["nu"], step)
 
-    voracles = jax.vmap(oracles)
+        return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
+                               storm_block, to_state)
 
     def init(key):
-        keys = jax.random.split(key, M + 1)
-        p = model.init(keys[0])
-        heads = jax.tree.map(
-            lambda *vs: jnp.stack(vs),
-            *[model.init(k)["head"] for k in keys[1:]])
-        x = _bcast(p["body"], M)
+        tr = init_trees(key)
         return FedBiOAccLocalTrainState(
-            x, heads, tree_zeros_like(heads), tree_zeros_like(x),
-            jnp.zeros((), jnp.int32))
+            tr["x"], tr["y"], tree_zeros_like(tr["y"]),
+            tree_zeros_like(tr["x"]), jnp.zeros((), jnp.int32))
 
     def train_step(state: FedBiOAccLocalTrainState, batch):
         t = state.step
-        a = _alpha(cfg, t)
-        o_old, n_old = voracles(state.x, state.y, batch)
+        a = seqs.alpha_schedule(cfg, t)
+        gd = voracle({"x": state.x, "y": state.y}, batch)
         omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
-                             state.omega, o_old)
+                             state.omega, gd["y"])
         nu = jax.tree.map(lambda m, o: (1.0 - cfg.c_nu * a * a) * (m - o),
-                          state.nu, n_old)
+                          state.nu, gd["x"])
         x = jax.tree.map(lambda v, m: v - (cfg.lr_x * a * m).astype(v.dtype),
                          state.x, state.nu)
         y = jax.tree.map(lambda v, m: v - (cfg.lr_y * a * m).astype(v.dtype),
                          state.y, state.omega)
-        is_comm = (t + 1) % cfg.local_steps == 0
-        x = _cond_mean(is_comm, x)              # x averaged, y private
-        o_new, n_new = voracles(x, y, batch)
-        omega = jax.tree.map(jnp.add, omega, o_new)
-        nu = jax.tree.map(jnp.add, nu, n_new)
-        nu = _cond_mean(is_comm, nu)            # ν averaged too (Alg. 4 l.14)
-        new = FedBiOAccLocalTrainState(x, y, omega, nu, t + 1)
+        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y})   # x averaged, y private
+        x, y = cd["x"], cd["y"]
+        gd2 = voracle({"x": x, "y": y}, batch)
+        omega = jax.tree.map(jnp.add, omega, gd2["y"])
+        nu = jax.tree.map(jnp.add, nu, gd2["x"])
+        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega})  # ν too (Alg. 4 l.14)
+        new = FedBiOAccLocalTrainState(x, y, md["y"], md["x"], t + 1)
         return new, {"step": new.step}
 
     return init, train_step
@@ -432,7 +423,10 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            n_micro: int = 1, remat: bool = True,
                            momentum: float = 0.9, use_flash: bool = False,
-                           use_lru_kernel: bool = False):
+                           use_lru_kernel: bool = False,
+                           fuse_oracles: bool = False,   # no-op: one oracle
+                           fuse_storm: bool = False,
+                           storm_block: int | None = None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -443,23 +437,37 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
         return _microbatch_mean(one, batch, n_micro)
 
     M = cfg.num_clients
+    aspec = seqs.SPECS["fedavg"]._replace(beta=momentum)
+
+    def oracle(v, batch):
+        return {"params": jax.grad(loss_fn)(v["params"], batch["train"])}
+
+    voracle = jax.vmap(oracle)
+    templates = {"params": jax.eval_shape(model.init, jax.random.PRNGKey(0))}
+
+    def init_trees(key):
+        return {"params": _bcast(model.init(key), M)}
+
+    if fuse_storm:
+        def to_state(vt, mt, step):
+            return FedAvgTrainState(vt["params"], mt["mom"], step)
+
+        return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
+                               storm_block, to_state)
 
     def init(key):
-        p = model.init(key)
-        return FedAvgTrainState(_bcast(p, M), _bcast(tree_zeros_like(p), M),
+        tr = init_trees(key)
+        return FedAvgTrainState(tr["params"], tree_zeros_like(tr["params"]),
                                 jnp.zeros((), jnp.int32))
 
-    vgrad = jax.vmap(jax.grad(loss_fn))
-
     def train_step(state: FedAvgTrainState, batch):
-        grads = vgrad(state.params, batch["train"])
+        grads = voracle({"params": state.params}, batch)["params"]
         mom = jax.tree.map(lambda m, gr: momentum * m + gr.astype(m.dtype),
                            state.mom, grads)
         params = jax.tree.map(lambda p, m: p - (cfg.lr_x * m).astype(p.dtype),
                               state.params, mom)
-        is_comm = (state.step + 1) % cfg.local_steps == 0
-        params = _cond_mean(is_comm, params)
-        mom = _cond_mean(is_comm, mom)
+        params = _comm_seqs(cfg, state.step, aspec, {"params": params})["params"]
+        mom = _comm_seqs(cfg, state.step, aspec, {"params": mom})["params"]
         new = FedAvgTrainState(params, mom, state.step + 1)
         return new, {"step": new.step}
 

@@ -27,6 +27,12 @@ Two kernel families live here:
   momentum ``decay·(m − g_old)``) used inside the real train step, where the
   new-iterate oracle — and hence ``g_new`` — only exists after the updated
   variables have been communicated.
+* ``momsgd3_step_flat`` / ``sgd3_step_flat`` — the heavy-ball and plain-SGD
+  companions used by the sequence-spec engine (``repro.optim.sequences``)
+  for the non-STORM algorithms: ``m' = β·m + g`` then ``p' = p − lr·m'``
+  (FedAvg applies the *updated* momentum), and the momentum-less
+  ``p' = p − lr·g`` (FedBiO / FedBiO-Local — 2 reads + 1 write, no dead
+  momentum stream).
 
 Layout: inputs are flattened to [N] and tiled as (BLOCK,) VMEM blocks on a 1D
 grid. Scalars (lr, decay — one pair, or one pair per block) arrive via
@@ -170,6 +176,80 @@ def storm3_step_flat(p, m, g_old, lrs, decays, *,
 
 
 # ---------------------------------------------------------------------------
+# Heavy-ball / SGD triple-sequence kernels (sequence-spec engine, non-STORM
+# algorithms). FedAvg applies the *updated* momentum (m' = β·m + g then
+# p' = p − lr·m'), which neither storm3 kernel expresses: storm3_step uses
+# the entering momentum for the variable step. Momentum-less specs (FedBiO /
+# FedBiO-Local) take the dedicated sgd3 kernel instead — a pallas_call's
+# outputs are opaque to XLA DCE, so reusing the heavy-ball kernel at β = 0
+# would pay a full-size dead momentum write every step.
+# ---------------------------------------------------------------------------
+
+def _momsgd3_kernel(lrs_ref, betas_ref, p_ref, m_ref, g_ref,
+                    pout_ref, mout_ref):
+    i = pl.program_id(0)
+    lr = lrs_ref[i]
+    beta = betas_ref[i]
+    m_new = beta * m_ref[...].astype(jnp.float32) + g_ref[...].astype(jnp.float32)
+    pout_ref[...] = (p_ref[...].astype(jnp.float32) - lr * m_new).astype(pout_ref.dtype)
+    mout_ref[...] = m_new.astype(mout_ref.dtype)
+
+
+def _sgd3_kernel(lrs_ref, p_ref, g_ref, pout_ref):
+    i = pl.program_id(0)
+    lr = lrs_ref[i]
+    pout_ref[...] = (p_ref[...].astype(jnp.float32)
+                     - lr * g_ref[...].astype(jnp.float32)).astype(pout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sgd3_step_flat(p, g, lrs, *,
+                   block: int = BLOCK, interpret: bool | None = None):
+    """Plain fused SGD step p_new = p − lr·g — the β = 0 fast path of the
+    momentum-less specs (FedBiO / FedBiO-Local): 2 reads + 1 write per
+    element, no dead momentum output for the pallas_call to keep alive."""
+    n = p.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    assert lrs.shape == grid, (lrs.shape, grid)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _sgd3_kernel,
+        grid=grid,
+        in_specs=[smem, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct((n,), p.dtype),
+        interpret=_resolve_interpret(interpret),
+    )(lrs.astype(jnp.float32), p, g)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def momsgd3_step_flat(p, m, g, lrs, betas, *,
+                      block: int = BLOCK, interpret: bool | None = None):
+    """Fused heavy-ball step: m_new = β·m + g ; p_new = p − lr·m_new.
+
+    Same layout contract as the storm3 kernels: flat [N] buffers with
+    block-aligned segment boundaries and per-block (lr, β) SMEM tables.
+    """
+    n = p.shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    assert lrs.shape == betas.shape == grid, (lrs.shape, grid)
+    bspec = pl.BlockSpec((block,), lambda i: (i,))
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        _momsgd3_kernel,
+        grid=grid,
+        in_specs=[smem, smem, bspec, bspec, bspec],
+        out_specs=[bspec, bspec],
+        out_shape=[jax.ShapeDtypeStruct((n,), p.dtype),
+                   jax.ShapeDtypeStruct((n,), m.dtype)],
+        interpret=_resolve_interpret(interpret),
+    )(lrs.astype(jnp.float32), betas.astype(jnp.float32), p, m, g)
+
+
+# ---------------------------------------------------------------------------
 # jnp lowerings of the triple-sequence updates — the ref.py oracles, jitted.
 # The substrate (repro.optim.flat) dispatches here off-TPU: the Pallas
 # interpreter exists for kernel validation, not speed, while these compile to
@@ -189,3 +269,15 @@ def storm3_update_flat_jnp(p, m, g_new, g_old, lrs, decays, *, block: int):
 def storm3_step_flat_jnp(p, m, g_old, lrs, decays, *, block: int):
     from repro.kernels.storm.ref import storm3_step_ref
     return storm3_step_ref(p, m, g_old, lrs, decays, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def momsgd3_step_flat_jnp(p, m, g, lrs, betas, *, block: int):
+    from repro.kernels.storm.ref import momsgd3_step_ref
+    return momsgd3_step_ref(p, m, g, lrs, betas, block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd3_step_flat_jnp(p, g, lrs, *, block: int):
+    from repro.kernels.storm.ref import sgd3_step_ref
+    return sgd3_step_ref(p, g, lrs, block)

@@ -35,6 +35,26 @@ def storm3_update_ref(p, m, g_new, g_old, lrs, decays, block):
     return p_new, m_new
 
 
+def sgd3_step_ref(p, g, lrs, block):
+    """Plain SGD reference: p_new = p − lr·g (fp32 accumulation)."""
+    lr = jnp.repeat(jnp.asarray(lrs, jnp.float32), block)
+    return (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype)
+
+
+def momsgd3_step_ref(p, m, g, lrs, betas, block):
+    """Heavy-ball reference (fp32 accumulation, matching the kernel):
+
+        m_new = β·m + g
+        p_new = p − lr·m_new      (the *updated* momentum — FedAvg ordering;
+                                   β = 0 degenerates to SGD: p − lr·g)
+    """
+    lr = jnp.repeat(jnp.asarray(lrs, jnp.float32), block)
+    beta = jnp.repeat(jnp.asarray(betas, jnp.float32), block)
+    m_new = beta * m.astype(jnp.float32) + g.astype(jnp.float32)
+    p_new = (p.astype(jnp.float32) - lr * m_new).astype(p.dtype)
+    return p_new, m_new.astype(m.dtype)
+
+
 def storm3_step_ref(p, m, g_old, lrs, decays, block):
     """Half-step reference: p − lr·m and the partial momentum
     decay·(m − g_old) (the correction add happens post-communication)."""

@@ -16,6 +16,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.config import FederatedConfig
@@ -55,12 +56,19 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--hierarchy-period", type=int, default=0,
+                    help="k>0: pod-local averaging, cross-pod only every "
+                         "k-th round (all algorithms honor this)")
+    ap.add_argument("--neumann-q", type=int, default=8,
+                    help="Neumann series terms for the local-lower "
+                         "hyper-gradient (fedbio_local/fedbioacc_local)")
     ap.add_argument("--fuse-storm", action="store_true",
-                    help="fedbioacc only: flat-buffer substrate + "
-                         "triple-sequence fused STORM update")
+                    help="flat-buffer substrate: the algorithm's sequence "
+                         "spec compiled to fused triple-sequence updates "
+                         "+ section-masked communication (all algorithms)")
     ap.add_argument("--fuse-oracles", action="store_true",
                     help="share one linearization (and one batch) across "
-                         "the three oracle directions")
+                         "the oracle directions (no-op for fedavg)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -69,18 +77,13 @@ def main(argv=None):
     model = build_model(cfg, dtype=jnp.float32 if args.reduced else jnp.bfloat16)
     fed = FederatedConfig(algorithm=args.algo, num_clients=args.clients,
                           local_steps=args.local_steps, lr_x=args.lr_x,
-                          lr_y=args.lr_y, lr_u=args.lr_u)
-    fuse_kw = {}
-    if args.fuse_oracles:
-        if args.algo not in ("fedbio", "fedbioacc"):
-            ap.error("--fuse-oracles requires --algo fedbio or fedbioacc")
-        fuse_kw["fuse_oracles"] = True
-    if args.fuse_storm:
-        if args.algo != "fedbioacc":
-            ap.error("--fuse-storm requires --algo fedbioacc")
-        fuse_kw["fuse_storm"] = True
+                          lr_y=args.lr_y, lr_u=args.lr_u,
+                          hierarchy_period=args.hierarchy_period,
+                          neumann_q=args.neumann_q)
+    # every factory takes the full uniform switch set (sequence-spec engine)
     init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False,
-                                    **fuse_kw)
+                                    fuse_storm=args.fuse_storm,
+                                    fuse_oracles=args.fuse_oracles)
     # flat-substrate states expose pytree views for eval/checkpoint
     as_view = step.views if hasattr(step, "views") else (lambda s: s)
     batch_fn = make_fed_batch_fn(cfg, num_clients=args.clients,
@@ -89,18 +92,22 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     state = init(key)
     jstep = jax.jit(step, donate_argnums=(0,))
+    # the eval batch is fixed — generate it once, not per eval_loss call
+    eval_batch = jax.tree.map(lambda v: v[0], batch_fn(jax.random.PRNGKey(123)))
 
     def eval_loss(state):
         state = as_view(state)
         p = (state.params if hasattr(state, "params")
              else {"body": state.x, "head": state.y})
         p0 = jax.tree.map(lambda v: v[0], p)
-        b = jax.tree.map(lambda v: v[0], batch_fn(jax.random.PRNGKey(123)))
-        l, _ = model.loss(p0, b["val"])
+        l, _ = model.loss(p0, eval_batch["val"])
         return float(l)
 
+    # parameter count from shapes only — no second full model.init
+    n_params = sum(int(np.prod(s.shape)) for s in
+                   jax.tree.leaves(jax.eval_shape(model.init, key)))
     print(f"arch={cfg.name} family={cfg.family} algo={args.algo} "
-          f"params={sum(x.size for x in jax.tree.leaves(model.init(key))):,}")
+          f"params={n_params:,}")
     t0 = time.time()
     history = []
     for t in range(args.steps):

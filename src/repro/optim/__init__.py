@@ -2,12 +2,23 @@
 #   optimizers — minimal pytree sgd/momentum/adam (no optax offline)
 #   flat       — flat-buffer STORM substrate: the (x, y, u) trees and their
 #                momenta are flattened once at init into contiguous per-dtype,
-#                tile-padded buffers; the triple-sequence Pallas kernel then
-#                advances all three FedBiOAcc momentum sequences in one launch
-#                (enabled via make_fedbioacc_train_step(..., fuse_storm=True)
-#                and FederatedConfig.fuse_storm for the core algorithms).
+#                tile-padded buffers; the triple-sequence Pallas kernels then
+#                advance every momentum sequence in one launch, and
+#                client_mean_masked communicates only the averaged sections
+#                (private sections pass through bit-identical).
+#   sequences  — the declarative sequence-spec engine: every federated
+#                algorithm (fedbio, fedbioacc, the local variants, fedavg)
+#                as a tuple of (section, momentum, lr, decay, comm-policy)
+#                declarations compiled onto the flat substrate (enabled via
+#                fuse_storm=True on the trainer factories and
+#                FederatedConfig.fuse_storm for the core algorithms).
 from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401
-from repro.optim.flat import (FlatSpec, buffers_add, flatten_tree,  # noqa: F401
-                              make_spec, storm_full_update,
+from repro.optim.flat import (FlatSpec, buffers_add, client_mean_masked,  # noqa: F401
+                              flatten_tree, make_spec, momentum_sgd_step,
+                              sgd_step, storm_full_update,
                               storm_partial_step, unflatten_tree,
                               zeros_buffers)
+from repro.optim.sequences import (AVERAGED, HIERARCHICAL, PRIVATE,  # noqa: F401
+                                   AlgoSpec, Engine, FlatState, Sequence,
+                                   SPECS, comm_buffers, comm_tree,
+                                   make_engine)

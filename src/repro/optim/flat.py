@@ -25,6 +25,11 @@ Layout (``FlatSpec``):
 * Buffers may carry leading batch dims (``batch_dims=1`` for the federated
   client axis M → buffers are [M, N]); ``client_mean`` on such a buffer is
   ONE reduction per dtype instead of one per leaf.
+* ``client_mean_masked`` supports *partial* communication (the local-lower
+  algorithms: average x/ν, keep y/ω private): a per-tile comm mask derived
+  from ``section_ids`` collapses to contiguous slices, so the communicated
+  sections cost one sliced reduction each while private sections pass
+  through bit-identical and never enter an all-reduce.
 
 The padding tiles are zero and stay zero under every substrate op (the
 update is elementwise and 0 − lr·0 = 0), so round-trips are exact.
@@ -38,7 +43,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.storm.kernel import (BLOCK, storm3_step_flat,
+from repro.kernels.storm.kernel import (BLOCK, momsgd3_step_flat,
+                                        momsgd3_step_flat_jnp,
+                                        sgd3_step_flat, sgd3_step_flat_jnp,
+                                        storm3_step_flat,
                                         storm3_step_flat_jnp,
                                         storm3_update_flat,
                                         storm3_update_flat_jnp)
@@ -239,6 +247,114 @@ def storm_full_update(spec: FlatSpec, var_bufs, mom_bufs, g_new_bufs,
     return tuple(out_v), tuple(out_m)
 
 
+def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
+                      lrs, betas, *, interpret: bool | None = None):
+    """One fused heavy-ball launch per dtype buffer:
+
+        m_new = β_sec·m + g        (momentum update — FedAvg ordering)
+        v_new = v − lr_sec·m_new   (variable step with the *updated* momentum)
+
+    Momentum-less specs (β = 0 everywhere, no momentum state) should use
+    :func:`sgd_step` instead — same variable result without the dead
+    momentum stream.
+    """
+    mode, flag = _dispatch(interpret)
+    out_v, out_m = [], []
+    for grp, v, m, gb in zip(spec.groups, var_bufs, mom_bufs, g_bufs):
+        args = (v.reshape(-1), m.reshape(-1), gb.reshape(-1),
+                _per_tile(grp, v, lrs), _per_tile(grp, v, betas))
+        if mode == "pallas":
+            vn, mn = momsgd3_step_flat(*args, block=grp.block, interpret=flag)
+        else:
+            vn, mn = momsgd3_step_flat_jnp(*args, block=grp.block)
+        out_v.append(vn.reshape(v.shape))
+        out_m.append(mn.reshape(m.shape))
+    return tuple(out_v), tuple(out_m)
+
+
+def sgd_step(spec: FlatSpec, var_bufs, g_bufs, lrs, *,
+             interpret: bool | None = None):
+    """One fused plain-SGD launch per dtype buffer: v_new = v − lr_sec·g.
+
+    The β = 0 fast path for momentum-less specs (FedBiO / FedBiO-Local):
+    2 reads + 1 write per element — a pallas_call's outputs are opaque to
+    XLA DCE, so the heavy-ball kernel would pay a full dead momentum write.
+    """
+    mode, flag = _dispatch(interpret)
+    out_v = []
+    for grp, v, gb in zip(spec.groups, var_bufs, g_bufs):
+        args = (v.reshape(-1), gb.reshape(-1), _per_tile(grp, v, lrs))
+        if mode == "pallas":
+            vn = sgd3_step_flat(*args, block=grp.block, interpret=flag)
+        else:
+            vn = sgd3_step_flat_jnp(*args, block=grp.block)
+        out_v.append(vn.reshape(v.shape))
+    return tuple(out_v)
+
+
 def buffers_add(a, b):
     """Elementwise a + b over buffer tuples (the STORM correction add)."""
     return tuple(x + y for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# Section-masked communication
+# ---------------------------------------------------------------------------
+
+def _bcast_mean(x):
+    """Full client mean over the leading axis, broadcast back (the paper's
+    communication round — one all-reduce under pjit).  Mirrors
+    ``core.tree_util.client_mean`` at array level; importing tree_util here
+    would close an import cycle (optim.flat ← core ← optim.sequences)."""
+    return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
+
+
+def _bcast_mean_grouped(x, num_groups: int):
+    """Pod-local grouped mean over contiguous client groups (hierarchical
+    multi-pod schedule — the all-reduce stays on the intra-pod ICI)."""
+    M = x.shape[0]
+    g = x.reshape((num_groups, M // num_groups) + x.shape[1:])
+    m = jnp.mean(g, axis=1, keepdims=True)
+    return jnp.broadcast_to(m, g.shape).reshape(x.shape)
+
+
+def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2):
+    """Section-masked client communication over flat [M, N] buffers.
+
+    ``modes``: one entry per section (aligned with ``spec.sections``; a
+    single entry for unsectioned specs), each ``"none"`` (private — the
+    section must not be communicated), ``"mean"`` (full client mean) or
+    ``"group"`` (pod-local grouped mean over ``num_groups`` groups).
+
+    Sections are contiguous tile-aligned runs of each dtype buffer
+    (``_Group.section_ids``), so the per-tile comm mask collapses to
+    contiguous same-mode slices: each communicated run is ONE sliced
+    reduction, and ``"none"`` runs are passed through as unreduced slices of
+    the input buffer — private sections are bit-identical by construction
+    and never enter an all-reduce (no wasted cross-client traffic).
+    """
+    n_sections = max(len(spec.sections), 1)
+    assert len(modes) == n_sections, (modes, spec.sections)
+    assert all(m in ("none", "mean", "group") for m in modes), modes
+    out = []
+    for grp, buf in zip(spec.groups, bufs):
+        assert buf.ndim >= 2, "client_mean_masked needs a leading client axis"
+        runs = []                      # [mode, start elem, stop elem]
+        for tile, sec in enumerate(grp.section_ids):
+            mode = modes[int(sec)]
+            if runs and runs[-1][0] == mode:
+                runs[-1][2] += grp.block
+            else:
+                runs.append([mode, tile * grp.block, (tile + 1) * grp.block])
+        parts = []
+        for mode, start, stop in runs:
+            seg = buf[..., start:stop]
+            if mode == "none":
+                parts.append(seg)
+            elif mode == "mean":
+                parts.append(_bcast_mean(seg))
+            else:
+                parts.append(_bcast_mean_grouped(seg, num_groups))
+        out.append(parts[0] if len(parts) == 1
+                   else jnp.concatenate(parts, axis=-1))
+    return tuple(out)

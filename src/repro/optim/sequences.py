@@ -1,0 +1,325 @@
+"""Sequence-spec engine: every federated algorithm on the flat substrate.
+
+The five federated algorithms (FedBiO, FedBiOAcc, their local-lower-level
+variants, FedAvg) are all "advance K named optimizer sequences, then
+communicate some of them".  What differs between them is *declarative*, not
+structural:
+
+* which **variable sections** exist (x body, y head, u auxiliary — or a
+  single ``params`` section for FedAvg);
+* whether each section carries a **STORM momentum** (FedBiOAcc family), a
+  heavy-ball momentum (FedAvg) or none (FedBiO family);
+* which cfg fields hold the **lr / STORM-constant** for each sequence; and
+* the **communication policy** of each sequence.
+
+This module captures that as a small datatype — :class:`Sequence` /
+:class:`AlgoSpec` — plus a generic fused step engine (:func:`make_engine`)
+that compiles a spec into the flat-substrate loop of ``repro.optim.flat``:
+
+    old-iterate oracle  →  fused Pallas partial step  →
+    policy-driven communication  →  correction add  (+ momentum comm)
+
+for the STORM kind, and ``oracle → fused heavy-ball/SGD launch →
+communication`` for the non-STORM kind.  The per-section (lr, decay|β)
+scalars ride the kernels' per-tile SMEM tables, so a *dual*-sequence spec
+(Alg. 4: x/ν averaged, y/ω private) runs on the same triple-sequence kernels
+as the full FedBiOAcc spec — sections are just tile runs.
+
+Communication policies (per sequence)
+-------------------------------------
+
+``PRIVATE``
+    Never communicated.  The paper's local-lower-level regime (Eq. 5):
+    per-client lower variables y^(m) and their momenta stay on-client.  On
+    the flat substrate the section's tiles are sliced *around* the reduction
+    (``flat.client_mean_masked``) — bit-identical pass-through, no traffic.
+``HIERARCHICAL``
+    Averaged every ``cfg.local_steps`` steps, honoring the beyond-paper
+    hierarchical multi-pod schedule: with ``cfg.hierarchy_period = k > 0``
+    only every k-th round crosses pod groups (pod-local grouped mean
+    otherwise, cross-pod traffic ÷ k).  With ``hierarchy_period = 0`` this
+    is exactly the paper's flat averaging.  This is the default policy for
+    every communicated sequence — all five algorithms now honor the
+    hierarchical schedule (previously only fedbio/fedbioacc did).
+``AVERAGED``
+    Full client mean every ``cfg.local_steps`` steps, *ignoring* the
+    hierarchical schedule — for state that must stay globally consistent
+    even during pod-local rounds (e.g. a future server-side control state).
+
+The same policies drive the unfused tree paths through :func:`comm_tree`,
+so fused and unfused trajectories see identical communication events.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tree_util import client_mean, client_mean_grouped
+from repro.optim import flat
+
+AVERAGED = "averaged"
+HIERARCHICAL = "hierarchical"
+PRIVATE = "private"
+POLICIES = (AVERAGED, HIERARCHICAL, PRIVATE)
+
+
+class Sequence(NamedTuple):
+    """One named optimizer sequence: a variable section and its momentum."""
+    section: str            # variable section name ("x", "y", "u", "params")
+    momentum: str           # momentum sequence name ("nu", "omega", "q", ...)
+    lr: str                 # FederatedConfig field holding the learning rate
+    decay: str | None = None  # cfg field of the STORM constant (storm kind)
+    comm: str = HIERARCHICAL  # communication policy
+
+
+class AlgoSpec(NamedTuple):
+    """Declarative algorithm description the engine compiles."""
+    name: str
+    kind: str               # "storm" (two-oracle STORM) | "sgd" (heavy-ball)
+    sequences: tuple        # of Sequence, in buffer section order
+    beta: float = 0.0       # heavy-ball momentum ("sgd" kind; 0 = plain SGD)
+    carry_momentum: bool = False  # keep momentum state even at beta == 0
+    #   (fedavg's state always carries mom; fedbio's never does)
+
+    @property
+    def sections(self):
+        return tuple(s.section for s in self.sequences)
+
+    @property
+    def policies(self):
+        return tuple(s.comm for s in self.sequences)
+
+    @property
+    def has_momentum(self) -> bool:
+        return self.kind == "storm" or self.beta != 0.0 or self.carry_momentum
+
+    def without_hierarchy(self) -> "AlgoSpec":
+        """HIERARCHICAL → AVERAGED: the paper's flat averaging regardless of
+        ``cfg.hierarchy_period`` (the core reference loops use this so
+        ``fuse_storm`` stays a pure perf switch there — the hierarchical
+        schedule is a model-scale trainer feature)."""
+        return self._replace(sequences=tuple(
+            q._replace(comm=AVERAGED) if q.comm == HIERARCHICAL else q
+            for q in self.sequences))
+
+
+# The five federated algorithms as specs.  FedAvg's β is a caller knob, not
+# a cfg field — makers use ``SPECS["fedavg"]._replace(beta=...)``.
+SPECS = {
+    "fedbio": AlgoSpec("fedbio", "sgd", (
+        Sequence("x", "nu", "lr_x"),
+        Sequence("y", "omega", "lr_y"),
+        Sequence("u", "q", "lr_u"),
+    )),
+    "fedbioacc": AlgoSpec("fedbioacc", "storm", (
+        Sequence("x", "nu", "lr_x", "c_nu"),
+        Sequence("y", "omega", "lr_y", "c_omega"),
+        Sequence("u", "q", "lr_u", "c_u"),
+    )),
+    "fedbio_local": AlgoSpec("fedbio_local", "sgd", (
+        Sequence("x", "nu", "lr_x"),
+        Sequence("y", "omega", "lr_y", comm=PRIVATE),
+    )),
+    "fedbioacc_local": AlgoSpec("fedbioacc_local", "storm", (
+        Sequence("x", "nu", "lr_x", "c_nu"),
+        Sequence("y", "omega", "lr_y", "c_omega", comm=PRIVATE),
+    )),
+    "fedavg": AlgoSpec("fedavg", "sgd", (
+        Sequence("params", "mom", "lr_x"),
+    ), beta=0.9, carry_momentum=True),
+}
+
+
+def alpha_schedule(cfg, t):
+    """The paper's α_t = δ/(u0 + t)^{1/3} STORM schedule."""
+    return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Policy-driven communication
+# ---------------------------------------------------------------------------
+
+def _round_preds(cfg, step):
+    is_comm = (step + 1) % cfg.local_steps == 0
+    round_idx = (step + 1) // cfg.local_steps
+    is_global = round_idx % max(cfg.hierarchy_period, 1) == 0
+    return is_comm, is_global
+
+
+def comm_tree(cfg, step, tree, policy: str):
+    """Apply one sequence's communication policy to a pytree with a leading
+    client axis (the unfused train-step paths)."""
+    assert policy in POLICIES, policy
+    if policy == PRIVATE:
+        return tree
+    is_comm, is_global = _round_preds(cfg, step)
+    if policy == AVERAGED or cfg.hierarchy_period <= 0:
+        return lax.cond(is_comm, client_mean, lambda t: t, tree)
+
+    def do_comm(t):
+        return lax.cond(is_global, client_mean,
+                        lambda tt: client_mean_grouped(tt, cfg.hierarchy_groups),
+                        t)
+
+    return lax.cond(is_comm, do_comm, lambda t: t, tree)
+
+
+def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies):
+    """Apply per-section policies to flat [M, N] buffers — one masked
+    (sliced) reduction per communicated section run, private sections
+    bit-identical (``flat.client_mean_masked``)."""
+    assert all(p in POLICIES for p in policies), policies
+    modes_comm = tuple("mean" if p != PRIVATE else "none" for p in policies)
+    if all(m == "none" for m in modes_comm):
+        return bufs
+    is_comm, is_global = _round_preds(cfg, step)
+    groups = cfg.hierarchy_groups
+    if cfg.hierarchy_period <= 0 or HIERARCHICAL not in policies:
+        return lax.cond(
+            is_comm,
+            lambda b: flat.client_mean_masked(spec, b, modes_comm),
+            lambda b: b, bufs)
+    # pod-local rounds: HIERARCHICAL sections take the grouped mean while
+    # AVERAGED sections still take the full mean
+    modes_local = tuple(
+        "group" if p == HIERARCHICAL else ("mean" if p == AVERAGED else "none")
+        for p in policies)
+
+    def do_comm(b):
+        return lax.cond(
+            is_global,
+            lambda bb: flat.client_mean_masked(spec, bb, modes_comm),
+            lambda bb: flat.client_mean_masked(spec, bb, modes_local,
+                                               num_groups=groups),
+            b)
+
+    return lax.cond(is_comm, do_comm, lambda b: b, bufs)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class FlatState(NamedTuple):
+    """Any algorithm's train state on the flat substrate.
+
+    ``vars``/``mom`` are tuples of per-dtype [M, N] buffers holding the
+    variable (resp. momentum) sections, tile-padded per ``repro.optim.flat``
+    (``mom`` is the empty tuple for momentum-less specs).
+    """
+    vars: Any
+    mom: Any
+    step: jnp.ndarray
+
+
+class Engine(NamedTuple):
+    """A compiled sequence spec.  All members close over (cfg, aspec, spec).
+
+    * ``init_state(var_trees, mom_trees=None, step=None)`` — flatten section
+      trees (each [M, ...]) into a :class:`FlatState`; momenta default to
+      zeros in f32 buffers (``mom_trees`` is keyed by momentum name).
+    * ``step(state, batch) -> state`` — one fused local step including
+      policy-driven communication (jit/scan it; donate the buffers).
+    * ``views(state) -> (var_dict, mom_dict | None)`` — pytree views keyed
+      by section (resp. momentum) names, for eval/checkpoint.
+    """
+    aspec: AlgoSpec
+    spec: flat.FlatSpec
+    init_state: Any
+    step: Any
+    views: Any
+
+
+def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
+                block: int | None = None) -> Engine:
+    """Compile ``aspec`` into the fused flat-substrate step.
+
+    ``templates``: section name → leaf template tree (arrays or
+    ShapeDtypeStructs, WITHOUT the client axis) — the buffer layout.
+
+    ``oracle(views, batch) -> {section: grad tree}``: the already-vmapped
+    oracle; ``views`` is a dict of section → [M, ...] pytree.  For the storm
+    kind the returned trees are the momentum *targets* of each sequence
+    (e.g. μ for x/ν), evaluated twice per step (old/new iterate) with the
+    same batch — the STORM correction.  For the sgd kind it is called once.
+    """
+    sections = aspec.sections
+    spec = flat.make_spec({s: templates[s] for s in sections},
+                          sections=sections,
+                          block=block if block else flat.BLOCK)
+    policies = aspec.policies
+    has_mom = aspec.has_momentum
+
+    def _flatten_grads(gdict):
+        return flat.flatten_tree(spec, {s: gdict[s] for s in sections},
+                                 batch_dims=1, dtype=jnp.float32)
+
+    def init_state(var_trees, mom_trees=None, step=None):
+        vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
+                                   batch_dims=1)
+        if not has_mom:
+            mom_b = ()
+        elif mom_trees is None:
+            # momenta live in f32 buffers regardless of the variable dtype —
+            # the unfused arithmetic promotes them the same way, and the
+            # STORM correction g_new − g_old is a small difference bf16
+            # would largely destroy
+            mom_b = tuple(jnp.zeros(b.shape, jnp.float32) for b in vars_b)
+        else:
+            mom_b = flat.flatten_tree(
+                spec, {q.section: mom_trees[q.momentum]
+                       for q in aspec.sequences},
+                batch_dims=1, dtype=jnp.float32)
+        return FlatState(vars_b, mom_b,
+                         jnp.zeros((), jnp.int32) if step is None else step)
+
+    def _storm_step(state: FlatState, batch) -> FlatState:
+        t = state.step
+        a = alpha_schedule(cfg, t)
+        lrs = tuple(getattr(cfg, q.lr) * a for q in aspec.sequences)
+        decays = tuple(1.0 - getattr(cfg, q.decay) * a * a
+                       for q in aspec.sequences)
+        # 1) old-iterate oracle on transient pytree views (reads only the
+        #    entering iterate — lets the variable step and the partial
+        #    momentum share a single fused launch)
+        g_old = _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
+                                      batch))
+        # 2+3) partial momentum + variable step: ONE launch per dtype
+        vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
+                                                g_old, lrs, decays)
+        vars_b = comm_buffers(spec, cfg, t, vars_b, policies)
+        # 4) new-iterate oracle, same batch; STORM correction is one add
+        g_new = _flatten_grads(oracle(flat.unflatten_tree(spec, vars_b),
+                                      batch))
+        mom_b = flat.buffers_add(mom_b, g_new)
+        mom_b = comm_buffers(spec, cfg, t, mom_b, policies)
+        return FlatState(vars_b, mom_b, t + 1)
+
+    def _sgd_step(state: FlatState, batch) -> FlatState:
+        t = state.step
+        lrs = tuple(getattr(cfg, q.lr) for q in aspec.sequences)
+        g = _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
+                                  batch))
+        if has_mom:
+            betas = (aspec.beta,) * len(aspec.sequences)
+            vars_b, mom_b = flat.momentum_sgd_step(spec, state.vars,
+                                                   state.mom, g, lrs, betas)
+            mom_b = comm_buffers(spec, cfg, t, mom_b, policies)
+        else:
+            # momentum-less: the plain-SGD launch (no dead momentum stream)
+            vars_b, mom_b = flat.sgd_step(spec, state.vars, g, lrs), ()
+        vars_b = comm_buffers(spec, cfg, t, vars_b, policies)
+        return FlatState(vars_b, mom_b, t + 1)
+
+    step = _storm_step if aspec.kind == "storm" else _sgd_step
+
+    def views(state: FlatState):
+        vt = flat.unflatten_tree(spec, state.vars)
+        if not state.mom:
+            return vt, None
+        mt = flat.unflatten_tree(spec, state.mom)
+        return vt, {q.momentum: mt[q.section] for q in aspec.sequences}
+
+    return Engine(aspec, spec, init_state, step, views)

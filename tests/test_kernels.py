@@ -103,6 +103,44 @@ def test_storm3_matches_per_segment_ref(dtype, rng):
     np.testing.assert_array_equal(np.asarray(mp), np.asarray(mn0))
 
 
+@pytest.mark.parametrize("dtype", STORM_DTYPES)
+def test_momsgd3_matches_ref_and_degenerates_to_sgd(dtype, rng):
+    """Heavy-ball companion kernel: m' = β·m + g then p' = p − lr·m' (the
+    *updated* momentum — FedAvg ordering); β = 0 is the plain SGD step."""
+    from repro.kernels.storm.kernel import momsgd3_step_flat
+    from repro.kernels.storm.ref import momsgd3_step_ref
+    block, ntiles = 1024, 6
+    n = block * ntiles
+    ks = jax.random.split(rng, 3)
+    p = jax.random.normal(ks[0], (n,)).astype(dtype)
+    m, gv = (jax.random.normal(k, (n,)) for k in ks[1:])
+    lrs = jnp.asarray([0.1, 0.1, 0.2, 0.2, 0.3, 0.3])
+    betas = jnp.asarray([0.9, 0.9, 0.5, 0.5, 0.0, 0.0])
+    pn, mn = momsgd3_step_flat(p, m, gv, lrs, betas, block=block)
+    prn, mrn = momsgd3_step_ref(p, m, gv, lrs, betas, block)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(pn, np.float32),
+                               np.asarray(prn, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(mn), np.asarray(mrn),
+                               rtol=1e-5, atol=1e-6)
+    # β = 0 tiles: m operand irrelevant, p' = p − lr·g exactly
+    pn0, mn0 = momsgd3_step_flat(p, jnp.zeros_like(m), gv, lrs, betas,
+                                 block=block)
+    sl = slice(4 * block, n)
+    np.testing.assert_array_equal(np.asarray(pn[sl], np.float32),
+                                  np.asarray(pn0[sl], np.float32))
+    np.testing.assert_array_equal(np.asarray(mn0[sl]), np.asarray(gv[sl]))
+    # the dedicated momentum-less kernel == heavy-ball at β = 0 everywhere
+    from repro.kernels.storm.kernel import sgd3_step_flat
+    from repro.kernels.storm.ref import sgd3_step_ref
+    ps = sgd3_step_flat(p, gv, lrs, block=block)
+    np.testing.assert_array_equal(np.asarray(ps[sl], np.float32),
+                                  np.asarray(pn0[sl], np.float32))
+    np.testing.assert_allclose(np.asarray(ps, np.float32),
+                               np.asarray(sgd3_step_ref(p, gv, lrs, block),
+                                          np.float32), rtol=tol, atol=tol)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

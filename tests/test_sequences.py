@@ -1,0 +1,333 @@
+"""Sequence-spec engine (repro.optim.sequences): section-masked
+communication (private sections bit-identical), policy-driven schedules,
+fused-vs-unfused trajectory equivalence for the remaining four algorithms
+(fedbioacc is covered by tests/test_flat_substrate.py), and the
+hierarchical-schedule regression for the algorithms that previously ignored
+``cfg.hierarchy_period`` (fedbio_local, fedbioacc_local, fedavg)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FederatedConfig
+from repro.optim import flat, sequences as seqs
+
+
+def _mixed_tree():
+    return {
+        "x": {"w": jnp.arange(24.0).reshape(4, 6),
+              "b": (jnp.arange(7, dtype=jnp.bfloat16), jnp.float32(3.5))},
+        "y": {"h": jnp.arange(5.0) * 2.0, "hb": jnp.full((3,), 2, jnp.bfloat16)},
+        "u": {"h": jnp.ones((5,)), "hb": jnp.ones((3,), jnp.bfloat16)},
+    }
+
+
+def _clients(tree, m, key):
+    """Distinct per-client copies (client i = tree + noise_i)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    ks = jax.random.split(key, len(leaves))
+    out = [jnp.stack([jnp.asarray(l) + jax.random.normal(
+        jax.random.fold_in(k, i), jnp.shape(l)).astype(jnp.asarray(l).dtype)
+        for i in range(m)]) for k, l in zip(ks, leaves)]
+    return treedef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# section-masked communication
+# ---------------------------------------------------------------------------
+
+def test_masked_client_mean_roundtrip_mixed_dtypes(rng):
+    """Averaged sections equal the per-leaf client mean; private sections are
+    BIT-identical; grouped sections equal the pod-local mean — across both
+    dtype buffers of a mixed f32/bf16 tree."""
+    tree = _mixed_tree()
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    M = 4
+    btree = _clients(tree, M, rng)
+    bufs = flat.flatten_tree(spec, btree, batch_dims=1)
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none", "group"),
+                                  num_groups=2)
+    back = flat.unflatten_tree(spec, out)
+    # x: full client mean, per leaf
+    for a, b in zip(jax.tree.leaves(btree["x"]), jax.tree.leaves(back["x"])):
+        want = jnp.broadcast_to(jnp.mean(a, axis=0, keepdims=True), a.shape)
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-6, atol=1e-6)
+    # y: private — bit-identical pass-through (compare raw bit patterns)
+    for a, b in zip(jax.tree.leaves(btree["y"]), jax.tree.leaves(back["y"])):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+    # u: grouped mean (clients {0,1} and {2,3})
+    for a, b in zip(jax.tree.leaves(btree["u"]), jax.tree.leaves(back["u"])):
+        g = jnp.reshape(a, (2, 2) + a.shape[1:])
+        want = jnp.broadcast_to(jnp.mean(g, axis=1, keepdims=True),
+                                g.shape).reshape(a.shape)
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-2, atol=1e-2 if a.dtype == jnp.bfloat16
+                                   else 1e-6)
+
+
+def test_masked_mean_private_tiles_never_reduced(rng):
+    """NaNs in a private section must not leak into the averaged sections
+    (proof the private tiles are sliced around, not blended post-reduction)."""
+    tree = {"x": jnp.ones((8,)), "y": jnp.ones((6,)), "u": jnp.ones((6,))}
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    M = 3
+    btree = jax.tree.map(
+        lambda v: jnp.broadcast_to(v[None], (M,) + v.shape), tree)
+    btree = dict(btree, y=jnp.full((M, 6), jnp.nan))
+    bufs = flat.flatten_tree(spec, btree, batch_dims=1)
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none", "mean"))
+    back = flat.unflatten_tree(spec, out)
+    assert bool(jnp.all(jnp.isfinite(back["x"])))
+    assert bool(jnp.all(jnp.isfinite(back["u"])))
+    assert bool(jnp.all(jnp.isnan(back["y"])))
+
+
+def test_comm_buffers_policy_schedule(rng):
+    """PRIVATE never communicates; HIERARCHICAL follows local_steps and the
+    pod-local/global hierarchy; AVERAGED ignores the hierarchy."""
+    tree = {"x": jnp.ones((8,)), "y": jnp.ones((8,)), "u": jnp.ones((8,))}
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8)
+    cfg = FederatedConfig(num_clients=4, local_steps=2, hierarchy_period=2,
+                          hierarchy_groups=2)
+    btree = _clients(tree, 4, rng)
+    bufs = flat.flatten_tree(spec, btree, batch_dims=1)
+    policies = (seqs.HIERARCHICAL, seqs.PRIVATE, seqs.AVERAGED)
+
+    def spread(buf_seg, a, b):
+        return float(jnp.max(jnp.abs(buf_seg[a] - buf_seg[b])))
+
+    # step 0: (0+1) % 2 != 0 — no communication at all
+    out = seqs.comm_buffers(spec, cfg, jnp.int32(0), bufs, policies)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(bufs[0]))
+    # step 1: comm round 1 — pod-local for x (hierarchical), full for u
+    out = seqs.comm_buffers(spec, cfg, jnp.int32(1), bufs, policies)
+    back = flat.unflatten_tree(spec, out)
+    orig = flat.unflatten_tree(spec, bufs)
+    assert spread(back["x"], 0, 1) < 1e-6          # same pod agrees
+    assert spread(back["x"], 0, 2) > 1e-6          # pods still differ
+    assert spread(back["u"], 0, 2) < 1e-6          # AVERAGED crosses pods
+    np.testing.assert_array_equal(np.asarray(back["y"]),
+                                  np.asarray(orig["y"]))   # private untouched
+    # step 3: comm round 2 — global round for the hierarchical section
+    out = seqs.comm_buffers(spec, cfg, jnp.int32(3), bufs, policies)
+    back = flat.unflatten_tree(spec, out)
+    assert spread(back["x"], 0, 2) < 1e-6
+    np.testing.assert_array_equal(np.asarray(back["y"]),
+                                  np.asarray(orig["y"]))
+
+
+# ---------------------------------------------------------------------------
+# fused-vs-unfused trajectory equivalence (model scale), all remaining algos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.models import build_model
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=4, local_steps=3, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05, neumann_q=2, neumann_tau=0.3)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=1, seq_len=16)
+    return model, fed, batch_fn
+
+
+_MAKER_FIELDS = {
+    "fedbio": ("x", "y", "u"),
+    "fedbio_local": ("x", "y"),
+    "fedbioacc_local": ("x", "y", "omega", "nu"),
+    "fedavg": ("params", "mom"),
+}
+
+
+@pytest.mark.parametrize("algo", sorted(_MAKER_FIELDS))
+def test_fuse_storm_matches_unfused_trajectory(setup, algo):
+    """Every algorithm's fuse_storm=True path must reproduce its unfused
+    trajectory across communication rounds (flat state end-to-end, legacy
+    pytree state via train_step.views)."""
+    from repro.federation import trainer as tr
+
+    model, fed, batch_fn = setup
+    maker = getattr(tr, f"make_{algo}_train_step")
+    i1, s1 = maker(model, fed, n_micro=1, remat=False)
+    i2, s2 = maker(model, fed, n_micro=1, remat=False, fuse_storm=True,
+                   storm_block=256)
+    st1 = i1(jax.random.PRNGKey(0))
+    st2 = i2(jax.random.PRNGKey(0))
+    assert isinstance(st2, seqs.FlatState)
+    j1 = jax.jit(s1)
+    j2 = jax.jit(s2, donate_argnums=(0,))
+    key = jax.random.PRNGKey(1)
+    for _ in range(4):                       # crosses a communication round
+        key, sub = jax.random.split(key)
+        b = batch_fn(sub)
+        st1, _ = j1(st1, b)
+        st2, _ = j2(st2, b)
+    v2 = s2.views(st2)
+    assert int(v2.step) == int(st1.step) == 4
+    for n in _MAKER_FIELDS[algo]:
+        for a, b in zip(jax.tree.leaves(getattr(st1, n)),
+                        jax.tree.leaves(getattr(v2, n))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{algo}.{n}")
+
+
+def test_local_fused_heads_stay_private(setup):
+    """On the flat substrate the private y/ω sections must keep their
+    per-client personalisation across communication rounds while x syncs."""
+    from repro.federation.trainer import make_fedbioacc_local_train_step
+
+    model, fed, batch_fn = setup
+    init, step = make_fedbioacc_local_train_step(model, fed, n_micro=1,
+                                                 remat=False, fuse_storm=True,
+                                                 storm_block=256)
+    state = init(jax.random.PRNGKey(0))
+    jstep = jax.jit(step, donate_argnums=(0,))
+    key = jax.random.PRNGKey(1)
+    for _ in range(3):                       # step 3 == I -> comm round
+        key, sub = jax.random.split(key)
+        state, _ = jstep(state, batch_fn(sub))
+    v = step.views(state)
+
+    def spread(tree):
+        return max(float(jnp.max(jnp.std(l.astype(jnp.float32), axis=0)))
+                   for l in jax.tree.leaves(tree))
+
+    assert spread(v.x) < 1e-6               # body averaged
+    assert spread(v.nu) < 1e-6              # ν averaged (Alg. 4)
+    assert spread(v.y) > 1e-4               # heads remain personalised
+    assert spread(v.omega) > 0.0            # ω private
+
+
+# ---------------------------------------------------------------------------
+# hierarchical-schedule regression: the algorithms that used to bypass _comm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["fedbio_local", "fedbioacc_local", "fedavg"])
+def test_hierarchy_period_now_honored(setup, algo):
+    """Regression for the hierarchical-communication inconsistency: a nonzero
+    ``hierarchy_period`` must change these algorithms' trajectories (they
+    previously called the flat mean directly and silently ignored it)."""
+    import dataclasses
+    from repro.federation import trainer as tr
+
+    model, fed, batch_fn = setup
+    maker = getattr(tr, f"make_{algo}_train_step")
+    # period 3 keeps BOTH observed rounds pod-local (round_idx 1, 2);
+    # two steps because fedbioacc_local's zero-momentum init makes step 1 a
+    # warm-up no-op for x (x only moves once ν is non-zero)
+    fed_flat = dataclasses.replace(fed, local_steps=1)
+    fed_hier = dataclasses.replace(fed, local_steps=1, hierarchy_period=3,
+                                   hierarchy_groups=2)
+    comm_field = "params" if algo == "fedavg" else "x"
+
+    def one_step(cfg_fed):
+        init, step = maker(model, cfg_fed, n_micro=1, remat=False)
+        state = init(jax.random.PRNGKey(0))
+        jstep = jax.jit(step)
+        state, _ = jstep(state, batch_fn(jax.random.PRNGKey(1)))
+        state, _ = jstep(state, batch_fn(jax.random.PRNGKey(2)))
+        return getattr(state, comm_field)
+
+    x_flat = one_step(fed_flat)
+    x_hier = one_step(fed_hier)
+
+    def pair_spread(tree, a, b):
+        return max(float(jnp.max(jnp.abs(
+            l[a].astype(jnp.float32) - l[b].astype(jnp.float32))))
+            for l in jax.tree.leaves(tree))
+
+    # flat schedule: round 1 averages everyone; hierarchical: round 1 is
+    # pod-local (round_idx 1 % 2 != 0), so pods must still differ
+    assert pair_spread(x_flat, 0, 2) < 1e-6
+    assert pair_spread(x_hier, 0, 1) < 1e-6        # same pod agrees
+    assert pair_spread(x_hier, 0, 2) > 1e-6        # pods diverged -> honored
+
+
+# ---------------------------------------------------------------------------
+# core algorithms through the same engine
+# ---------------------------------------------------------------------------
+
+def test_fedavg_zero_momentum_fused_views(setup):
+    """momentum=0.0 + fuse_storm must still carry the mom state (the legacy
+    FedAvgTrainState has a mom field; m' = 0·m + g = the raw gradient)."""
+    from repro.federation.trainer import make_fedavg_train_step
+
+    model, fed, batch_fn = setup
+    init, step = make_fedavg_train_step(model, fed, n_micro=1, remat=False,
+                                        momentum=0.0, fuse_storm=True,
+                                        storm_block=256)
+    state = init(jax.random.PRNGKey(0))
+    state, _ = jax.jit(step)(state, batch_fn(jax.random.PRNGKey(1)))
+    v = step.views(state)
+    assert v.mom is not None
+    # β = 0 ⇒ mom is exactly the last gradient (non-zero after one step)
+    assert any(float(jnp.max(jnp.abs(l))) > 0 for l in jax.tree.leaves(v.mom))
+
+
+@pytest.mark.parametrize("algo", ["fedbio_local", "fedbioacc_local"])
+def test_core_local_fuse_storm_matches(algo):
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.3, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm=algo, num_clients=8, local_steps=4,
+                              lr_x=0.03, lr_y=0.1, neumann_q=4,
+                              neumann_tau=0.2, **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        rnd = jax.jit(alg.round)
+        key = jax.random.PRNGKey(2)
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            state, _ = rnd(state, sub)
+        return state
+
+    a, b = run(), run(fuse_storm=True, fuse_storm_block=64)
+    # the core reference loops always use the paper's flat averaging —
+    # fuse_storm must stay a pure perf switch even with hierarchy_period set
+    c = run(hierarchy_period=2, hierarchy_groups=2)
+    d = run(hierarchy_period=2, hierarchy_groups=2, fuse_storm=True,
+            fuse_storm_block=64)
+    for n in a._fields:
+        for other in (b, c, d):
+            np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                       np.asarray(getattr(other, n)),
+                                       rtol=1e-5, atol=1e-5, err_msg=n)
+
+
+def test_core_local_fuse_oracles_matches_in_deterministic_limit():
+    """With noise=0 every oracle draw is identical, so sharing one batch
+    across (ω, Φ) must reproduce the unfused local trajectory."""
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.0, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm="fedbioacc_local", num_clients=8,
+                              local_steps=4, lr_x=0.03, lr_y=0.1,
+                              neumann_q=4, neumann_tau=0.2, **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        state, _ = jax.jit(alg.round)(state, jax.random.PRNGKey(2))
+        return state
+
+    a = run()
+    b = run(fuse_oracles=True)
+    c = run(fuse_oracles=True, fuse_storm=True, fuse_storm_block=64)
+    for n in a._fields:
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(b, n)),
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(c, n)),
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
