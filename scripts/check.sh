@@ -26,6 +26,15 @@ if [[ "${1:-}" != "--bench" ]]; then
             --local-steps 2 --neumann-q 2 --log-every 1 \
             --fuse-storm --fuse-oracles
     done
+    # partial participation through the participation engine: 4-of-8 uniform
+    # client sampling, gated fused launches + participants-only reductions
+    for algo in fedbioacc fedbioacc_local; do
+        echo "smoke-train: $algo (fused, 4-of-8 participation)"
+        python -m repro.launch.train --arch mamba2-130m --reduced \
+            --algo "$algo" --steps 2 --clients 8 --clients-per-round 4 \
+            --per-client 1 --seq 32 --local-steps 2 --neumann-q 2 \
+            --log-every 1 --fuse-storm --fuse-oracles
+    done
 fi
 
 if [[ "${1:-}" != "--smoke" ]]; then

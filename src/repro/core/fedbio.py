@@ -9,6 +9,17 @@ Three entangled federated problems are advanced by alternating local steps:
 Every I steps the client states (x, y, u) are averaged — under pjit with the
 client axis sharded over the mesh "data" axis this is the paper's
 communication round (one all-reduce of the federated state).
+
+§Perf fusion flags (FederatedConfig), mirroring ``core.fedbioacc`` — this
+was the last tree-map-only reference loop:
+
+* ``fuse_oracles`` — all three oracle directions (ω, μ = ∇_x f − ∇_xy g·u,
+  p = ∇²_yy g·u − ∇_y f) from the two shared linearizations of
+  ``hypergrad.fused_oracles`` on ONE minibatch (1 batch/step instead of 5);
+  the u-update is then ``u − τ·p`` — exactly ``hypergrad.u_step``.
+* ``fuse_storm`` — the scan carry lives on the flat-buffer substrate via the
+  sequence-spec engine: FedBiO is the momentum-less triple-sequence spec, so
+  each local step is one fused plain-SGD launch over (x, y, u).
 """
 from __future__ import annotations
 
@@ -23,6 +34,7 @@ from repro.core import hypergrad as hg
 from repro.core.problems import Problem
 from repro.core.tree_util import (client_mean, tree_axpy, tree_size,
                                   tree_zeros_like)
+from repro.optim import sequences as seqs
 
 
 class FedBiOState(NamedTuple):
@@ -55,26 +67,85 @@ def make_fedbio(problem: Problem, cfg: FederatedConfig) -> Algorithm:
             x=_broadcast_clients(x1, M), y=_broadcast_clients(y1, M),
             u=_broadcast_clients(u1, M), t=jnp.zeros((), jnp.int32))
 
-    def local_step(x, y, u, batches):
-        by, bf1, bg1, bf2, bg2 = batches
-        omega = hg.grad_y(g, x, y, by)
-        nu = hg.nu_direction(g, f, x, y, u, bg1, bf1)
-        y_new = tree_axpy(-cfg.lr_y, omega, y)
-        x_new = tree_axpy(-cfg.lr_x, nu, x)
-        u_new = hg.u_step(g, f, x, y, u, bg2, bf2, cfg.lr_u)
-        return x_new, y_new, u_new
+    if cfg.fuse_oracles:
+        def sample(k):
+            return problem.sample_batches(k)
+
+        def local_step(x, y, u, batch):
+            omega, mu, p = hg.fused_oracles(g, f, x, y, u, batch)
+            return (tree_axpy(-cfg.lr_x, mu, x),
+                    tree_axpy(-cfg.lr_y, omega, y),
+                    tree_axpy(-cfg.lr_u, p, u))     # == hg.u_step
+    else:
+        def sample(k):
+            return tuple(problem.sample_batches(kk)
+                         for kk in jax.random.split(k, 5))
+
+        def local_step(x, y, u, batches):
+            by, bf1, bg1, bf2, bg2 = batches
+            omega = hg.grad_y(g, x, y, by)
+            nu = hg.nu_direction(g, f, x, y, u, bg1, bf1)
+            y_new = tree_axpy(-cfg.lr_y, omega, y)
+            x_new = tree_axpy(-cfg.lr_x, nu, x)
+            u_new = hg.u_step(g, f, x, y, u, bg2, bf2, cfg.lr_u)
+            return x_new, y_new, u_new
 
     vstep = jax.vmap(local_step)
 
+    # flat-buffer variant: FedBiO's momentum-less triple-sequence spec on the
+    # sequence-spec engine — one fused plain-SGD launch per local step.
+    # without_hierarchy: the reference loops always use the paper's flat
+    # averaging, so fuse_storm stays a pure perf switch for any cfg
+    if cfg.fuse_storm:
+        x1s, y1s = jax.eval_shape(problem.init_xy, jax.random.PRNGKey(0))
+
+        def oracle(vt, batches):
+            x, y, u = vt["x"], vt["y"], vt["u"]
+            if cfg.fuse_oracles:
+                omega, mu, p = jax.vmap(
+                    lambda xx, yy, uu, b: hg.fused_oracles(g, f, xx, yy, uu, b)
+                )(x, y, u, batches)
+            else:
+                by, bf1, bg1, bf2, bg2 = batches
+                omega = jax.vmap(
+                    lambda xx, yy, b: hg.grad_y(g, xx, yy, b))(x, y, by)
+                mu = jax.vmap(
+                    lambda xx, yy, uu, b1, b2:
+                    hg.nu_direction(g, f, xx, yy, uu, b1, b2)
+                )(x, y, u, bg1, bf1)
+                p = jax.vmap(
+                    lambda xx, yy, uu, b1, b2:
+                    hg.u_residual(g, f, xx, yy, uu, b1, b2)
+                )(x, y, u, bg2, bf2)
+            return {"x": mu, "y": omega, "u": p}
+
+        engine = seqs.make_engine(cfg, seqs.SPECS["fedbio"].without_hierarchy(),
+                                  {"x": x1s, "y": y1s, "u": y1s}, oracle,
+                                  block=cfg.fuse_storm_block)
+    else:
+        engine = None
+
     def round(state: FedBiOState, key):
+        keys = jax.random.split(key, cfg.local_steps)
+        if cfg.fuse_storm:
+            # flatten once per round; the scan carry stays flat across all
+            # local steps, pytree views appear only at the oracle boundaries
+            st = engine.init_state({"x": state.x, "y": state.y,
+                                    "u": state.u}, step=state.t)
+
+            def body_flat(carry, k):
+                return engine.step(carry, sample(k)), None
+
+            st, _ = lax.scan(body_flat, st, keys)
+            vt, _ = engine.views(st)
+            new = FedBiOState(vt["x"], vt["y"], vt["u"], st.step)
+            return new, {"t": new.t}
+
         def body(carry, k):
             x, y, u = carry
-            ks = jax.random.split(k, 5)
-            batches = tuple(problem.sample_batches(kk) for kk in ks)
-            x, y, u = vstep(x, y, u, batches)
+            x, y, u = vstep(x, y, u, sample(k))
             return (x, y, u), None
 
-        keys = jax.random.split(key, cfg.local_steps)
         (x, y, u), _ = lax.scan(body, (state.x, state.y, state.u), keys)
         # communication: average all three federated sequences
         x, y, u = client_mean(x), client_mean(y), client_mean(u)

@@ -75,6 +75,44 @@ def client_mean_grouped(tree, num_groups: int):
     return jax.tree.map(one, tree)
 
 
+def _weight_col(x, w):
+    """Per-client weights → broadcastable column rescaled so the plain mean
+    of ``x · col`` is the weighted mean (col = w · M/Σw).  All-ones weights
+    give col = 1.0 exactly — the weighted path then reproduces
+    :func:`client_mean` bit-for-bit.  Keep in sync with
+    ``repro.optim.flat._weight_col`` (the flat-buffer twin)."""
+    wsum = jnp.sum(w, axis=-1, keepdims=True)
+    scale = jnp.where(wsum > 0, w.shape[-1] / wsum, 0.0)
+    col = (w * scale).astype(x.dtype)
+    return col.reshape(col.shape + (1,) * (x.ndim - col.ndim))
+
+
+def client_mean_weighted(tree, w):
+    """Participation-weighted client mean: the average is over participants
+    only (w = 0 ⇒ non-participant) and non-participant rows pass through
+    bit-identical — the pytree twin of the flat substrate's weighted
+    ``client_mean_masked``."""
+    def one(x):
+        col = _weight_col(x, w)
+        m = jnp.broadcast_to(jnp.mean(x * col, axis=0, keepdims=True), x.shape)
+        return jnp.where(col > 0, m, x)
+
+    return jax.tree.map(one, tree)
+
+
+def client_mean_grouped_weighted(tree, num_groups: int, w):
+    """Participation-weighted pod-local grouped mean (see
+    :func:`client_mean_grouped`); empty groups pass through unchanged."""
+    def one(x):
+        M = x.shape[0]
+        g = x.reshape(num_groups, M // num_groups, *x.shape[1:])
+        col = _weight_col(g, w.reshape(num_groups, M // num_groups))
+        m = jnp.broadcast_to(jnp.mean(g * col, axis=1, keepdims=True), g.shape)
+        return jnp.where(col > 0, m, g).reshape(x.shape)
+
+    return jax.tree.map(one, tree)
+
+
 def client_slice(tree, m):
     return jax.tree.map(lambda x: x[m], tree)
 

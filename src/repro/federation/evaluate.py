@@ -15,7 +15,6 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.tree_util import client_slice
 from repro.models.registry import Model
 
 
@@ -35,37 +34,32 @@ def eval_federated(model: Model, state, batch_fn, key, *,
 
     Returns pooled and per-client val loss/perplexity, plus the
     personalisation gain when heads are private (local-lower states).
+
+    Both metrics are a single ``vmap`` over the client axis (two batched
+    loss traces total) — not O(M) separate per-client ``model.loss`` traces.
     """
     batch = batch_fn(key)
     if hasattr(state, "params"):          # FedAvg
-        bodies = jax.tree.map(lambda v: v, state.params)
-        get = lambda m: (client_slice(bodies, m)["body"],
-                         client_slice(bodies, m)["head"])
+        bodies, heads = state.params["body"], state.params["head"]
     else:
-        get = lambda m: (client_slice(state.x, m), client_slice(state.y, m))
+        bodies, heads = state.x, state.y
 
-    per_client = []
-    for m in range(num_clients):
-        body, head = get(m)
-        b = jax.tree.map(lambda v: v[m], batch["val"])
-        l = client_loss(model, body, head, b)
-        per_client.append(l)
+    def one_loss(body, head, b):
+        loss, _ = model.loss({"body": body, "head": head}, b)
+        return loss
 
+    # per-client loss of each client's own head on its own stream
+    losses = jax.vmap(one_loss)(bodies, heads, batch["val"])
     # average head (what Eq. (1) would deploy) evaluated on each client
-    avg_head = jax.tree.map(lambda v: jnp.mean(v, axis=0),
-                            state.y if not hasattr(state, "params")
-                            else state.params["head"])
-    gains = []
-    for m in range(num_clients):
-        body, head = get(m)
-        b = jax.tree.map(lambda v: v[m], batch["val"])
-        l_avg = client_loss(model, body, avg_head, b)
-        gains.append(l_avg - per_client[m])
+    avg_head = jax.tree.map(lambda v: jnp.mean(v, axis=0), heads)
+    losses_avg = jax.vmap(lambda body, b: one_loss(body, avg_head, b))(
+        bodies, batch["val"])
+    gains = losses_avg - losses
 
-    losses = jnp.asarray(per_client)
+    assert losses.shape == (num_clients,), losses.shape
     return {
         "val_loss_mean": float(jnp.mean(losses)),
         "val_loss_per_client": [round(float(l), 4) for l in losses],
         "perplexity_mean": float(jnp.mean(jnp.exp(jnp.minimum(losses, 20.0)))),
-        "personalisation_gain_mean": float(jnp.mean(jnp.asarray(gains))),
+        "personalisation_gain_mean": float(jnp.mean(gains)),
     }

@@ -1,0 +1,182 @@
+"""Participation engine: client sampling, availability traces, staleness.
+
+Every algorithm on the sequence-spec engine assumed all M clients compute
+oracles and enter the all-reduce every round.  Real federated deployments —
+and the partial-participation analyses of arXiv:2302.05412 (linear speedup
+under non-IID sampling) and arXiv:2204.13299 (momentum FBO) — operate with
+m ≪ M sampled clients per round.  This module produces the per-round client
+mask the whole stack threads through:
+
+* ``flat.client_mean_masked(..., weights=)`` — the mean is over participants
+  only; non-participants pass through bit-identical and never contribute;
+* the gated fused updates (``flat.storm_partial_step(..., mask=)`` etc.) —
+  non-participants' buffers are frozen bit-exact (masked lr = 0, STORM decay
+  pinned to 1, zeroed oracle contributions);
+* ``sequences.make_engine(..., participation=)`` — per-round mask + per-client
+  staleness counters carried on :class:`sequences.FlatState`.
+
+Samplers (``ParticipationSpec.sampler``)
+----------------------------------------
+
+``full``
+    Every client, every round (the default — bit-identical to the
+    pre-participation stack).
+``uniform``
+    ``clients_per_round`` clients sampled uniformly WITHOUT replacement.
+``weighted``
+    ``clients_per_round`` clients sampled without replacement with inclusion
+    probability proportional to ``client_weights`` (data sizes) via the
+    Gumbel top-k trick; the same weights also drive the weighted reduction.
+``trace``
+    Availability-trace process: client m is up at round r iff an independent
+    uniform draw keyed on ``fold_in(fold_in(seed, r), m)`` clears
+    ``availability_rate``; at least ``min_clients`` (the most-available by
+    the same draws) are always kept so a round can never be empty.
+
+Determinism / resumability: every mask is a pure function of
+``fold_in(PRNGKey(seed), round)`` — no sampler state is carried, so a resumed
+run reproduces the exact same participation sequence bit-for-bit (the round
+index rides the train state's step counter).
+
+Staleness: when a client returns after missing k rounds, sequences with a
+staleness discount α < 1 weight its contribution by α^k (``stale_discount``
+here is the spec-wide default; ``Sequence.staleness`` overrides per
+sequence).  The counters live on ``FlatState.stale`` and are advanced by the
+engine at each communication step — a checkpointed restore must carry them
+back in (``engine.init_state(..., stale=)``) for a discounted trajectory to
+continue exactly; the masks themselves need no state at all.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+SAMPLERS = ("full", "uniform", "weighted", "trace")
+
+
+class ParticipationSpec(NamedTuple):
+    """Declarative participation scenario (hashable — safe to close over)."""
+    sampler: str = "full"
+    clients_per_round: int = 0        # m for uniform/weighted (0 → all M)
+    client_weights: tuple | None = None   # per-client data sizes (len M)
+    seed: int = 0                     # availability seed (fold_in'd per round)
+    availability_rate: float = 0.7    # trace: P(client up in a round)
+    min_clients: int = 1              # trace: floor on participants
+    stale_discount: float = 1.0       # default α for staleness discounting
+
+
+class Participation(NamedTuple):
+    """A compiled spec: ``mask_fn(round) -> [M] f32`` (jit-traceable in the
+    round index) plus the static per-client reduction weights."""
+    spec: ParticipationSpec
+    num_clients: int
+    mask_fn: Any                      # round_idx (traced int32 OK) -> [M] f32
+    base_weights: Any                 # [M] f32 — data-size weights (ones)
+
+    def round_weights(self, round_idx):
+        """(mask, weights) for a round: weights = mask · base (zero for
+        non-participants) — what the weighted reductions consume."""
+        mask = self.mask_fn(round_idx)
+        return mask, mask * self.base_weights
+
+
+def _resolve_m(spec: ParticipationSpec, num_clients: int) -> int:
+    m = spec.clients_per_round or num_clients
+    if not 1 <= m <= num_clients:
+        raise ValueError(
+            f"clients_per_round={spec.clients_per_round} out of range for "
+            f"M={num_clients}")
+    return m
+
+
+def make_participation(spec: ParticipationSpec | None,
+                       num_clients: int) -> Participation | None:
+    """Compile ``spec`` for ``num_clients`` clients (None passes through —
+    the no-participation fast path keeps the pre-participation code exact)."""
+    if spec is None:
+        return None
+    if spec.sampler not in SAMPLERS:
+        raise ValueError(f"unknown sampler {spec.sampler!r}; "
+                         f"choose from {SAMPLERS}")
+    M = num_clients
+    if spec.client_weights is not None:
+        if len(spec.client_weights) != M:
+            raise ValueError(f"client_weights has {len(spec.client_weights)} "
+                             f"entries for M={M}")
+        base_w = jnp.asarray(np.asarray(spec.client_weights, np.float32))
+        if not bool(jnp.all(base_w > 0)):
+            raise ValueError("client_weights must be positive")
+    elif spec.sampler == "weighted":
+        # without weights the Gumbel top-k degenerates to uniform sampling —
+        # refuse rather than silently not doing what "weighted" promises
+        raise ValueError("sampler='weighted' requires client_weights "
+                         "(per-client data sizes)")
+    else:
+        base_w = jnp.ones((M,), jnp.float32)
+    key0 = jax.random.PRNGKey(spec.seed)
+
+    if spec.sampler == "full":
+        def mask_fn(round_idx):
+            del round_idx
+            return jnp.ones((M,), jnp.float32)
+
+    elif spec.sampler == "uniform":
+        m = _resolve_m(spec, M)
+
+        def mask_fn(round_idx):
+            k = jax.random.fold_in(key0, jnp.asarray(round_idx, jnp.int32))
+            perm = jax.random.permutation(k, M)
+            return jnp.zeros((M,), jnp.float32).at[perm[:m]].set(1.0)
+
+    elif spec.sampler == "weighted":
+        m = _resolve_m(spec, M)
+        logw = jnp.log(base_w)
+
+        def mask_fn(round_idx):
+            # Gumbel top-k == weighted sampling without replacement
+            k = jax.random.fold_in(key0, jnp.asarray(round_idx, jnp.int32))
+            scores = logw + jax.random.gumbel(k, (M,))
+            _, idx = jax.lax.top_k(scores, m)
+            return jnp.zeros((M,), jnp.float32).at[idx].set(1.0)
+
+    else:  # trace
+        if spec.clients_per_round:
+            raise ValueError(
+                "the trace sampler draws participation from the availability "
+                "process (availability_rate / min_clients) — "
+                "clients_per_round has no effect; unset it or use "
+                "uniform/weighted")
+        if not 1 <= spec.min_clients <= M:
+            raise ValueError(f"min_clients={spec.min_clients} out of range "
+                             f"for M={M}")
+        floor = spec.min_clients
+
+        def mask_fn(round_idx):
+            k = jax.random.fold_in(key0, jnp.asarray(round_idx, jnp.int32))
+            # one independent draw per (round, client): the arrival process
+            u = jax.random.uniform(k, (M,))
+            up = u < spec.availability_rate
+            # floor: the min_clients most-available clients by the same draws
+            # are always kept, so the round is never empty — deterministic
+            # given (seed, round)
+            _, idx = jax.lax.top_k(-u, floor)
+            return jnp.maximum(
+                up.astype(jnp.float32),
+                jnp.zeros((M,), jnp.float32).at[idx].set(1.0))
+
+    return Participation(spec, M, mask_fn, base_w)
+
+
+def expected_comm_fraction(part: Participation | None,
+                           num_rounds: int = 64) -> float:
+    """Mean fraction of clients entering the reduction per round — the
+    comm-volume model's m/M factor (measured over the first ``num_rounds``
+    rounds of the actual trace, not the nominal rate)."""
+    if part is None:
+        return 1.0
+    masks = jax.vmap(part.mask_fn)(jnp.arange(num_rounds))
+    return float(jnp.mean(masks))

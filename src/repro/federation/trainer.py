@@ -25,6 +25,18 @@ the per-sequence communication policies drive BOTH code paths:
   ``sequences.FlatState`` and exposes ``train_step.views(state)`` (legacy
   pytree state for eval/checkpoint) and ``train_step.spec`` (the layout).
 
+Every factory accepts ``participation=`` (a
+``repro.federation.participation.ParticipationSpec``): per-round client
+sampling (uniform/weighted/trace-driven availability) threads the mask
+through BOTH paths — unfused steps freeze non-participants bit-exact with a
+``where`` select and average participants only
+(``tree_util.client_mean_weighted``); fused steps gate the Pallas launches
+(masked lr, pinned decay) and run participation-weighted masked reductions.
+The compiled engine is recorded on ``train_step.participation`` (its
+``.spec`` is the declarative scenario).  Staleness-discounted reductions
+(α^staleness aging of returning clients) additionally need the per-client
+counters on ``FlatState.stale`` and are therefore fused-path only.
+
 Memory discipline (what makes llama3-405b lowerable): the STORM correction
 needs the *previous* iterate — instead of storing another body copy we
 evaluate the old-iterate oracle **before** applying the update, so XLA can
@@ -47,6 +59,8 @@ from repro.config import FederatedConfig
 from repro.core import hypergrad as hg
 from repro.core.model_problem import make_model_bilevel
 from repro.core.tree_util import tree_zeros_like
+from repro.federation.participation import (Participation, ParticipationSpec,
+                                            make_participation)
 from repro.models.registry import Model
 from repro.optim import sequences as seqs
 from repro.optim.sequences import FlatState
@@ -96,13 +110,53 @@ def _sgd(v, g, lr):
     return jax.tree.map(lambda a, b: a - lr * b.astype(a.dtype), v, g)
 
 
-def _comm_seqs(cfg, step, aspec, trees: dict):
+def _comm_seqs(cfg, step, aspec, trees: dict, weights=None):
     """Communicate trees keyed by SECTION name under the sections' policies
     (momenta are passed under their sequence's section too — e.g. ν under
-    "x"); returns the same keys so pairings stay structural."""
-    pol = dict(zip(aspec.sections, aspec.policies))
-    return {name: seqs.comm_tree(cfg, step, t, pol[name])
+    "x"); returns the same keys so pairings stay structural.  ``weights``:
+    per-client participation weights [M] (participants-only mean)."""
+    by_sec = {q.section: q for q in aspec.sequences}
+    return {name: seqs.comm_tree(cfg, step, t, by_sec[name].comm,
+                                 weights=weights,
+                                 comm_every=by_sec[name].comm_every)
             for name, t in trees.items()}
+
+
+def _freeze(mask, new, old):
+    """Bit-exact participation freeze for the unfused tree paths:
+    non-participant rows keep their entering value (``jnp.where`` selects
+    the branch verbatim; all-ones masks select ``new`` everywhere)."""
+    if mask is None:
+        return new
+
+    def one(n, o):
+        col = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(col > 0, n, o)
+
+    return jax.tree.map(one, new, old)
+
+
+def _participation_setup(cfg: FederatedConfig, aspec,
+                         participation: ParticipationSpec | None,
+                         fuse_storm: bool):
+    """Compile the participation spec and return (part, round_ctx) — the
+    unfused paths derive (mask, weights) per step from ``round_ctx``.
+    Staleness discounting needs the engine's per-client counters
+    (``FlatState.stale``), so it is fused-path only."""
+    part = make_participation(participation, cfg.num_clients)
+    if part is not None and not fuse_storm:
+        alphas = seqs.effective_staleness(aspec, part)
+        if any(a != 1.0 for a in alphas):
+            raise NotImplementedError(
+                "staleness discounting (stale_discount/Sequence.staleness != "
+                "1) requires the fused engine — pass fuse_storm=True")
+
+    def round_ctx(step):
+        if part is None:
+            return None, None
+        return part.round_weights(step // cfg.local_steps)
+
+    return part, round_ctx
 
 
 def _private_heads_init(model: Model, key, m: int):
@@ -172,11 +226,12 @@ def _local_lower_setup(model: Model, cfg: FederatedConfig, f, g,
 
 
 def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
-                    init_trees, storm_block, to_state):
+                    init_trees, storm_block, to_state,
+                    part: Participation | None = None):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
-                              block=storm_block)
+                              block=storm_block, participation=part)
 
     def init(key):
         return engine.init_state(init_trees(key))
@@ -189,10 +244,10 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         vt, mt = engine.views(state)
         return to_state(vt, mt, state.step)
 
-    train_step.spec = engine.spec
-    train_step.views = views
-    init.spec = engine.spec
-    init.views = views
+    for fn in (init, train_step):
+        fn.spec = engine.spec
+        fn.views = views
+        fn.participation = part
     return init, train_step
 
 
@@ -205,20 +260,23 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            use_flash: bool = False, use_lru_kernel: bool = False,
                            fuse_oracles: bool = False,
                            fuse_storm: bool = False,
-                           storm_block: int | None = None):
+                           storm_block: int | None = None,
+                           participation: ParticipationSpec | None = None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
     aspec = seqs.SPECS["fedbio"]
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
+    part, round_ctx = _participation_setup(cfg, aspec, participation,
+                                           fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedBiOTrainState(vt["x"], vt["y"], vt["u"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state)
+                               storm_block, to_state, part)
 
     def init(key):
         tr = init_trees(key)
@@ -226,14 +284,17 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                                 jnp.zeros((), jnp.int32))
 
     def train_step(state: FedBiOTrainState, batch):
+        mask, w = round_ctx(state.step)
         gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
-        x = _sgd(state.x, gd["x"], cfg.lr_x)
-        y = _sgd(state.y, gd["y"], cfg.lr_y)
-        u = _sgd(state.u, gd["u"], cfg.lr_u)
-        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y, "u": u})
+        x = _freeze(mask, _sgd(state.x, gd["x"], cfg.lr_x), state.x)
+        y = _freeze(mask, _sgd(state.y, gd["y"], cfg.lr_y), state.y)
+        u = _freeze(mask, _sgd(state.u, gd["u"], cfg.lr_u), state.u)
+        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y, "u": u},
+                        weights=w)
         new = FedBiOTrainState(cd["x"], cd["y"], cd["u"], state.step + 1)
         return new, {"step": new.step}
 
+    train_step.participation = part
     return init, train_step
 
 
@@ -247,13 +308,16 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               use_lru_kernel: bool = False,
                               fuse_storm: bool = False,
                               fuse_oracles: bool = False,
-                              storm_block: int | None = None):
+                              storm_block: int | None = None,
+                              participation: ParticipationSpec | None = None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
     three oracle directions (see ``hypergrad.fused_oracles``).  ``fuse_storm``
     switches to the flat-substrate engine (see the module docstring);
     ``storm_block`` overrides the kernel tile size (testing/small models).
+    ``participation`` samples m ≪ M clients per round (see the module
+    docstring) — the spec is recorded on ``train_step.participation``.
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
@@ -261,6 +325,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = seqs.SPECS["fedbioacc"]
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
+    part, round_ctx = _participation_setup(cfg, aspec, participation,
+                                           fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -268,7 +334,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                                        mt["nu"], mt["q"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state)
+                               storm_block, to_state, part)
 
     def init(key):
         tr = init_trees(key)
@@ -279,6 +345,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 
     def train_step(state: FedBiOAccTrainState, batch):
         t = state.step
+        mask, w = round_ctx(t)
         a = seqs.alpha_schedule(cfg, t)
         # 1) old-iterate oracle FIRST (frees the old body afterwards)
         gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
@@ -289,24 +356,32 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                           state.nu, gd["x"])
         q = jax.tree.map(lambda m, o: (1.0 - cfg.c_u * a * a) * (m - o),
                          state.q, gd["u"])
-        # 3) variable update with the *entering* momenta (Alg. 2 line 4)
+        # 3) variable update with the *entering* momenta (Alg. 2 line 4);
+        #    non-participants are frozen before communication, so their
+        #    pass-through value — and the iterate gd2 sees — is the entering
+        #    one (matching the fused engine's gated launch)
         x = jax.tree.map(lambda v, m: v - (cfg.lr_x * a * m).astype(v.dtype),
                          state.x, state.nu)
         y = jax.tree.map(lambda v, m: v - (cfg.lr_y * a * m).astype(v.dtype),
                          state.y, state.omega)
         u = jax.tree.map(lambda v, m: v - (cfg.lr_u * a * m).astype(v.dtype),
                          state.u, state.q)
-        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y, "u": u})
+        x, y, u = (_freeze(mask, x, state.x), _freeze(mask, y, state.y),
+                   _freeze(mask, u, state.u))
+        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y, "u": u}, weights=w)
         x, y, u = cd["x"], cd["y"], cd["u"]
         # 4) new-iterate oracle, same batch (STORM correction)
         gd2 = voracle({"x": x, "y": y, "u": u}, batch)
-        omega = jax.tree.map(jnp.add, omega, gd2["y"])
-        nu = jax.tree.map(jnp.add, nu, gd2["x"])
-        q = jax.tree.map(jnp.add, q, gd2["u"])
-        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega, "u": q})
+        omega = _freeze(mask, jax.tree.map(jnp.add, omega, gd2["y"]),
+                        state.omega)
+        nu = _freeze(mask, jax.tree.map(jnp.add, nu, gd2["x"]), state.nu)
+        q = _freeze(mask, jax.tree.map(jnp.add, q, gd2["u"]), state.q)
+        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega, "u": q},
+                        weights=w)
         new = FedBiOAccTrainState(x, y, u, md["y"], md["x"], md["u"], t + 1)
         return new, {"step": new.step}
 
+    train_step.participation = part
     return init, train_step
 
 
@@ -321,7 +396,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  use_lru_kernel: bool = False,
                                  fuse_oracles: bool = False,
                                  fuse_storm: bool = False,
-                                 storm_block: int | None = None):
+                                 storm_block: int | None = None,
+                                 participation: ParticipationSpec | None = None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -332,6 +408,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = seqs.SPECS["fedbio_local"]
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
+    part, round_ctx = _participation_setup(cfg, aspec, participation,
+                                           fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -340,7 +418,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     tree_zeros_like(vt["y"]), step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state)
+                               storm_block, to_state, part)
 
     def init(key):
         tr = init_trees(key)
@@ -348,13 +426,15 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                 jnp.zeros((), jnp.int32))
 
     def train_step(state: FedBiOTrainState, batch):
+        mask, w = round_ctx(state.step)
         gd = voracle({"x": state.x, "y": state.y}, batch)
-        x = _sgd(state.x, gd["x"], cfg.lr_x)
-        y = _sgd(state.y, gd["y"], cfg.lr_y)
-        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y})
+        x = _freeze(mask, _sgd(state.x, gd["x"], cfg.lr_x), state.x)
+        y = _freeze(mask, _sgd(state.y, gd["y"], cfg.lr_y), state.y)
+        cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y}, weights=w)
         new = FedBiOTrainState(cd["x"], cd["y"], state.u, state.step + 1)
         return new, {"step": new.step}
 
+    train_step.participation = part
     return init, train_step
 
 
@@ -368,7 +448,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     use_lru_kernel: bool = False,
                                     fuse_oracles: bool = False,
                                     fuse_storm: bool = False,
-                                    storm_block: int | None = None):
+                                    storm_block: int | None = None,
+                                    participation: ParticipationSpec | None = None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE)."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
@@ -377,6 +458,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = seqs.SPECS["fedbioacc_local"]
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
+    part, round_ctx = _participation_setup(cfg, aspec, participation,
+                                           fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -384,7 +467,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                             mt["nu"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state)
+                               storm_block, to_state, part)
 
     def init(key):
         tr = init_trees(key)
@@ -394,6 +477,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 
     def train_step(state: FedBiOAccLocalTrainState, batch):
         t = state.step
+        mask, w = round_ctx(t)
         a = seqs.alpha_schedule(cfg, t)
         gd = voracle({"x": state.x, "y": state.y}, batch)
         omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
@@ -404,15 +488,20 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                          state.x, state.nu)
         y = jax.tree.map(lambda v, m: v - (cfg.lr_y * a * m).astype(v.dtype),
                          state.y, state.omega)
-        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y})   # x averaged, y private
+        x, y = _freeze(mask, x, state.x), _freeze(mask, y, state.y)
+        cd = _comm_seqs(cfg, t, aspec, {"x": x, "y": y},   # x avg'd, y private
+                        weights=w)
         x, y = cd["x"], cd["y"]
         gd2 = voracle({"x": x, "y": y}, batch)
-        omega = jax.tree.map(jnp.add, omega, gd2["y"])
-        nu = jax.tree.map(jnp.add, nu, gd2["x"])
-        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega})  # ν too (Alg. 4 l.14)
+        omega = _freeze(mask, jax.tree.map(jnp.add, omega, gd2["y"]),
+                        state.omega)
+        nu = _freeze(mask, jax.tree.map(jnp.add, nu, gd2["x"]), state.nu)
+        md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega},  # ν too (l.14)
+                        weights=w)
         new = FedBiOAccLocalTrainState(x, y, md["y"], md["x"], t + 1)
         return new, {"step": new.step}
 
+    train_step.participation = part
     return init, train_step
 
 
@@ -426,7 +515,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            use_lru_kernel: bool = False,
                            fuse_oracles: bool = False,   # no-op: one oracle
                            fuse_storm: bool = False,
-                           storm_block: int | None = None):
+                           storm_block: int | None = None,
+                           participation: ParticipationSpec | None = None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -448,12 +538,15 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     def init_trees(key):
         return {"params": _bcast(model.init(key), M)}
 
+    part, round_ctx = _participation_setup(cfg, aspec, participation,
+                                           fuse_storm)
+
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedAvgTrainState(vt["params"], mt["mom"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state)
+                               storm_block, to_state, part)
 
     def init(key):
         tr = init_trees(key)
@@ -461,14 +554,20 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                                 jnp.zeros((), jnp.int32))
 
     def train_step(state: FedAvgTrainState, batch):
+        mask, w = round_ctx(state.step)
         grads = voracle({"params": state.params}, batch)["params"]
         mom = jax.tree.map(lambda m, gr: momentum * m + gr.astype(m.dtype),
                            state.mom, grads)
         params = jax.tree.map(lambda p, m: p - (cfg.lr_x * m).astype(p.dtype),
                               state.params, mom)
-        params = _comm_seqs(cfg, state.step, aspec, {"params": params})["params"]
-        mom = _comm_seqs(cfg, state.step, aspec, {"params": mom})["params"]
+        mom = _freeze(mask, mom, state.mom)
+        params = _freeze(mask, params, state.params)
+        params = _comm_seqs(cfg, state.step, aspec, {"params": params},
+                            weights=w)["params"]
+        mom = _comm_seqs(cfg, state.step, aspec, {"params": mom},
+                         weights=w)["params"]
         new = FedAvgTrainState(params, mom, state.step + 1)
         return new, {"step": new.step}
 
+    train_step.participation = part
     return init, train_step

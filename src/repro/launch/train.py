@@ -22,6 +22,7 @@ from repro.checkpoint import save_checkpoint
 from repro.config import FederatedConfig
 from repro.configs import ARCHS, get_config
 from repro.data import make_fed_batch_fn
+from repro.federation.participation import ParticipationSpec
 from repro.federation.trainer import (make_fedavg_train_step,
                                       make_fedbio_local_train_step,
                                       make_fedbio_train_step,
@@ -62,6 +63,28 @@ def main(argv=None):
     ap.add_argument("--neumann-q", type=int, default=8,
                     help="Neumann series terms for the local-lower "
                          "hyper-gradient (fedbio_local/fedbioacc_local)")
+    ap.add_argument("--participation",
+                    choices=["full", "uniform", "weighted", "trace"],
+                    default="full",
+                    help="client sampler: m-of-M uniform/data-size-weighted "
+                         "sampling or a trace-driven availability process "
+                         "(non-participants frozen, participants-only means)")
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="m for the uniform/weighted samplers (0 = all "
+                         "clients; implies --participation uniform when set)")
+    ap.add_argument("--availability-seed", type=int, default=0,
+                    help="seed of the deterministic per-round availability "
+                         "process (resume-safe: masks depend only on "
+                         "seed + round)")
+    ap.add_argument("--availability-rate", type=float, default=0.7,
+                    help="trace sampler: per-round client up-probability")
+    ap.add_argument("--client-weights", default=None,
+                    help="comma-separated per-client data sizes (required by "
+                         "--participation weighted; also weights the means)")
+    ap.add_argument("--stale-discount", type=float, default=1.0,
+                    help="alpha^staleness discount for returning clients' "
+                         "contributions (fused engine only; 1.0 = off; "
+                         "a no-op under full participation)")
     ap.add_argument("--fuse-storm", action="store_true",
                     help="flat-buffer substrate: the algorithm's sequence "
                          "spec compiled to fused triple-sequence updates "
@@ -80,10 +103,33 @@ def main(argv=None):
                           lr_y=args.lr_y, lr_u=args.lr_u,
                           hierarchy_period=args.hierarchy_period,
                           neumann_q=args.neumann_q)
+    sampler = args.participation
+    if sampler == "full" and args.clients_per_round:
+        sampler = "uniform"
+    pspec = None
+    if sampler != "full":
+        cw = (tuple(float(v) for v in args.client_weights.split(","))
+              if args.client_weights else None)
+        pspec = ParticipationSpec(
+            sampler=sampler, clients_per_round=args.clients_per_round,
+            client_weights=cw, seed=args.availability_seed,
+            availability_rate=args.availability_rate,
+            stale_discount=args.stale_discount)
+    elif args.stale_discount != 1.0:
+        # full participation keeps every staleness counter at 0, so the
+        # discount could never bite — flag the no-op instead of aborting
+        print("--stale-discount ignored: full participation has no "
+              "stale clients (pick a sampler)")
     # every factory takes the full uniform switch set (sequence-spec engine)
     init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False,
                                     fuse_storm=args.fuse_storm,
-                                    fuse_oracles=args.fuse_oracles)
+                                    fuse_oracles=args.fuse_oracles,
+                                    participation=pspec)
+    if pspec is not None:
+        detail = (f"rate={pspec.availability_rate}"
+                  if pspec.sampler == "trace" else
+                  f"m={pspec.clients_per_round or args.clients}/{args.clients}")
+        print(f"participation: {pspec.sampler} {detail} seed={pspec.seed}")
     # flat-substrate states expose pytree views for eval/checkpoint
     as_view = step.views if hasattr(step, "views") else (lambda s: s)
     batch_fn = make_fed_batch_fn(cfg, num_clients=args.clients,
@@ -119,7 +165,13 @@ def main(argv=None):
                             "wall_s": round(time.time() - t0, 1)})
             print(json.dumps(history[-1]), flush=True)
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, as_view(state)._asdict(),
+            payload = as_view(state)._asdict()
+            # the legacy view drops FlatState.stale — without the per-client
+            # staleness counters a discounted run cannot resume exactly
+            stale = getattr(state, "stale", ())
+            if not isinstance(stale, tuple):
+                payload["stale"] = stale
+            save_checkpoint(args.ckpt_dir, payload,
                             {"step": t + 1, "arch": cfg.name})
             print(f"checkpoint @ step {t+1} -> {args.ckpt_dir}")
     assert not any(jnp.isnan(jnp.asarray(h["val_loss"])) for h in history)

@@ -8,10 +8,14 @@
 #                (private sections pass through bit-identical).
 #   sequences  — the declarative sequence-spec engine: every federated
 #                algorithm (fedbio, fedbioacc, the local variants, fedavg)
-#                as a tuple of (section, momentum, lr, decay, comm-policy)
-#                declarations compiled onto the flat substrate (enabled via
-#                fuse_storm=True on the trainer factories and
-#                FederatedConfig.fuse_storm for the core algorithms).
+#                as a tuple of (section, momentum, lr, decay, comm-policy,
+#                comm-cadence, staleness) declarations compiled onto the
+#                flat substrate (enabled via fuse_storm=True on the trainer
+#                factories and FederatedConfig.fuse_storm for the core
+#                algorithms).  make_engine(..., participation=) threads a
+#                per-round client mask (repro.federation.participation)
+#                through the gated launches and participants-only
+#                reductions.
 from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401
 from repro.optim.flat import (FlatSpec, buffers_add, client_mean_masked,  # noqa: F401
                               flatten_tree, make_spec, momentum_sgd_step,

@@ -30,6 +30,16 @@ Layout (``FlatSpec``):
   from ``section_ids`` collapses to contiguous slices, so the communicated
   sections cost one sliced reduction each while private sections pass
   through bit-identical and never enter an all-reduce.
+* **Participation** (``repro.federation.participation``): the same reductions
+  take per-client ``weights`` ([M], zero = non-participant) — the mean is
+  over participants only (weighted by data size / staleness discounts), and
+  non-participant rows pass through bit-identical, exactly like private
+  sections do along the section axis.  The weighted mean is computed as
+  ``mean(x · w · (M/Σw))`` so that all-ones weights reproduce the unweighted
+  path bit-for-bit.  The fused updates take the matching per-client ``mask``:
+  a non-participant's tiles get lr = 0 (and STORM decay / heavy-ball β pinned
+  to 1), which — together with the engine zeroing its oracle contributions —
+  freezes its variable AND momentum buffers bit-exact through the round.
 
 The padding tiles are zero and stay zero under every substrate op (the
 update is elementwise and 0 − lr·0 = 0), so round-trips are exact.
@@ -186,6 +196,45 @@ def _per_tile(grp: _Group, buf, table):
     return jnp.stack(table)[seg]
 
 
+def _mask_per_tile(grp: _Group, buf, mask):
+    """Per-client participation mask [M] → per-tile array aligned with
+    ``_per_tile``'s layout (client-major: client m owns a contiguous run of
+    ``padded // block`` tiles)."""
+    assert buf.ndim >= 2, "participation mask needs a leading client axis"
+    reps = int(np.prod(buf.shape[:-1], dtype=np.int64))
+    tiles = grp.padded // grp.block
+    assert mask.shape == (reps,), (mask.shape, reps)
+    return jnp.repeat(mask.astype(jnp.float32), tiles)
+
+
+def _gate(grp: _Group, buf, lr_tiles, decay_tiles, mask, frozen_decay: float):
+    """Gate per-tile (lr, decay|β) tables with the participation mask:
+    non-participants get lr = 0 and decay pinned to ``frozen_decay`` (1.0
+    freezes STORM/heavy-ball momenta bit-exact once their oracle
+    contributions are zeroed)."""
+    if mask is None:
+        return lr_tiles, decay_tiles
+    mt = _mask_per_tile(grp, buf, mask)
+    lr_tiles = lr_tiles * mt
+    if decay_tiles is not None:
+        decay_tiles = jnp.where(mt > 0, decay_tiles,
+                                jnp.float32(frozen_decay))
+    return lr_tiles, decay_tiles
+
+
+def mask_buffers(bufs, mask):
+    """Zero non-participant rows of [M, N] buffers (the "oracle skipped"
+    half of the freeze: under vmap/SPMD every client computes, but a
+    non-participant's gradients must not reach its momentum).  A ``where``
+    select, not a multiply: participants pass through bit-identical, and a
+    non-finite gradient on a skipped client's batch still zeroes out
+    (0 · inf would poison the frozen momentum with NaN)."""
+    if mask is None:
+        return bufs
+    return tuple(jnp.where(mask[:, None] > 0, b, jnp.zeros((), b.dtype))
+                 for b in bufs)
+
+
 def _dispatch(interpret):
     """Pick the lowering for the triple-sequence update.
 
@@ -202,7 +251,8 @@ def _dispatch(interpret):
 
 
 def storm_partial_step(spec: FlatSpec, var_bufs, mom_bufs, g_old_bufs,
-                       lrs, decays, *, interpret: bool | None = None):
+                       lrs, decays, *, mask=None,
+                       interpret: bool | None = None):
     """One fused triple-sequence launch per dtype buffer:
 
         v_new  = v − lr_sec·m            (variable step, entering momentum)
@@ -211,12 +261,18 @@ def storm_partial_step(spec: FlatSpec, var_bufs, mom_bufs, g_old_bufs,
     ``lrs``/``decays``: one scalar per section (traced OK). The correction
     ``m_part + g_new`` is a single elementwise add once the new-iterate
     oracle exists (after communication).
+
+    ``mask``: optional per-client participation mask [M] — non-participants'
+    tiles run with lr = 0 and decay = 1, so (with ``g_old`` zeroed via
+    :func:`mask_buffers`) their variable and momentum rows are frozen
+    bit-exact inside the same fused launch.
     """
     mode, flag = _dispatch(interpret)
     out_v, out_m = [], []
     for grp, v, m, go in zip(spec.groups, var_bufs, mom_bufs, g_old_bufs):
-        args = (v.reshape(-1), m.reshape(-1), go.reshape(-1),
-                _per_tile(grp, v, lrs), _per_tile(grp, v, decays))
+        lr_t, dc_t = _gate(grp, v, _per_tile(grp, v, lrs),
+                           _per_tile(grp, v, decays), mask, 1.0)
+        args = (v.reshape(-1), m.reshape(-1), go.reshape(-1), lr_t, dc_t)
         if mode == "pallas":
             vn, mn = storm3_step_flat(*args, block=grp.block, interpret=flag)
         else:
@@ -248,7 +304,8 @@ def storm_full_update(spec: FlatSpec, var_bufs, mom_bufs, g_new_bufs,
 
 
 def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
-                      lrs, betas, *, interpret: bool | None = None):
+                      lrs, betas, *, mask=None,
+                      interpret: bool | None = None):
     """One fused heavy-ball launch per dtype buffer:
 
         m_new = β_sec·m + g        (momentum update — FedAvg ordering)
@@ -257,12 +314,17 @@ def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
     Momentum-less specs (β = 0 everywhere, no momentum state) should use
     :func:`sgd_step` instead — same variable result without the dead
     momentum stream.
+
+    ``mask``: optional per-client participation mask [M] — non-participants
+    run with lr = 0 and β = 1 (identity momentum; pair with zeroed ``g`` via
+    :func:`mask_buffers` for a bit-exact freeze).
     """
     mode, flag = _dispatch(interpret)
     out_v, out_m = [], []
     for grp, v, m, gb in zip(spec.groups, var_bufs, mom_bufs, g_bufs):
-        args = (v.reshape(-1), m.reshape(-1), gb.reshape(-1),
-                _per_tile(grp, v, lrs), _per_tile(grp, v, betas))
+        lr_t, bt_t = _gate(grp, v, _per_tile(grp, v, lrs),
+                           _per_tile(grp, v, betas), mask, 1.0)
+        args = (v.reshape(-1), m.reshape(-1), gb.reshape(-1), lr_t, bt_t)
         if mode == "pallas":
             vn, mn = momsgd3_step_flat(*args, block=grp.block, interpret=flag)
         else:
@@ -272,18 +334,22 @@ def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
     return tuple(out_v), tuple(out_m)
 
 
-def sgd_step(spec: FlatSpec, var_bufs, g_bufs, lrs, *,
+def sgd_step(spec: FlatSpec, var_bufs, g_bufs, lrs, *, mask=None,
              interpret: bool | None = None):
     """One fused plain-SGD launch per dtype buffer: v_new = v − lr_sec·g.
 
     The β = 0 fast path for momentum-less specs (FedBiO / FedBiO-Local):
     2 reads + 1 write per element — a pallas_call's outputs are opaque to
     XLA DCE, so the heavy-ball kernel would pay a full dead momentum write.
+
+    ``mask``: optional per-client participation mask [M] — non-participants'
+    tiles run with lr = 0 (v − 0·g = v, bit-exact freeze).
     """
     mode, flag = _dispatch(interpret)
     out_v = []
     for grp, v, gb in zip(spec.groups, var_bufs, g_bufs):
-        args = (v.reshape(-1), gb.reshape(-1), _per_tile(grp, v, lrs))
+        lr_t, _ = _gate(grp, v, _per_tile(grp, v, lrs), None, mask, 1.0)
+        args = (v.reshape(-1), gb.reshape(-1), lr_t)
         if mode == "pallas":
             vn = sgd3_step_flat(*args, block=grp.block, interpret=flag)
         else:
@@ -301,24 +367,56 @@ def buffers_add(a, b):
 # Section-masked communication
 # ---------------------------------------------------------------------------
 
-def _bcast_mean(x):
+def _weight_col(x, w):
+    """Per-client weights → a broadcastable [M, 1, ...] column, rescaled so
+    the *plain mean* of ``x · col`` is the participation-weighted mean:
+
+        col_m = w_m · (M / Σ w)   ⇒   mean_m(x_m · col_m) = Σ w_m x_m / Σ w
+
+    The rescale-into-the-mean form is what makes all-ones weights a
+    bit-identical no-op (col = 1.0 exactly, x · 1.0 = x, then the same
+    ``jnp.mean`` as the unweighted path).  Empty groups (Σw = 0) scale to 0;
+    callers pass non-participants through with a ``where`` on ``col > 0``.
+    """
+    wsum = jnp.sum(w, axis=-1, keepdims=True)
+    scale = jnp.where(wsum > 0, w.shape[-1] / wsum, 0.0)
+    col = (w * scale).astype(x.dtype)
+    return col.reshape(col.shape + (1,) * (x.ndim - col.ndim))
+
+
+def _bcast_mean(x, w=None):
     """Full client mean over the leading axis, broadcast back (the paper's
     communication round — one all-reduce under pjit).  Mirrors
     ``core.tree_util.client_mean`` at array level; importing tree_util here
-    would close an import cycle (optim.flat ← core ← optim.sequences)."""
-    return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
+    would close an import cycle (optim.flat ← core ← optim.sequences).
+
+    ``w``: optional per-client weights [M] (zero = non-participant): the mean
+    is over participants only and non-participant rows pass through
+    bit-identical (selected *around* the reduction, like private sections).
+    """
+    if w is None:
+        return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
+    col = _weight_col(x, w)
+    m = jnp.broadcast_to(jnp.mean(x * col, axis=0, keepdims=True), x.shape)
+    return jnp.where(col > 0, m, x)
 
 
-def _bcast_mean_grouped(x, num_groups: int):
+def _bcast_mean_grouped(x, num_groups: int, w=None):
     """Pod-local grouped mean over contiguous client groups (hierarchical
-    multi-pod schedule — the all-reduce stays on the intra-pod ICI)."""
+    multi-pod schedule — the all-reduce stays on the intra-pod ICI).
+    ``w`` as in :func:`_bcast_mean`, applied within each group."""
     M = x.shape[0]
     g = x.reshape((num_groups, M // num_groups) + x.shape[1:])
-    m = jnp.mean(g, axis=1, keepdims=True)
-    return jnp.broadcast_to(m, g.shape).reshape(x.shape)
+    if w is None:
+        m = jnp.mean(g, axis=1, keepdims=True)
+        return jnp.broadcast_to(m, g.shape).reshape(x.shape)
+    col = _weight_col(g, w.reshape(num_groups, M // num_groups))
+    m = jnp.broadcast_to(jnp.mean(g * col, axis=1, keepdims=True), g.shape)
+    return jnp.where(col > 0, m, g).reshape(x.shape)
 
 
-def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2):
+def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
+                       weights=None):
     """Section-masked client communication over flat [M, N] buffers.
 
     ``modes``: one entry per section (aligned with ``spec.sections``; a
@@ -326,35 +424,49 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2):
     section must not be communicated), ``"mean"`` (full client mean) or
     ``"group"`` (pod-local grouped mean over ``num_groups`` groups).
 
+    ``weights``: optional participation weights — one [M] array shared by
+    every section, or a tuple of per-section [M] arrays (staleness-discounted
+    sequences).  Zero-weight clients are non-participants: the mean is taken
+    over participants only and their rows pass through bit-identical.
+
     Sections are contiguous tile-aligned runs of each dtype buffer
     (``_Group.section_ids``), so the per-tile comm mask collapses to
     contiguous same-mode slices: each communicated run is ONE sliced
     reduction, and ``"none"`` runs are passed through as unreduced slices of
     the input buffer — private sections are bit-identical by construction
-    and never enter an all-reduce (no wasted cross-client traffic).
+    and never enter an all-reduce (no wasted cross-client traffic).  Runs
+    merge across adjacent sections only when both the mode and the weight
+    array coincide.
     """
     n_sections = max(len(spec.sections), 1)
     assert len(modes) == n_sections, (modes, spec.sections)
     assert all(m in ("none", "mean", "group") for m in modes), modes
+    if isinstance(weights, (tuple, list)):
+        assert len(weights) == n_sections, (len(weights), n_sections)
+        w_of_sec = tuple(weights)
+    else:
+        w_of_sec = (weights,) * n_sections
     out = []
     for grp, buf in zip(spec.groups, bufs):
         assert buf.ndim >= 2, "client_mean_masked needs a leading client axis"
-        runs = []                      # [mode, start elem, stop elem]
+        runs = []                      # [mode, weight, start elem, stop elem]
         for tile, sec in enumerate(grp.section_ids):
-            mode = modes[int(sec)]
-            if runs and runs[-1][0] == mode:
-                runs[-1][2] += grp.block
+            mode, w = modes[int(sec)], w_of_sec[int(sec)]
+            if runs and runs[-1][0] == mode and (
+                    runs[-1][1] is w or mode == "none"):
+                runs[-1][3] += grp.block
             else:
-                runs.append([mode, tile * grp.block, (tile + 1) * grp.block])
+                runs.append([mode, w, tile * grp.block,
+                             (tile + 1) * grp.block])
         parts = []
-        for mode, start, stop in runs:
+        for mode, w, start, stop in runs:
             seg = buf[..., start:stop]
             if mode == "none":
                 parts.append(seg)
             elif mode == "mean":
-                parts.append(_bcast_mean(seg))
+                parts.append(_bcast_mean(seg, w))
             else:
-                parts.append(_bcast_mean_grouped(seg, num_groups))
+                parts.append(_bcast_mean_grouped(seg, num_groups, w))
         out.append(parts[0] if len(parts) == 1
                    else jnp.concatenate(parts, axis=-1))
     return tuple(out)

@@ -48,6 +48,28 @@ Communication policies (per sequence)
 
 The same policies drive the unfused tree paths through :func:`comm_tree`,
 so fused and unfused trajectories see identical communication events.
+
+Participation & staleness (``repro.federation.participation``)
+--------------------------------------------------------------
+
+:func:`make_engine` takes ``participation=``: a compiled
+:class:`~repro.federation.participation.Participation` whose per-round client
+mask [M] gates the whole step — non-participants' oracle contributions are
+zeroed, their buffers are frozen bit-exact inside the fused launches
+(masked lr = 0, decay/β pinned to 1), and the reductions average
+*participants only* (``flat.client_mean_masked(..., weights=)``) while
+non-participant rows pass through bit-identical.  Per-client staleness
+counters (rounds missed since last participation) ride
+:class:`FlatState` ``.stale`` and advance at every communication step.
+
+Two per-sequence async knobs decouple the communication cadence:
+
+* ``Sequence.comm_every = k`` — the sequence enters a reduction only every
+  k-th communication round (its correction term simply ages in between);
+* ``Sequence.staleness = α`` — a returning client's contribution to THIS
+  sequence's reduction is discounted by α^staleness (α = 1: no discount;
+  ``None`` inherits ``ParticipationSpec.stale_discount``), so stale local
+  corrections fade instead of polluting the fresh average.
 """
 from __future__ import annotations
 
@@ -56,7 +78,9 @@ from typing import Any, NamedTuple
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.tree_util import client_mean, client_mean_grouped
+from repro.core.tree_util import (client_mean, client_mean_grouped,
+                                  client_mean_grouped_weighted,
+                                  client_mean_weighted)
 from repro.optim import flat
 
 AVERAGED = "averaged"
@@ -72,6 +96,9 @@ class Sequence(NamedTuple):
     lr: str                 # FederatedConfig field holding the learning rate
     decay: str | None = None  # cfg field of the STORM constant (storm kind)
     comm: str = HIERARCHICAL  # communication policy
+    comm_every: int = 1     # reduce only every k-th comm round (async cadence)
+    staleness: float | None = None  # α stale-client discount (None → inherit
+    #   ParticipationSpec.stale_discount; 1.0 → no discounting)
 
 
 class AlgoSpec(NamedTuple):
@@ -148,54 +175,95 @@ def _round_preds(cfg, step):
     return is_comm, is_global
 
 
-def comm_tree(cfg, step, tree, policy: str):
+def comm_tree(cfg, step, tree, policy: str, *, weights=None,
+              comm_every: int = 1):
     """Apply one sequence's communication policy to a pytree with a leading
-    client axis (the unfused train-step paths)."""
+    client axis (the unfused train-step paths).
+
+    ``weights``: optional per-client participation weights [M] (zero =
+    non-participant — averaged around, passed through bit-identical).
+    ``comm_every``: reduce only every k-th communication round (the async
+    cadence knob; 1 = every round, the paper's schedule).
+    """
     assert policy in POLICIES, policy
     if policy == PRIVATE:
         return tree
     is_comm, is_global = _round_preds(cfg, step)
+    if comm_every > 1:
+        round_idx = (step + 1) // cfg.local_steps
+        is_comm = is_comm & (round_idx % comm_every == 0)
+    if weights is None:
+        mean = client_mean
+        grouped = lambda t: client_mean_grouped(t, cfg.hierarchy_groups)
+    else:
+        mean = lambda t: client_mean_weighted(t, weights)
+        grouped = lambda t: client_mean_grouped_weighted(
+            t, cfg.hierarchy_groups, weights)
     if policy == AVERAGED or cfg.hierarchy_period <= 0:
-        return lax.cond(is_comm, client_mean, lambda t: t, tree)
+        return lax.cond(is_comm, mean, lambda t: t, tree)
 
     def do_comm(t):
-        return lax.cond(is_global, client_mean,
-                        lambda tt: client_mean_grouped(tt, cfg.hierarchy_groups),
-                        t)
+        return lax.cond(is_global, mean, grouped, t)
 
     return lax.cond(is_comm, do_comm, lambda t: t, tree)
 
 
-def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies):
+def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
+                 weights=None, comm_every=None):
     """Apply per-section policies to flat [M, N] buffers — one masked
     (sliced) reduction per communicated section run, private sections
-    bit-identical (``flat.client_mean_masked``)."""
+    bit-identical (``flat.client_mean_masked``).
+
+    ``weights``: participation weights — a single [M] array shared by every
+    section or a per-section tuple (staleness-discounted sequences).
+    ``comm_every``: per-section cadence tuple — sections reduce only every
+    k-th comm round; sections sharing a cadence share one guarded reduction.
+    """
     assert all(p in POLICIES for p in policies), policies
-    modes_comm = tuple("mean" if p != PRIVATE else "none" for p in policies)
-    if all(m == "none" for m in modes_comm):
-        return bufs
+    n = len(policies)
+    ce = tuple(comm_every) if comm_every is not None else (1,) * n
+    assert len(ce) == n and all(c >= 1 for c in ce), ce
+    if isinstance(weights, (tuple, list)):
+        assert len(weights) == n, (len(weights), n)
+        w_of_sec = tuple(weights)
+    else:
+        w_of_sec = (weights,) * n
     is_comm, is_global = _round_preds(cfg, step)
+    round_idx = (step + 1) // cfg.local_steps
     groups = cfg.hierarchy_groups
-    if cfg.hierarchy_period <= 0 or HIERARCHICAL not in policies:
-        return lax.cond(
-            is_comm,
-            lambda b: flat.client_mean_masked(spec, b, modes_comm),
-            lambda b: b, bufs)
-    # pod-local rounds: HIERARCHICAL sections take the grouped mean while
-    # AVERAGED sections still take the full mean
-    modes_local = tuple(
-        "group" if p == HIERARCHICAL else ("mean" if p == AVERAGED else "none")
-        for p in policies)
+    for c in sorted(set(ce)):
+        live = tuple(i for i in range(n)
+                     if ce[i] == c and policies[i] != PRIVATE)
+        if not live:
+            continue
+        due = is_comm if c == 1 else is_comm & (round_idx % c == 0)
+        modes_comm = tuple("mean" if i in live else "none" for i in range(n))
+        w_c = tuple(w_of_sec[i] if i in live else None for i in range(n))
+        if cfg.hierarchy_period <= 0 or not any(
+                policies[i] == HIERARCHICAL for i in live):
+            bufs = lax.cond(
+                due,
+                lambda b, mc=modes_comm, wc=w_c:
+                    flat.client_mean_masked(spec, b, mc, weights=wc),
+                lambda b: b, bufs)
+            continue
+        # pod-local rounds: HIERARCHICAL sections take the grouped mean
+        # while AVERAGED sections still take the full mean
+        modes_local = tuple(
+            ("group" if policies[i] == HIERARCHICAL else "mean")
+            if i in live else "none" for i in range(n))
 
-    def do_comm(b):
-        return lax.cond(
-            is_global,
-            lambda bb: flat.client_mean_masked(spec, bb, modes_comm),
-            lambda bb: flat.client_mean_masked(spec, bb, modes_local,
-                                               num_groups=groups),
-            b)
+        def do_comm(b, mc=modes_comm, ml=modes_local, wc=w_c):
+            return lax.cond(
+                is_global,
+                lambda bb: flat.client_mean_masked(spec, bb, mc, weights=wc),
+                lambda bb: flat.client_mean_masked(spec, bb, ml,
+                                                   num_groups=groups,
+                                                   weights=wc),
+                b)
 
-    return lax.cond(is_comm, do_comm, lambda b: b, bufs)
+        bufs = lax.cond(due, do_comm, lambda b: b, bufs)
+    return bufs
 
 
 # ---------------------------------------------------------------------------
@@ -207,19 +275,25 @@ class FlatState(NamedTuple):
 
     ``vars``/``mom`` are tuples of per-dtype [M, N] buffers holding the
     variable (resp. momentum) sections, tile-padded per ``repro.optim.flat``
-    (``mom`` is the empty tuple for momentum-less specs).
+    (``mom`` is the empty tuple for momentum-less specs).  ``stale`` carries
+    the per-client staleness counters [M] int32 (rounds missed since last
+    participation) when a participation engine is attached — the empty tuple
+    otherwise (full participation).
     """
     vars: Any
     mom: Any
     step: jnp.ndarray
+    stale: Any = ()
 
 
 class Engine(NamedTuple):
     """A compiled sequence spec.  All members close over (cfg, aspec, spec).
 
-    * ``init_state(var_trees, mom_trees=None, step=None)`` — flatten section
-      trees (each [M, ...]) into a :class:`FlatState`; momenta default to
-      zeros in f32 buffers (``mom_trees`` is keyed by momentum name).
+    * ``init_state(var_trees, mom_trees=None, step=None, stale=None)`` —
+      flatten section trees (each [M, ...]) into a :class:`FlatState`;
+      momenta default to zeros in f32 buffers (``mom_trees`` is keyed by
+      momentum name); staleness counters default to zeros [M] int32 when a
+      participation engine is attached (the empty tuple otherwise).
     * ``step(state, batch) -> state`` — one fused local step including
       policy-driven communication (jit/scan it; donate the buffers).
     * ``views(state) -> (var_dict, mom_dict | None)`` — pytree views keyed
@@ -232,8 +306,17 @@ class Engine(NamedTuple):
     views: Any
 
 
+def effective_staleness(aspec: AlgoSpec, participation) -> tuple:
+    """Per-sequence staleness discount α (``Sequence.staleness`` overriding
+    the participation spec's default; all 1.0 without participation)."""
+    base = (participation.spec.stale_discount
+            if participation is not None else 1.0)
+    return tuple(q.staleness if q.staleness is not None else base
+                 for q in aspec.sequences)
+
+
 def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
-                block: int | None = None) -> Engine:
+                block: int | None = None, participation=None) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -244,6 +327,13 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     kind the returned trees are the momentum *targets* of each sequence
     (e.g. μ for x/ν), evaluated twice per step (old/new iterate) with the
     same batch — the STORM correction.  For the sgd kind it is called once.
+
+    ``participation``: a compiled
+    :class:`~repro.federation.participation.Participation` — every step
+    derives the round's client mask from the step counter (resumable), gates
+    the fused launches with it, zeroes non-participants' oracle
+    contributions, weights the reductions by participants only, and advances
+    the staleness counters on :class:`FlatState` ``.stale``.
     """
     sections = aspec.sections
     spec = flat.make_spec({s: templates[s] for s in sections},
@@ -251,12 +341,38 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                           block=block if block else flat.BLOCK)
     policies = aspec.policies
     has_mom = aspec.has_momentum
+    part = participation
+    cadence = tuple(q.comm_every for q in aspec.sequences)
+    stale_alpha = effective_staleness(aspec, part)
+    discounted = any(a != 1.0 for a in stale_alpha)
 
     def _flatten_grads(gdict):
         return flat.flatten_tree(spec, {s: gdict[s] for s in sections},
                                  batch_dims=1, dtype=jnp.float32)
 
-    def init_state(var_trees, mom_trees=None, step=None):
+    def _round_ctx(state: FlatState):
+        """(mask, per-section comm weights) of the round ``state.step``
+        belongs to — pure in the step counter, so resume is bit-exact."""
+        if part is None:
+            return None, None
+        mask, w = part.round_weights(state.step // cfg.local_steps)
+        if not discounted:
+            return mask, w          # one shared array → runs merge in comm
+        s = state.stale.astype(jnp.float32)
+        # one discounted array per DISTINCT α — sections sharing α share the
+        # array object, so client_mean_masked still merges their tile runs
+        by_alpha = {a: (w if a == 1.0 else w * jnp.float32(a) ** s)
+                    for a in set(stale_alpha)}
+        return mask, tuple(by_alpha[a] for a in stale_alpha)
+
+    def _next_stale(state: FlatState, mask):
+        if part is None:
+            return state.stale
+        is_comm = (state.step + 1) % cfg.local_steps == 0
+        bumped = jnp.where(mask > 0, 0, state.stale + 1)
+        return jnp.where(is_comm, bumped, state.stale)
+
+    def init_state(var_trees, mom_trees=None, step=None, stale=None):
         vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
                                    batch_dims=1)
         if not has_mom:
@@ -272,46 +388,65 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 spec, {q.section: mom_trees[q.momentum]
                        for q in aspec.sequences},
                 batch_dims=1, dtype=jnp.float32)
+        if part is None:
+            stale_b = ()
+        elif stale is None:
+            stale_b = jnp.zeros((part.num_clients,), jnp.int32)
+        else:
+            stale_b = stale
         return FlatState(vars_b, mom_b,
-                         jnp.zeros((), jnp.int32) if step is None else step)
+                         jnp.zeros((), jnp.int32) if step is None else step,
+                         stale_b)
 
     def _storm_step(state: FlatState, batch) -> FlatState:
         t = state.step
+        mask, wts = _round_ctx(state)
         a = alpha_schedule(cfg, t)
         lrs = tuple(getattr(cfg, q.lr) * a for q in aspec.sequences)
         decays = tuple(1.0 - getattr(cfg, q.decay) * a * a
                        for q in aspec.sequences)
         # 1) old-iterate oracle on transient pytree views (reads only the
         #    entering iterate — lets the variable step and the partial
-        #    momentum share a single fused launch)
-        g_old = _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
-                                      batch))
-        # 2+3) partial momentum + variable step: ONE launch per dtype
+        #    momentum share a single fused launch); non-participants'
+        #    contributions are zeroed (their oracle is "skipped")
+        g_old = flat.mask_buffers(
+            _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
+                                  batch)), mask)
+        # 2+3) partial momentum + variable step: ONE gated launch per dtype
         vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
-                                                g_old, lrs, decays)
-        vars_b = comm_buffers(spec, cfg, t, vars_b, policies)
+                                                g_old, lrs, decays, mask=mask)
+        vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
+                              weights=wts, comm_every=cadence)
         # 4) new-iterate oracle, same batch; STORM correction is one add
-        g_new = _flatten_grads(oracle(flat.unflatten_tree(spec, vars_b),
-                                      batch))
+        g_new = flat.mask_buffers(
+            _flatten_grads(oracle(flat.unflatten_tree(spec, vars_b),
+                                  batch)), mask)
         mom_b = flat.buffers_add(mom_b, g_new)
-        mom_b = comm_buffers(spec, cfg, t, mom_b, policies)
-        return FlatState(vars_b, mom_b, t + 1)
+        mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
+                             weights=wts, comm_every=cadence)
+        return FlatState(vars_b, mom_b, t + 1, _next_stale(state, mask))
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
+        mask, wts = _round_ctx(state)
         lrs = tuple(getattr(cfg, q.lr) for q in aspec.sequences)
-        g = _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
-                                  batch))
+        g = flat.mask_buffers(
+            _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
+                                  batch)), mask)
         if has_mom:
             betas = (aspec.beta,) * len(aspec.sequences)
             vars_b, mom_b = flat.momentum_sgd_step(spec, state.vars,
-                                                   state.mom, g, lrs, betas)
-            mom_b = comm_buffers(spec, cfg, t, mom_b, policies)
+                                                   state.mom, g, lrs, betas,
+                                                   mask=mask)
+            mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
+                                 weights=wts, comm_every=cadence)
         else:
             # momentum-less: the plain-SGD launch (no dead momentum stream)
-            vars_b, mom_b = flat.sgd_step(spec, state.vars, g, lrs), ()
-        vars_b = comm_buffers(spec, cfg, t, vars_b, policies)
-        return FlatState(vars_b, mom_b, t + 1)
+            vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask)
+            mom_b = ()
+        vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
+                              weights=wts, comm_every=cadence)
+        return FlatState(vars_b, mom_b, t + 1, _next_stale(state, mask))
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
 

@@ -1,0 +1,402 @@
+"""Participation engine (repro.federation.participation): sampler
+determinism/resume, participation-weighted masked reductions (uniform(m=M)
+bit-identical to full participation), bit-exact non-participant freezes on
+the flat substrate, fused-vs-unfused trajectory equivalence under partial
+participation for every algorithm, and the staleness / cadence knobs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import FederatedConfig
+from repro.federation.participation import (ParticipationSpec,
+                                            expected_comm_fraction,
+                                            make_participation)
+from repro.optim import flat, sequences as seqs
+
+
+# ---------------------------------------------------------------------------
+# samplers: shape, budget, determinism, resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sampler", ["full", "uniform", "weighted", "trace"])
+def test_sampler_masks_deterministic_and_resumable(sampler):
+    """Same (seed, round) ⇒ same mask, across independent engine instances
+    and regardless of what rounds were evaluated before (resume safety)."""
+    spec = ParticipationSpec(
+        sampler=sampler, seed=7,
+        clients_per_round=0 if sampler == "trace" else 3,
+        client_weights=(1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0))
+    p1 = make_participation(spec, 8)
+    p2 = make_participation(spec, 8)
+    # p1 walks rounds 0..9; p2 jumps straight to round 9 (the resumed run)
+    masks1 = [np.asarray(p1.mask_fn(jnp.int32(r))) for r in range(10)]
+    np.testing.assert_array_equal(masks1[9], np.asarray(p2.mask_fn(jnp.int32(9))))
+    for r in (0, 5):
+        np.testing.assert_array_equal(masks1[r],
+                                      np.asarray(p2.mask_fn(jnp.int32(r))))
+    # jit(traced round index) agrees with eager
+    jm = jax.jit(p1.mask_fn)
+    np.testing.assert_array_equal(np.asarray(jm(jnp.int32(3))), masks1[3])
+    if sampler in ("uniform", "weighted"):
+        assert all(m.sum() == 3 for m in masks1)      # exact budget, no repl.
+        assert any(not np.array_equal(masks1[0], m) for m in masks1[1:])
+    if sampler == "full":
+        assert all(m.sum() == 8 for m in masks1)
+    if sampler == "trace":
+        assert all(m.sum() >= spec.min_clients for m in masks1)
+        assert 0.0 < expected_comm_fraction(p1) <= 1.0
+
+
+def test_sampler_seed_changes_trace():
+    a = make_participation(ParticipationSpec("uniform", 2, seed=0), 8)
+    b = make_participation(ParticipationSpec("uniform", 2, seed=1), 8)
+    ma = np.stack([np.asarray(a.mask_fn(r)) for r in range(8)])
+    mb = np.stack([np.asarray(b.mask_fn(r)) for r in range(8)])
+    assert not np.array_equal(ma, mb)
+
+
+def test_weighted_sampler_prefers_heavy_clients():
+    spec = ParticipationSpec("weighted", 2, seed=3,
+                             client_weights=(50.0, 50.0, 1e-3, 1e-3))
+    p = make_participation(spec, 4)
+    masks = np.stack([np.asarray(p.mask_fn(r)) for r in range(32)])
+    assert masks[:, :2].mean() > masks[:, 2:].mean()
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        make_participation(ParticipationSpec("uniform", 9), 4)
+    with pytest.raises(ValueError):
+        make_participation(ParticipationSpec("nope"), 4)
+    with pytest.raises(ValueError):
+        make_participation(ParticipationSpec("full",
+                                             client_weights=(1.0, 2.0)), 4)
+    with pytest.raises(ValueError):
+        # weighted without weights would silently be uniform — refused
+        make_participation(ParticipationSpec("weighted", 2), 4)
+    with pytest.raises(ValueError):
+        # trace ignores clients_per_round — refused rather than misleading
+        make_participation(ParticipationSpec("trace", 4), 8)
+
+
+# ---------------------------------------------------------------------------
+# weighted masked reductions on the flat substrate
+# ---------------------------------------------------------------------------
+
+def _flat_setup(M=4, dtype=jnp.float32):
+    tree = {"x": jnp.zeros((6,), dtype), "y": jnp.zeros((3,), dtype)}
+    spec = flat.make_spec(jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), tree),
+        sections=("x", "y"), block=8)
+    key = jax.random.PRNGKey(0)
+    btree = {s: jax.random.normal(jax.random.fold_in(key, i),
+                                  (M,) + tree[s].shape).astype(dtype)
+             for i, s in enumerate(tree)}
+    return spec, flat.flatten_tree(spec, btree, batch_dims=1)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M", [3, 4])
+def test_uniform_m_equals_full_bitwise(M, dtype):
+    """uniform(m=M) weights (all ones) must reproduce the unweighted full
+    client mean BIT-identically — partial participation is a strict
+    generalisation, not a numerical fork."""
+    spec, bufs = _flat_setup(M, dtype)
+    part = make_participation(ParticipationSpec("uniform", M), M)
+    _, w = part.round_weights(jnp.int32(0))
+    full = flat.client_mean_masked(spec, bufs, ("mean", "mean"))
+    wtd = flat.client_mean_masked(spec, bufs, ("mean", "mean"), weights=w)
+    for a, b in zip(full, wtd):
+        np.testing.assert_array_equal(
+            np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+
+
+def test_partial_mean_over_participants_only():
+    spec, bufs = _flat_setup(M=4)
+    w = jnp.array([2.0, 0.0, 1.0, 0.0])
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none"), weights=w)
+    # participants: weighted mean of rows 0, 2 only
+    want = (2.0 * bufs[0][0] + 1.0 * bufs[0][2]) / 3.0
+    np.testing.assert_allclose(np.asarray(out[0][0, :8]),
+                               np.asarray(want[:8]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(out[0][0, :8]),
+                                  np.asarray(out[0][2, :8]))
+    # non-participants: bit-identical pass-through ("skip the reduction")
+    for m in (1, 3):
+        np.testing.assert_array_equal(
+            np.asarray(out[0][m]).view(np.uint8),
+            np.asarray(bufs[0][m]).view(np.uint8))
+    # private section untouched for everyone
+    np.testing.assert_array_equal(np.asarray(out[0][..., 8:]),
+                                  np.asarray(bufs[0][..., 8:]))
+
+
+def test_partial_grouped_mean_and_empty_group():
+    spec, bufs = _flat_setup(M=4)
+    w = jnp.array([1.0, 1.0, 0.0, 0.0])     # pod {2,3} entirely absent
+    out = flat.client_mean_masked(spec, bufs, ("group", "none"),
+                                  num_groups=2, weights=w)
+    want = (bufs[0][0] + bufs[0][1]) / 2.0
+    np.testing.assert_allclose(np.asarray(out[0][0, :8]),
+                               np.asarray(want[:8]), rtol=1e-6)
+    for m in (2, 3):                          # empty pod passes through
+        np.testing.assert_array_equal(np.asarray(out[0][m]),
+                                      np.asarray(bufs[0][m]))
+
+
+def test_per_section_weights_tuple():
+    """Staleness-discounted sequences pass per-section weight arrays; each
+    section must be reduced with its own weights."""
+    spec, bufs = _flat_setup(M=4)
+    wx = jnp.array([1.0, 1.0, 0.0, 0.0])
+    wy = jnp.array([0.0, 0.0, 1.0, 1.0])
+    out = flat.client_mean_masked(spec, bufs, ("mean", "mean"),
+                                  weights=(wx, wy))
+    np.testing.assert_allclose(
+        np.asarray(out[0][0, :8]),
+        np.asarray((bufs[0][0, :8] + bufs[0][1, :8]) / 2.0), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out[0][2, 8:]),
+        np.asarray((bufs[0][2, 8:] + bufs[0][3, 8:]) / 2.0), rtol=1e-6)
+    # each section's zero-weight rows pass through
+    np.testing.assert_array_equal(np.asarray(out[0][3, :8]),
+                                  np.asarray(bufs[0][3, :8]))
+    np.testing.assert_array_equal(np.asarray(out[0][0, 8:]),
+                                  np.asarray(bufs[0][0, 8:]))
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-exact freezes, staleness counters, cadence
+# ---------------------------------------------------------------------------
+
+def _toy_engine(algo="fedbioacc", part=None, cfg=None, M=4, seq_overrides=None):
+    cfg = cfg or FederatedConfig(num_clients=M, local_steps=2, lr_x=0.05,
+                                 lr_y=0.1, lr_u=0.1)
+    tmpl = {"x": jnp.zeros((6,)), "y": jnp.zeros((3,)), "u": jnp.zeros((3,))}
+    aspec = seqs.SPECS[algo].without_hierarchy()
+    if seq_overrides:
+        aspec = aspec._replace(sequences=tuple(
+            q._replace(**seq_overrides.get(q.section, {}))
+            for q in aspec.sequences))
+    tmpl = {s: tmpl[s] for s in aspec.sections}
+
+    def oracle(v, batch):
+        return {s: jax.tree.map(lambda a: 0.1 * a + batch, v[s])
+                for s in aspec.sections}
+
+    eng = seqs.make_engine(cfg, aspec, tmpl, oracle, block=8,
+                           participation=part)
+    key = jax.random.PRNGKey(0)
+    vt = {s: jax.random.normal(jax.random.fold_in(key, i),
+                               (M,) + tmpl[s].shape)
+          for i, s in enumerate(aspec.sections)}
+    return cfg, eng, eng.init_state(vt)
+
+
+def test_nonparticipant_buffers_frozen_bit_exact_across_round():
+    part = make_participation(ParticipationSpec("uniform", 2, seed=5), 4)
+    cfg, eng, st = _toy_engine(part=part)
+    mask0 = np.asarray(part.mask_fn(jnp.int32(0)))
+    before = st
+    jstep = jax.jit(eng.step)
+    for t in range(cfg.local_steps):          # one full round incl. comm
+        st = jstep(st, jnp.float32(0.3 + t))
+    for b0, b1 in zip(before.vars + before.mom, st.vars + st.mom):
+        for m in range(4):
+            same = np.array_equal(np.asarray(b0[m]).view(np.uint8),
+                                  np.asarray(b1[m]).view(np.uint8))
+            assert same == (mask0[m] == 0.0), (m, mask0[m])
+    # staleness counters: absentees aged by 1, participants reset
+    np.testing.assert_array_equal(np.asarray(st.stale),
+                                  (mask0 == 0.0).astype(np.int32))
+
+
+def test_nonfinite_skipped_oracle_cannot_poison_frozen_buffers():
+    """A non-participant whose (skipped) oracle blows up must stay frozen:
+    mask_buffers is a where-select, so 0·inf NaNs can never reach the pinned
+    momentum (the failure the multiply formulation would have had)."""
+    bufs = (jnp.stack([jnp.full((8,), jnp.inf), jnp.ones((8,))]),)
+    out = flat.mask_buffers(bufs, jnp.array([0.0, 1.0]))
+    assert bool(jnp.all(out[0][0] == 0.0))
+    np.testing.assert_array_equal(np.asarray(out[0][1]),
+                                  np.asarray(bufs[0][1]))
+
+
+def test_uniform_m_equals_no_participation_engine_bitwise():
+    """uniform(m=M) through the whole fused engine — gated launches, masked
+    gradients, weighted comm, stale counters — must be bit-identical to the
+    engine with no participation at all."""
+    part = make_participation(ParticipationSpec("uniform", 4), 4)
+    cfg, eng_p, st_p = _toy_engine(part=part)
+    _, eng_n, st_n = _toy_engine(part=None)
+    jp, jn = jax.jit(eng_p.step), jax.jit(eng_n.step)
+    for t in range(4):
+        st_p = jp(st_p, jnp.float32(0.1 * t))
+        st_n = jn(st_n, jnp.float32(0.1 * t))
+    for a, b in zip(st_p.vars + st_p.mom, st_n.vars + st_n.mom):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(st_p.stale), np.zeros(4, np.int32))
+
+
+def test_staleness_discount_fades_returning_client():
+    """A client that missed rounds re-enters the average discounted by
+    α^staleness: with α → 0 the returning client is averaged out entirely
+    (the fresh participants dominate), with α = 1 it re-enters at full
+    weight — so the two runs must differ and the α→0 limit must equal the
+    mean over the never-absent clients."""
+    M, I = 4, 1
+    cfg = FederatedConfig(num_clients=M, local_steps=I, lr_x=0.0, lr_y=0.0,
+                          lr_u=0.0)
+
+    # scripted trace: client 0 absent at round 0, everyone in at round 1
+    def run(alpha):
+        part = make_participation(ParticipationSpec("full"), M)
+        masks = jnp.asarray([[0.0, 1.0, 1.0, 1.0], [1.0, 1.0, 1.0, 1.0]])
+        part = part._replace(mask_fn=lambda r: masks[jnp.minimum(r, 1)])
+        ov = {"x": {"staleness": alpha}, "y": {"staleness": alpha},
+              "u": {"staleness": alpha}}
+        _, eng, st = _toy_engine(part=part, cfg=cfg, seq_overrides=ov)
+        jstep = jax.jit(eng.step)
+        for t in range(2):
+            st = jstep(st, jnp.float32(0.0))
+        return st
+
+    st_full = run(1.0)
+    st_faded = run(1e-4)
+    # lr = 0 keeps client values at their init, so round 1's average is over
+    # the init rows; with α ≈ 0 client 0's stale row is ~excluded
+    a = np.asarray(st_full.vars[0][1])
+    b = np.asarray(st_faded.vars[0][1])
+    assert not np.allclose(a, b)
+    _, eng0, st0 = _toy_engine(part=None, cfg=cfg)
+    init_rows = np.asarray(st0.vars[0])
+    want = init_rows[1:].mean(axis=0)         # mean over never-absent 1..3
+    np.testing.assert_allclose(b, want, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(a, init_rows.mean(axis=0), rtol=1e-5)
+
+
+def test_comm_every_decouples_sequence_cadence():
+    """comm_every=2 on the u sequence: at the first comm round x is averaged
+    while u still differs across clients; at the second both agree."""
+    cfg = FederatedConfig(num_clients=4, local_steps=1, lr_x=0.01, lr_y=0.01,
+                          lr_u=0.01)
+    ov = {"u": {"comm_every": 2}}
+    _, eng, st = _toy_engine(part=None, cfg=cfg, seq_overrides=ov)
+    jstep = jax.jit(eng.step)
+    st = jstep(st, jnp.float32(0.2))          # comm round 1: x,y yes; u no
+
+    def spread(sec):
+        vt = flat.unflatten_tree(eng.spec, st.vars)
+        return float(jnp.max(jnp.std(vt[sec], axis=0)))
+
+    assert spread("x") < 1e-7
+    assert spread("u") > 1e-4
+    st = jstep(st, jnp.float32(0.2))          # comm round 2: u too
+    assert spread("u") < 1e-7
+
+
+# ---------------------------------------------------------------------------
+# trainer-level: fused vs unfused under partial participation, and
+# uniform(m=M) == today's full-participation trajectories, all five algos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.models import build_model
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=4, local_steps=2, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05, neumann_q=2, neumann_tau=0.3)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=1, seq_len=16)
+    return model, fed, batch_fn
+
+
+_ALGOS = {
+    "fedbio": ("x", "y", "u"),
+    "fedbioacc": ("x", "y", "u", "omega", "nu", "q"),
+    "fedbio_local": ("x", "y"),
+    "fedbioacc_local": ("x", "y", "omega", "nu"),
+    "fedavg": ("params", "mom"),
+}
+
+
+def _run_traj(maker, model, fed, batch_fn, steps=4, **kw):
+    init, step = maker(model, fed, n_micro=1, remat=False, **kw)
+    state = init(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    key = jax.random.PRNGKey(1)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        state, _ = jstep(state, batch_fn(sub))
+    return step.views(state) if hasattr(step, "views") else state
+
+
+@pytest.mark.parametrize("algo", sorted(_ALGOS))
+def test_fused_matches_unfused_under_partial_participation(setup, algo):
+    """uniform(m = M//2): the fused engine (gated launches + weighted masked
+    reductions) must reproduce the unfused tree path (where-freezes +
+    weighted per-leaf means) across communication rounds."""
+    from repro.federation import trainer as tr
+
+    model, fed, batch_fn = setup
+    maker = getattr(tr, f"make_{algo}_train_step")
+    pspec = ParticipationSpec("uniform", 2, seed=11)
+    v1 = _run_traj(maker, model, fed, batch_fn, participation=pspec)
+    v2 = _run_traj(maker, model, fed, batch_fn, participation=pspec,
+                   fuse_storm=True, storm_block=256)
+    for n in _ALGOS[algo]:
+        for a, b in zip(jax.tree.leaves(getattr(v1, n)),
+                        jax.tree.leaves(getattr(v2, n))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{algo}.{n}")
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("algo", sorted(_ALGOS))
+def test_uniform_full_m_bit_identical_trajectories(setup, algo, fuse):
+    """uniform(m=M) must reproduce today's full-participation trajectories
+    BIT-identically — fused and unfused — for all five algorithms."""
+    from repro.federation import trainer as tr
+
+    model, fed, batch_fn = setup
+    maker = getattr(tr, f"make_{algo}_train_step")
+    kw = dict(fuse_storm=True, storm_block=256) if fuse else {}
+    v1 = _run_traj(maker, model, fed, batch_fn, steps=3, **kw)
+    v2 = _run_traj(maker, model, fed, batch_fn, steps=3,
+                   participation=ParticipationSpec("uniform", 4), **kw)
+    for n in _ALGOS[algo]:
+        for a, b in zip(jax.tree.leaves(getattr(v1, n)),
+                        jax.tree.leaves(getattr(v2, n))):
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8),
+                err_msg=f"{algo}.{n}")
+
+
+def test_unfused_staleness_discount_raises(setup):
+    from repro.federation.trainer import make_fedbioacc_train_step
+
+    model, fed, _ = setup
+    with pytest.raises(NotImplementedError):
+        make_fedbioacc_train_step(
+            model, fed, n_micro=1, remat=False,
+            participation=ParticipationSpec("uniform", 2, stale_discount=0.5))
+
+
+def test_participation_recorded_on_train_step(setup):
+    from repro.federation.trainer import make_fedbioacc_train_step
+
+    model, fed, _ = setup
+    pspec = ParticipationSpec("uniform", 2)
+    for kw in ({}, {"fuse_storm": True, "storm_block": 256}):
+        _, step = make_fedbioacc_train_step(model, fed, n_micro=1,
+                                            remat=False, participation=pspec,
+                                            **kw)
+        assert step.participation.spec == pspec

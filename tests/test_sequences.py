@@ -305,6 +305,60 @@ def test_core_local_fuse_storm_matches(algo):
                                        rtol=1e-5, atol=1e-5, err_msg=n)
 
 
+def test_core_fedbio_fuse_storm_matches():
+    """cfg.fuse_storm on core fedbio (the last tree-map-only reference loop)
+    must be a pure perf switch: same 5-batch sampling, same trajectory."""
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.3, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm="fedbio", num_clients=8,
+                              local_steps=4, lr_x=0.03, lr_y=0.1, lr_u=0.1,
+                              **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        rnd = jax.jit(alg.round)
+        key = jax.random.PRNGKey(2)
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            state, _ = rnd(state, sub)
+        return state
+
+    a, b = run(), run(fuse_storm=True, fuse_storm_block=64)
+    for n in a._fields:
+        np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(b, n)),
+                                   rtol=1e-5, atol=1e-5, err_msg=n)
+
+
+def test_core_fedbio_fuse_oracles_matches_in_deterministic_limit():
+    """With noise=0 every oracle draw is identical, so the shared
+    fused_oracles linearization (1 batch/step instead of 5) must reproduce
+    the unfused fedbio trajectory — alone and on the engine."""
+    from repro.core import make_algorithm, quadratic_problem
+    prob = quadratic_problem(jax.random.PRNGKey(4), num_clients=8, dx=10,
+                             dy=10, noise=0.0, hetero=1.0)
+
+    def run(**kw):
+        cfg = FederatedConfig(algorithm="fedbio", num_clients=8,
+                              local_steps=4, lr_x=0.03, lr_y=0.1, lr_u=0.1,
+                              **kw)
+        alg = make_algorithm(prob, cfg)
+        state = alg.init(jax.random.PRNGKey(1))
+        state, _ = jax.jit(alg.round)(state, jax.random.PRNGKey(2))
+        return state
+
+    a = run()
+    b = run(fuse_oracles=True)
+    c = run(fuse_oracles=True, fuse_storm=True, fuse_storm_block=64)
+    for n in a._fields:
+        for other in (b, c):
+            np.testing.assert_allclose(np.asarray(getattr(a, n)),
+                                       np.asarray(getattr(other, n)),
+                                       rtol=1e-5, atol=1e-5, err_msg=n)
+
+
 def test_core_local_fuse_oracles_matches_in_deterministic_limit():
     """With noise=0 every oracle draw is identical, so sharing one batch
     across (ω, Φ) must reproduce the unfused local trajectory."""
