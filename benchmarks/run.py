@@ -217,6 +217,44 @@ def _timeit_us(fn, n):
     return (time.perf_counter() - t0) / n * 1e6
 
 
+def _timeit_us_donated(jitted, make_args, n, *, warm=True):
+    """Donation-aware timing: the engine jits its train step with buffer
+    donation (``donate_argnums=(0,)``), so the comm benches measure that
+    convention — the in-place sliced reduction then writes only the
+    communicated runs.  Fresh argument copies are pre-made outside the timed
+    region (each call consumes its donated buffers).  ``warm=False`` skips
+    the compile/warm-up execution (callers that already warmed, e.g. the
+    interleaved rounds of :func:`_timeit_us_ab`)."""
+    if warm:
+        r = jitted(*make_args())
+        jax.block_until_ready(r)
+    arg_sets = [make_args() for _ in range(n)]
+    jax.block_until_ready(arg_sets)
+    t0 = time.perf_counter()
+    for a in arg_sets:
+        r = jitted(*a)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _timeit_us_ab(pairs, n, rounds=4):
+    """Interleaved A/B timing for comparison entries: measure each
+    contender's n-call block once per round, alternating, and report each
+    path's MINIMUM block mean.  Back-to-back single blocks let machine-state
+    drift (turbo, page cache, background load) land entirely on one side and
+    flip the recorded ratio; interleaving + min removes the drift bias
+    without favouring either path.  ``pairs``: [(jitted, make_args), ...]
+    with donated-argument conventions as in :func:`_timeit_us_donated`."""
+    for jitted, make_args in pairs:          # compile + warm outside timing
+        jax.block_until_ready(jitted(*make_args()))
+    best = [float("inf")] * len(pairs)
+    for _ in range(rounds):
+        for i, (jitted, make_args) in enumerate(pairs):
+            best[i] = min(best[i], _timeit_us_donated(jitted, make_args, n,
+                                                      warm=False))
+    return best
+
+
 def bench_kernels(fast: bool):
     from repro.kernels.flash.ops import flash_attention
     from repro.kernels.flash.ref import flash_attention_ref
@@ -269,6 +307,7 @@ def bench_kernels(fast: bool):
     bench_storm_triple(fast)
     bench_storm_local(fast)
     bench_participation(fast)
+    bench_sharded_comm(fast)
 
 
 def bench_storm_triple(fast: bool):
@@ -352,13 +391,21 @@ def bench_storm_local(fast: bool):
     """Local-lower-level variants on the sequence-spec engine: the
     dual-sequence fused step (Alg. 4: x/ν averaged, y/ω private) vs its
     tree-map chain, and the section-masked communication (one sliced
-    reduction for x, private y untouched) vs the per-leaf tree-map mean."""
+    reduction for x, private y untouched) vs the per-leaf tree-map mean.
+
+    Sized to the reduced-arch (CPU) regime — a cache-resident federated
+    state over a many-leaf model tree (~100 small tensors, like the reduced
+    archs' norms/biases/projections) — where the structural difference (one
+    compiled loop over static spec-time section runs vs one loop nest per
+    leaf) is what's measured; at HBM-resident sizes both CPU lowerings are
+    RAM-bandwidth-bound and indistinguishable, and the fused win is the TPU
+    kernel + the sharded collective path (``sharded_comm``)."""
     from repro.optim import flat
 
     key = jax.random.PRNGKey(11)
-    leaf = 1 << 14
-    M = 4                               # the trainer's default client count
-    counts = {"x": 48, "y": 8}          # body-heavy tree, private heads
+    leaf = 1 << 10
+    M = 8                               # the benchmark suite's client count
+    counts = {"x": 96, "y": 16}         # body-heavy many-leaf tree
     vt = {s: {f"l{i}": jax.random.normal(
         jax.random.fold_in(key, 100 * j + i), (M, leaf))
         for i in range(n)}
@@ -370,20 +417,18 @@ def bench_storm_local(fast: bool):
     n_total = sum(counts.values()) * leaf
     n_x = counts["x"] * leaf
 
-    block = 1 << 13
+    block = 1 << 9
     tmpl = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), vt)
     spec = flat.make_spec(tmpl, sections=("x", "y"), block=block)
     v_b, m_b, go_b = (flat.flatten_tree(spec, t, batch_dims=1)
                       for t in (vt, mt, got))
 
-    @jax.jit
     def fused_step(v_b, m_b, go_b):
         v_b, mp_b = flat.storm_partial_step(spec, v_b, m_b, go_b, lrs, decays)
         # the communicated sections only — private y/ω sliced around
         v_b = flat.client_mean_masked(spec, v_b, ("mean", "none"))
         return v_b, mp_b
 
-    @jax.jit
     def treemap_step(vt, mt, got):
         sections = ("x", "y")
         mp = {s: jax.tree.map(lambda m, o: decays[i] * (m - o),
@@ -394,20 +439,28 @@ def bench_storm_local(fast: bool):
         vn["x"] = client_mean(vn["x"])           # per-leaf comm, x only
         return vn, mp
 
-    @jax.jit
     def masked_comm(v_b):
         return flat.client_mean_masked(spec, v_b, ("mean", "none"))
 
-    @jax.jit
     def treemap_comm(vt):
         from repro.core.tree_util import client_mean
         return dict(vt, x=client_mean(vt["x"]))
 
-    reps = 10 if fast else 30
-    t_fused = _timeit_us(lambda: fused_step(v_b, m_b, go_b), reps)
-    t_tree = _timeit_us(lambda: treemap_step(vt, mt, got), reps)
-    t_mcomm = _timeit_us(lambda: masked_comm(v_b), reps)
-    t_tcomm = _timeit_us(lambda: treemap_comm(vt), reps)
+    # both sides measured under the engine's donation convention (the train
+    # step donates its state buffers) — the masked path's in-place chunked
+    # sliced reduction then never copies the private y/ω tiles — with
+    # interleaved A/B blocks so machine drift cannot flip the ratios
+    reps = 10 if fast else 20
+    mk_b = lambda: tuple(jax.tree.map(jnp.array, t) for t in (v_b, m_b, go_b))
+    mk_t = lambda: tuple(jax.tree.map(jnp.array, t) for t in (vt, mt, got))
+    t_fused, t_tree = _timeit_us_ab(
+        [(jax.jit(fused_step, donate_argnums=(0, 1, 2)), mk_b),
+         (jax.jit(treemap_step, donate_argnums=(0, 1, 2)), mk_t)], reps)
+    t_mcomm, t_tcomm = _timeit_us_ab(
+        [(jax.jit(masked_comm, donate_argnums=(0,)),
+          lambda: (jax.tree.map(jnp.array, v_b),)),
+         (jax.jit(treemap_comm, donate_argnums=(0,)),
+          lambda: (jax.tree.map(jnp.array, vt),))], reps)
 
     emit("kernel/storm2_local_fused", t_fused,
          f"treemap_us={t_tree:.0f};speedup={t_tree / t_fused:.2f}x;"
@@ -425,7 +478,8 @@ def bench_storm_local(fast: bool):
         "note": "dual-sequence Alg. 4 step (partial STORM + var step + "
                 "masked comm of x only; y/ω private) vs per-leaf tree-map "
                 "chain + per-leaf x mean; off-TPU this is the jnp fallback "
-                "— the kernel + single-all-reduce win is the TPU path",
+                "— the kernel + single-all-reduce win is the TPU path; "
+                "both sides donate their buffers (the engine's convention)",
         "backend": jax.default_backend(),
         "impl": "pallas" if jax.default_backend() == "tpu" else "jnp-flat",
     }
@@ -436,9 +490,11 @@ def bench_storm_local(fast: bool):
         "masked_us": round(t_mcomm, 1),
         "treemap_us": round(t_tcomm, 1),
         "speedup": round(t_tcomm / t_mcomm, 3),
-        "note": "section-masked client mean (one sliced reduction for the "
-                "x run; private y tiles pass through bit-identical) vs "
-                "per-leaf tree-map client_mean over the x tree",
+        "note": "section-masked client mean — static spec-time section-run "
+                "slices, one in-place chunked sliced reduction for the x "
+                "run, private y tiles never touched — vs per-leaf tree-map "
+                "client_mean over the x tree; both sides donate their "
+                "buffers (the engine's convention)",
         "backend": jax.default_backend(),
     }
 
@@ -469,9 +525,10 @@ def bench_participation(fast: bool):
     spec = flat.make_spec(tmpl, sections=("x", "y"), block=block)
     v_b = flat.flatten_tree(spec, vt, batch_dims=1)
 
-    @jax.jit
-    def comm(v_b, w):
-        return flat.client_mean_masked(spec, v_b, ("mean", "none"), weights=w)
+    comm = jax.jit(
+        lambda v_b, w: flat.client_mean_masked(spec, v_b, ("mean", "none"),
+                                               weights=w),
+        donate_argnums=(0,))
 
     reps = 10 if fast else 30
     sweep = []
@@ -479,7 +536,8 @@ def bench_participation(fast: bool):
     for m in (1, 2, 4, 8):
         part = make_participation(ParticipationSpec("uniform", m), M)
         _, w = part.round_weights(jnp.int32(0))
-        us = _timeit_us(lambda: comm(v_b, w), reps)
+        us = _timeit_us_donated(
+            comm, lambda: (jax.tree.map(jnp.array, v_b), w), reps)
         frac = expected_comm_fraction(part)
         bytes_model = int(full_bytes * frac)      # == m/M · full volume
         sweep.append({"m": m, "comm_fraction": round(frac, 4),
@@ -503,6 +561,163 @@ def bench_participation(fast: bool):
                 "bytes saving is network traffic, not local HBM)",
         "backend": jax.default_backend(),
     }
+
+
+_SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+
+from benchmarks.run import _timeit_us_donated as timeit_donated
+from repro.config import FederatedConfig
+from repro.launch.hlo_stats import collective_bytes
+from repro.optim import flat, sequences as seqs
+
+FAST = bool(int(os.environ.get("BENCH_FAST", "0")))
+reps = 5 if FAST else 15
+key = jax.random.PRNGKey(17)
+leaf = 1 << 12
+counts = {"x": 24, "y": 8}          # body communicated, heads private
+n_comm_per_client = counts["x"] * leaf
+MODEL = 2
+out = {"weak_scaling": [], "model_shards": MODEL,
+       "communicated_elements_per_client": n_comm_per_client,
+       "private_elements_per_client": counts["y"] * leaf,
+       "dtype": "float32"}
+
+
+# --- weak scaling over the data axis: M grows with d, M/d fixed at 2 ---
+for d in (1, 2, 4):
+    M = 2 * d
+    mesh = Mesh(np.asarray(jax.devices()[: d * MODEL]).reshape(d, MODEL),
+                ("data", "model"))
+    ctx = flat.make_shard_ctx(mesh)
+    vt = {s: {f"l{i}": jax.random.normal(
+        jax.random.fold_in(key, 100 * j + i), (M, leaf))
+        for i in range(n)}
+        for j, (s, n) in enumerate(counts.items())}
+    tmpl = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype),
+                        vt)
+    spec = flat.make_spec(tmpl, sections=("x", "y"), block=1 << 10,
+                          shards=MODEL)
+    v_b = flat.flatten_tree(spec, vt, batch_dims=1)
+    comm = jax.jit(lambda b: flat.client_mean_masked(
+        spec, b, ("mean", "none"), shard=ctx), donate_argnums=(0,))
+    hlo = comm.lower(v_b).compile().as_text()
+    coll = collective_bytes(hlo)
+    us = timeit_donated(comm, lambda: (jax.tree.map(jnp.array, v_b),), reps)
+    out["weak_scaling"].append({
+        "data_axis": d, "clients": M,
+        "comm_us": round(us, 1),
+        # the collective payload each device contributes: its model-shard
+        # slice of the communicated x run (partial sums), f32
+        "per_shard_psum_bytes": n_comm_per_client // MODEL * 4,
+        "psum_count": coll["counts"]["all-reduce"],
+        "collective_bytes": coll["bytes"]["all-reduce"],
+    })
+
+# --- overlap on/off: fedbioacc-local engine, matmul oracle, 4x2 mesh ---
+d, M, dx = 4, 8, 192
+mesh = Mesh(np.asarray(jax.devices()[: d * MODEL]).reshape(d, MODEL),
+            ("data", "model"))
+ctx = flat.make_shard_ctx(mesh)
+A = jax.random.normal(key, (dx, dx)) / np.sqrt(dx)
+templates = {"x": {"w": jax.ShapeDtypeStruct((dx, dx), jnp.float32)},
+             "y": {"h": jax.ShapeDtypeStruct((dx,), jnp.float32)}}
+
+
+def oracle1(v, batch):
+    w, h = v["x"]["w"], v["y"]["h"]
+    # a few matmuls of compute for the issued all-reduce to hide behind
+    g = A @ jnp.tanh(A @ w + batch[:, None] * 0.01) @ A.T
+    gh = jnp.tanh(w) @ h + batch
+    return {"x": {"w": g}, "y": {"h": gh}}
+
+
+voracle = jax.vmap(oracle1)
+cfg = FederatedConfig(num_clients=M, local_steps=2, lr_x=0.05, lr_y=0.05)
+batch = jax.random.normal(key, (M, dx))
+steps_n = 4 if FAST else 8
+for overlap in (False, True):
+    eng = seqs.make_engine(cfg, seqs.SPECS["fedbioacc_local"], templates,
+                           voracle, block=1 << 10, shard=ctx,
+                           overlap=overlap)
+    w0 = jax.random.normal(key, (M, dx, dx))
+    h0 = jax.random.normal(key, (M, dx))
+    state0 = eng.init_state({"x": {"w": w0}, "y": {"h": h0}})
+    jstep = jax.jit(eng.step, donate_argnums=(0,))
+    st = jstep(state0, batch)               # compile + warm
+    jax.block_until_ready(st)
+    t0 = time.perf_counter()
+    for _ in range(steps_n):
+        st = jstep(st, batch)
+    jax.block_until_ready(st)
+    us = (time.perf_counter() - t0) / steps_n * 1e6
+    out["overlap_off_us" if not overlap else "overlap_on_us"] = round(us, 1)
+
+out["note"] = (
+    "sharded flat substrate on forced-host-device meshes (d x 2): "
+    "client_mean_masked under shard_map — per-shard partial sums, one "
+    "lax.psum over 'data' per communicated run, private tiles never enter "
+    "the collective; weak scaling holds M/d fixed; overlap_on/off times one "
+    "fused engine step (matmul oracle) with the variable all-reduce issued "
+    "concurrently with (resp. after) the new-iterate oracle; host-device "
+    "collectives share 2 CPU cores, so wall clocks measure schedule "
+    "validity, not network speed")
+out["backend"] = jax.default_backend()
+print("SHARDED_COMM_JSON " + json.dumps(out))
+'''
+
+
+def bench_sharded_comm(fast: bool):
+    """Sharded-substrate communication: real psum collectives under
+    shard_map on an 8-host-device mesh, measured in a subprocess (the device
+    count flag must precede jax init).  Records per-shard collective bytes,
+    psum counts, weak scaling over the data axis, and the comm/compute
+    overlap schedule's step time (on vs off)."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["BENCH_FAST"] = "1" if fast else "0"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    # repo root too: the script imports the timing helper from benchmarks.run
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep + root
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    try:
+        res = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=1200)
+        line = next((l for l in res.stdout.splitlines()
+                     if l.startswith("SHARDED_COMM_JSON ")), None)
+        failure = (f"rc={res.returncode}: {res.stderr[-300:]}"
+                   if res.returncode != 0 or line is None else None)
+    except subprocess.TimeoutExpired:
+        line, failure = None, "timeout after 1200s"
+    if failure is not None:
+        emit("kernel/sharded_comm", 0.0, f"FAILED {failure}")
+        # --json rewrites BENCH_kernels.json wholesale — carry the previously
+        # recorded sweep forward instead of silently dropping the artifact
+        prev = os.path.join(root, "BENCH_kernels.json")
+        if os.path.exists(prev):
+            with open(prev) as fh:
+                old = json.load(fh).get("sharded_comm")
+            if old is not None:
+                old["carried_forward"] = f"this run FAILED ({failure})"
+                KERNEL_JSON["sharded_comm"] = old
+        return
+    rec = json.loads(line[len("SHARDED_COMM_JSON "):])
+    for row in rec["weak_scaling"]:
+        emit(f"kernel/sharded_comm/d={row['data_axis']}", row["comm_us"],
+             f"clients={row['clients']};psum_count={row['psum_count']};"
+             f"per_shard_psum_bytes={row['per_shard_psum_bytes']};"
+             f"collective_bytes={row['collective_bytes']}")
+    emit("kernel/sharded_overlap", rec["overlap_on_us"],
+         f"overlap_off_us={rec['overlap_off_us']};"
+         f"ratio={rec['overlap_off_us'] / rec['overlap_on_us']:.2f}x")
+    KERNEL_JSON["sharded_comm"] = rec
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,15 @@ if [[ "${1:-}" != "--bench" ]]; then
             --per-client 1 --seq 32 --local-steps 2 --neumann-q 2 \
             --log-every 1 --fuse-storm --fuse-oracles
     done
+    # multi-device: the sharded flat substrate on a 4x2 debug mesh (8 forced
+    # host devices) — shard_map fused launches, real psum reductions, and
+    # the comm/compute overlap schedule, for a few communication rounds
+    echo "smoke-train: fedbioacc (fused, sharded 4x2 mesh, overlap)"
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.train --arch mamba2-130m --reduced \
+        --algo fedbioacc --steps 4 --clients 4 --per-client 1 --seq 32 \
+        --local-steps 2 --log-every 2 --fuse-storm --fuse-oracles \
+        --mesh 4,2 --overlap
 fi
 
 if [[ "${1:-}" != "--smoke" ]]; then

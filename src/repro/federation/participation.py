@@ -33,10 +33,19 @@ Samplers (``ParticipationSpec.sampler``)
     ``availability_rate``; at least ``min_clients`` (the most-available by
     the same draws) are always kept so a round can never be empty.
 
+    With ``trace_path`` set, the synthetic process is replaced by a
+    **recorded availability log** replayed deterministically: a JSON file
+    holding an [R, M] 0/1 matrix (either a plain list of per-round rows or
+    ``{"masks": [...]}``), row r = the clients up in round r.  Rounds beyond
+    R wrap around (replay is cyclic), so a short recorded window drives an
+    arbitrarily long run reproducibly (``--availability-trace`` on the
+    train CLI).
+
 Determinism / resumability: every mask is a pure function of
-``fold_in(PRNGKey(seed), round)`` — no sampler state is carried, so a resumed
-run reproduces the exact same participation sequence bit-for-bit (the round
-index rides the train state's step counter).
+``fold_in(PRNGKey(seed), round)`` (or a pure table lookup for recorded
+traces) — no sampler state is carried, so a resumed run reproduces the
+exact same participation sequence bit-for-bit (the round index rides the
+train state's step counter).
 
 Staleness: when a client returns after missing k rounds, sequences with a
 staleness discount α < 1 weight its contribution by α^k (``stale_discount``
@@ -67,6 +76,8 @@ class ParticipationSpec(NamedTuple):
     availability_rate: float = 0.7    # trace: P(client up in a round)
     min_clients: int = 1              # trace: floor on participants
     stale_discount: float = 1.0       # default α for staleness discounting
+    trace_path: str | None = None     # trace: recorded availability log
+    #   (JSON [R, M] 0/1 rows, replayed cyclically) instead of the process
 
 
 class Participation(NamedTuple):
@@ -82,6 +93,34 @@ class Participation(NamedTuple):
         non-participants) — what the weighted reductions consume."""
         mask = self.mask_fn(round_idx)
         return mask, mask * self.base_weights
+
+
+def _load_trace(path: str, num_clients: int, min_clients: int):
+    """Recorded availability log → [R, M] f32 replay table.
+
+    Accepts a JSON list of per-round 0/1 rows or ``{"masks": [...]}``; each
+    row must have one entry per client and at least ``min_clients``
+    participants (the same floor the synthetic process enforces — an empty
+    round would make the participants-only mean undefined)."""
+    import json
+    with open(path) as fh:
+        payload = json.load(fh)
+    rows = payload["masks"] if isinstance(payload, dict) else payload
+    arr = np.asarray(rows, np.float32)
+    if arr.ndim != 2 or arr.shape[1] != num_clients:
+        raise ValueError(
+            f"availability trace {path}: expected an [R, {num_clients}] 0/1 "
+            f"matrix (one row per round, one entry per client), got shape "
+            f"{arr.shape}")
+    if not np.all((arr == 0) | (arr == 1)):
+        raise ValueError(f"availability trace {path}: entries must be 0/1")
+    if not np.all(arr.sum(axis=1) >= min_clients):
+        worst = int(np.argmin(arr.sum(axis=1)))
+        raise ValueError(
+            f"availability trace {path}: round {worst} has "
+            f"{int(arr[worst].sum())} participants, below "
+            f"min_clients={min_clients}")
+    return jnp.asarray(arr)
 
 
 def _resolve_m(spec: ParticipationSpec, num_clients: int) -> int:
@@ -102,6 +141,9 @@ def make_participation(spec: ParticipationSpec | None,
     if spec.sampler not in SAMPLERS:
         raise ValueError(f"unknown sampler {spec.sampler!r}; "
                          f"choose from {SAMPLERS}")
+    if spec.trace_path is not None and spec.sampler != "trace":
+        raise ValueError(
+            f"trace_path is a sampler='trace' knob (got {spec.sampler!r})")
     M = num_clients
     if spec.client_weights is not None:
         if len(spec.client_weights) != M:
@@ -143,7 +185,21 @@ def make_participation(spec: ParticipationSpec | None,
             _, idx = jax.lax.top_k(scores, m)
             return jnp.zeros((M,), jnp.float32).at[idx].set(1.0)
 
-    else:  # trace
+    elif spec.sampler == "trace" and spec.trace_path is not None:
+        if spec.clients_per_round:
+            raise ValueError(
+                "a recorded availability log drives participation directly — "
+                "clients_per_round has no effect; unset it")
+        if not 1 <= spec.min_clients <= M:
+            raise ValueError(f"min_clients={spec.min_clients} out of range "
+                             f"for M={M}")
+        table = _load_trace(spec.trace_path, M, spec.min_clients)
+
+        def mask_fn(round_idx):
+            r = jnp.mod(jnp.asarray(round_idx, jnp.int32), table.shape[0])
+            return table[r]
+
+    else:  # trace (synthetic availability process)
         if spec.clients_per_round:
             raise ValueError(
                 "the trace sampler draws participation from the availability "

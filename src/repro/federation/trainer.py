@@ -37,6 +37,18 @@ The compiled engine is recorded on ``train_step.participation`` (its
 (α^staleness aging of returning clients) additionally need the per-client
 counters on ``FlatState.stale`` and are therefore fused-path only.
 
+Every factory also accepts ``mesh=`` (a jax ``Mesh`` with ("data", "model")
+axes, or a prebuilt ``optim.flat.ShardCtx`` for the non-default knobs —
+``use_scatter`` picks the ``psum_scatter``+``all_gather`` all-reduce
+decomposition) and ``overlap=`` — fused-path only: the flat [M, N] buffers
+are partitioned client-axis-over-"data" / packed-axis-over-"model"
+(``sharding.rules.flat_state_specs``), the fused launches and masked
+reductions run under ``shard_map`` with the participant mean lowered to true
+``lax.psum``/``psum_scatter`` collectives, and ``overlap=True`` issues the
+variable-section reduction concurrently with the new-iterate oracle (see
+``repro.optim.sequences``).  ``train_step.shardings(state)`` returns the
+``NamedSharding`` pytree for jit boundaries.
+
 Memory discipline (what makes llama3-405b lowerable): the STORM correction
 needs the *previous* iterate — instead of storing another body copy we
 evaluate the old-iterate oracle **before** applying the update, so XLA can
@@ -225,13 +237,34 @@ def _local_lower_setup(model: Model, cfg: FederatedConfig, f, g,
     return jax.vmap(oracle), templates, init_trees
 
 
+def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
+    """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
+    mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
+    to reach the non-default knobs (``use_scatter``, custom axis names).
+    The sharded substrate and the overlap schedule live on the fused engine
+    only — reject the unfused tree paths loudly."""
+    from repro.optim import flat as _flat
+    if (mesh is not None or overlap) and not fuse_storm:
+        raise ValueError(
+            "mesh=/overlap= require fuse_storm=True — the sharded flat "
+            "substrate and the comm/compute overlap schedule are features "
+            "of the fused sequence-spec engine")
+    if mesh is None:
+        return None
+    if isinstance(mesh, _flat.ShardCtx):
+        return mesh
+    return _flat.make_shard_ctx(mesh)
+
+
 def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
                     init_trees, storm_block, to_state,
-                    part: Participation | None = None):
+                    part: Participation | None = None,
+                    shard=None, overlap: bool = False):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
-                              block=storm_block, participation=part)
+                              block=storm_block, participation=part,
+                              shard=shard, overlap=overlap)
 
     def init(key):
         return engine.init_state(init_trees(key))
@@ -248,6 +281,7 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.spec = engine.spec
         fn.views = views
         fn.participation = part
+        fn.shardings = engine.shardings
     return init, train_step
 
 
@@ -261,7 +295,8 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            fuse_oracles: bool = False,
                            fuse_storm: bool = False,
                            storm_block: int | None = None,
-                           participation: ParticipationSpec | None = None):
+                           participation: ParticipationSpec | None = None,
+                           mesh=None, overlap: bool = False):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -270,13 +305,14 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                                                          fuse_oracles)
     part, round_ctx = _participation_setup(cfg, aspec, participation,
                                            fuse_storm)
+    shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedBiOTrainState(vt["x"], vt["y"], vt["u"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part)
+                               storm_block, to_state, part, shard, overlap)
 
     def init(key):
         tr = init_trees(key)
@@ -309,7 +345,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               fuse_storm: bool = False,
                               fuse_oracles: bool = False,
                               storm_block: int | None = None,
-                              participation: ParticipationSpec | None = None):
+                              participation: ParticipationSpec | None = None,
+                              mesh=None, overlap: bool = False):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -318,6 +355,9 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     ``storm_block`` overrides the kernel tile size (testing/small models).
     ``participation`` samples m ≪ M clients per round (see the module
     docstring) — the spec is recorded on ``train_step.participation``.
+    ``mesh`` shards the flat substrate over the mesh ("data", "model") axes
+    with real ``psum`` collectives under ``shard_map``; ``overlap`` enables
+    the comm/compute overlap schedule (both need ``fuse_storm=True``).
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
@@ -327,6 +367,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                                                          fuse_oracles)
     part, round_ctx = _participation_setup(cfg, aspec, participation,
                                            fuse_storm)
+    shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -334,7 +375,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                                        mt["nu"], mt["q"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part)
+                               storm_block, to_state, part, shard, overlap)
 
     def init(key):
         tr = init_trees(key)
@@ -397,7 +438,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  fuse_oracles: bool = False,
                                  fuse_storm: bool = False,
                                  storm_block: int | None = None,
-                                 participation: ParticipationSpec | None = None):
+                                 participation: ParticipationSpec | None = None,
+                                 mesh=None, overlap: bool = False):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -410,6 +452,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                                         fuse_oracles)
     part, round_ctx = _participation_setup(cfg, aspec, participation,
                                            fuse_storm)
+    shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -418,7 +461,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     tree_zeros_like(vt["y"]), step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part)
+                               storm_block, to_state, part, shard, overlap)
 
     def init(key):
         tr = init_trees(key)
@@ -449,7 +492,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     fuse_oracles: bool = False,
                                     fuse_storm: bool = False,
                                     storm_block: int | None = None,
-                                    participation: ParticipationSpec | None = None):
+                                    participation: ParticipationSpec | None = None,
+                                    mesh=None, overlap: bool = False):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE)."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
@@ -460,6 +504,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                                         fuse_oracles)
     part, round_ctx = _participation_setup(cfg, aspec, participation,
                                            fuse_storm)
+    shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -467,7 +512,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                             mt["nu"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part)
+                               storm_block, to_state, part, shard, overlap)
 
     def init(key):
         tr = init_trees(key)
@@ -516,7 +561,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            fuse_oracles: bool = False,   # no-op: one oracle
                            fuse_storm: bool = False,
                            storm_block: int | None = None,
-                           participation: ParticipationSpec | None = None):
+                           participation: ParticipationSpec | None = None,
+                           mesh=None, overlap: bool = False):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -540,13 +586,14 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
 
     part, round_ctx = _participation_setup(cfg, aspec, participation,
                                            fuse_storm)
+    shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedAvgTrainState(vt["params"], mt["mom"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part)
+                               storm_block, to_state, part, shard, overlap)
 
     def init(key):
         tr = init_trees(key)

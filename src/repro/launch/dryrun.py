@@ -14,7 +14,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse      # noqa: E402
 import json          # noqa: E402
-import re            # noqa: E402
 import time          # noqa: E402
 from typing import Any, Dict  # noqa: E402
 
@@ -25,57 +24,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.config import (INPUT_SHAPES, FederatedConfig, MeshConfig)  # noqa: E402
 from repro.configs import ARCHS, get_config                 # noqa: E402
 from repro.launch import archspec                           # noqa: E402
+from repro.launch.hlo_stats import collective_bytes         # noqa: E402,F401
 from repro.launch.mesh import make_production_mesh          # noqa: E402
 from repro.models import build_model                        # noqa: E402
 from repro.sharding import rules                            # noqa: E402
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
-                "c128": 16}
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
-                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
-
-
-def collective_bytes(hlo: str) -> Dict[str, int]:
-    """Sum result bytes of every collective op in the compiled HLO."""
-    out = {c: 0 for c in _COLLECTIVES}
-    counts = {c: 0 for c in _COLLECTIVES}
-    for line in hlo.splitlines():
-        line = line.strip()
-        if "=" not in line:
-            continue
-        m = re.search(r"=\s*(.*?)\s+(%?)([a-z0-9\-]+)", line)
-        if not m:
-            continue
-        op, op_m = None, None
-        for c in _COLLECTIVES:
-            # match op name incl. async variants (all-reduce-start)
-            m = re.search(rf"\s{c}(-start)?\(", line)
-            if m:
-                op, op_m = c, m
-                break
-        if op is None:
-            continue
-        # result signature = everything between "=" and the op name
-        # (handles tuple results like "= (bf16[..], bf16[..]) all-to-all(...)")
-        eq = line.index(" = ")
-        sig = line[eq + 3:op_m.start()]
-        total = 0
-        for dt, dims in _SHAPE_RE.findall(sig):
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            total += n * _DTYPE_BYTES[dt]
-        out[op] += total
-        counts[op] += 1
-    return {"bytes": out, "counts": counts,
-            "total_bytes": sum(out.values())}
 
 
 def _named(mesh, spec_tree):
@@ -88,9 +40,10 @@ def _named(mesh, spec_tree):
 # ---------------------------------------------------------------------------
 
 def input_specs(arch: str, shape_name: str, mesh_cfg: MeshConfig,
-                optimized: bool = False):
+                optimized: bool = False, num_clients: int | None = None):
     """ShapeDtypeStruct stand-ins for every model input of this combo (no
-    device allocation)."""
+    device allocation).  ``num_clients`` overrides the archspec client count
+    (the fused-mesh path sizes M to the custom mesh's data axis)."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     spec = archspec.deploy_spec(arch, optimized)
@@ -109,8 +62,9 @@ def input_specs(arch: str, shape_name: str, mesh_cfg: MeshConfig,
         return b
 
     if shape.kind == "train":
-        M = archspec.num_clients(arch, mesh_cfg, optimized)
-        per = B // M
+        M = (num_clients if num_clients is not None
+             else archspec.num_clients(arch, mesh_cfg, optimized))
+        per = max(B // M, 1)
         one = lm_batch((M, per))
         return {"train": one, "val": one}
     if shape.kind == "prefill":
@@ -148,6 +102,41 @@ def build_train(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
     out_sh = (_named(mesh, state_spec), _named(mesh, jax.tree.map(
         lambda _: P(), jax.eval_shape(step, state_shapes, batch_shapes)[1])))
     jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return jitted, (state_shapes, batch_shapes)
+
+
+def build_train_fused(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
+                      optimized: bool = False, overlap: bool = False):
+    """Fused sharded flat-substrate train step on a custom ("data", "model")
+    mesh: [M, N] buffers partitioned by ``rules.flat_state_specs``, fused
+    launches + psum reductions under shard_map (``--fused-mesh``)."""
+    from repro.federation.trainer import (make_fedbio_train_step,
+                                          make_fedbioacc_train_step)
+    cfg = get_config(arch)
+    spec = archspec.deploy_spec(arch, optimized)
+    axes = dict(mesh.shape)
+    M = 2 * axes["data"]                  # two clients per data shard
+    model = build_model(cfg)
+    fed = FederatedConfig(algorithm=spec.algorithm, num_clients=M,
+                          local_steps=4, placement=spec.placement)
+    make = (make_fedbio_train_step if spec.algorithm == "fedbio"
+            else make_fedbioacc_train_step)
+    init, step = make(model, fed, n_micro=spec.n_micro_train, remat=True,
+                      fuse_oracles=spec.fuse_oracles, fuse_storm=True,
+                      mesh=mesh, overlap=overlap)
+    state_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    batch_shapes = input_specs(arch, shape_name, mesh_cfg, optimized,
+                               num_clients=M)
+    state_sh = step.shardings(state_shapes)
+    batch_sh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*(("data",) + (None,) * (l.ndim - 1)))),
+        batch_shapes)
+    metrics_sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()),
+        jax.eval_shape(step, state_shapes, batch_shapes)[1])
+    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
                      donate_argnums=(0,))
     return jitted, (state_shapes, batch_shapes)
 
@@ -209,21 +198,38 @@ def build_decode(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
 # ---------------------------------------------------------------------------
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            keep_hlo: bool = False, optimized: bool = False) -> Dict[str, Any]:
+            keep_hlo: bool = False, optimized: bool = False,
+            fused_mesh: tuple | None = None,
+            overlap: bool = False) -> Dict[str, Any]:
     cfg = get_config(arch)
     ok, reason = archspec.shape_applicable(arch, cfg, shape_name)
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "multi_pod": multi_pod, "optimized": optimized}
+    if fused_mesh is not None:
+        rec["fused_mesh"] = list(fused_mesh)
+        rec["overlap"] = overlap
     if not ok:
         rec.update(status="SKIP", reason=reason)
         return rec
 
     mesh_cfg = MeshConfig(multi_pod=multi_pod)
-    mesh = make_production_mesh(multi_pod=multi_pod)
     kind = INPUT_SHAPES[shape_name].kind
+    if fused_mesh is not None:
+        if kind != "train":
+            rec.update(status="SKIP",
+                       reason="--fused-mesh applies to train shapes only")
+            return rec
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(*fused_mesh)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     with mesh:
-        if kind == "train":
+        if kind == "train" and fused_mesh is not None:
+            jitted, args = build_train_fused(arch, shape_name, mesh, mesh_cfg,
+                                             optimized=optimized,
+                                             overlap=overlap)
+        elif kind == "train":
             jitted, args = build_train(arch, shape_name, mesh, mesh_cfg,
                                        optimized=optimized)
         elif kind == "prefill":
@@ -280,10 +286,21 @@ def main():
     ap.add_argument("--optimized", action="store_true",
                     help="§Perf-optimized deployment (fused oracles, "
                          "client_pure placement for small archs)")
+    ap.add_argument("--fused-mesh", default=None, metavar="DATA,MODEL",
+                    help="lower the FUSED sharded flat-substrate train step "
+                         "on a custom (data, model) mesh instead of the "
+                         "unfused step on the production mesh (train shapes "
+                         "only): shard_map launches + real psum collectives")
+    ap.add_argument("--overlap", action="store_true",
+                    help="with --fused-mesh: the comm/compute overlap "
+                         "schedule (variable all-reduce issued concurrently "
+                         "with the new-iterate oracle)")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch × shape) on the chosen mesh")
     ap.add_argument("--out", default=None, help="append JSON records here")
     args = ap.parse_args()
+    fused_mesh = (tuple(int(v) for v in args.fused_mesh.split(","))
+                  if args.fused_mesh else None)
 
     combos = []
     if args.all:
@@ -300,7 +317,8 @@ def main():
               flush=True)
         try:
             rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
-                          optimized=args.optimized)
+                          optimized=args.optimized, fused_mesh=fused_mesh,
+                          overlap=args.overlap)
         except Exception as e:        # record failures — they are bugs
             rec = {"arch": arch, "shape": shape_name,
                    "multi_pod": args.multi_pod, "optimized": args.optimized,

@@ -1,0 +1,57 @@
+"""Compiled-HLO statistics shared by the dry-run and the benchmarks.
+
+``collective_bytes`` parses a compiled module's text for collective ops
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+including their async ``-start`` variants) and sums their result bytes —
+the measured communication schedule the roofline and the ``sharded_comm``
+benchmark records are built on.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in the compiled HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        op, op_m = None, None
+        for c in _COLLECTIVES:
+            # match op name incl. async variants (all-reduce-start)
+            m = re.search(rf"\s{c}(-start)?\(", line)
+            if m:
+                op, op_m = c, m
+                break
+        if op is None:
+            continue
+        # result signature = everything between "=" and the op name
+        # (handles tuple results like "= (bf16[..], bf16[..]) all-to-all(...)")
+        eq = line.index(" = ")
+        sig = line[eq + 3:op_m.start()]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(sig):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[op] += total
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}

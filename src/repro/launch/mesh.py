@@ -29,8 +29,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
-    """Tiny mesh over available devices for CPU tests."""
+    """Tiny ("data", "model") mesh over available devices for CPU tests."""
     import numpy as np
-    devices = jax.devices()[: data * model]
-    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
-                             ("data", "model"))
+    devices = jax.devices()
+    if len(devices) < data * model:
+        raise RuntimeError(
+            f"mesh ({data}, {model}) needs {data * model} devices, found "
+            f"{len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model}")
+    return jax.sharding.Mesh(
+        np.asarray(devices[: data * model]).reshape(data, model),
+        ("data", "model"))
+
+
+def parse_mesh_arg(arg: str):
+    """CLI mesh knob → a jax Mesh: ``"DATA,MODEL"`` (e.g. ``4,2``) builds the
+    debug mesh of that shape; ``"production"`` the 16×16 production mesh."""
+    if arg == "production":
+        return make_production_mesh()
+    try:
+        data, model = (int(v) for v in arg.split(","))
+    except ValueError:
+        raise SystemExit(
+            f"--mesh expects DATA,MODEL (e.g. 4,2) or 'production'; "
+            f"got {arg!r}")
+    return make_debug_mesh(data, model)

@@ -28,6 +28,7 @@ from repro.federation.trainer import (make_fedavg_train_step,
                                       make_fedbio_train_step,
                                       make_fedbioacc_local_train_step,
                                       make_fedbioacc_train_step)
+from repro.launch.mesh import parse_mesh_arg
 from repro.models import build_model
 
 _MAKERS = {
@@ -78,6 +79,11 @@ def main(argv=None):
                          "seed + round)")
     ap.add_argument("--availability-rate", type=float, default=0.7,
                     help="trace sampler: per-round client up-probability")
+    ap.add_argument("--availability-trace", default=None, metavar="PATH.json",
+                    help="recorded availability log ([rounds, clients] 0/1 "
+                         "JSON matrix) replayed deterministically (cyclic) "
+                         "through the trace sampler; implies "
+                         "--participation trace")
     ap.add_argument("--client-weights", default=None,
                     help="comma-separated per-client data sizes (required by "
                          "--participation weighted; also weights the means)")
@@ -92,6 +98,23 @@ def main(argv=None):
     ap.add_argument("--fuse-oracles", action="store_true",
                     help="share one linearization (and one batch) across "
                          "the oracle directions (no-op for fedavg)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="shard the flat substrate over a (data, model) "
+                         "device mesh (e.g. 4,2 under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8, or "
+                         "'production' for the 16x16 pod mesh): clients "
+                         "over 'data', packed params over 'model', real "
+                         "psum collectives under shard_map; needs "
+                         "--fuse-storm")
+    ap.add_argument("--overlap", action="store_true",
+                    help="comm/compute overlap: issue the variable-section "
+                         "all-reduce concurrently with the new-iterate "
+                         "oracle (STORM algorithms; needs --fuse-storm)")
+    ap.add_argument("--scatter-comm", action="store_true",
+                    help="with --mesh: lower the participant mean to the "
+                         "psum_scatter + all_gather all-reduce decomposition "
+                         "instead of one psum (the form XLA can software-"
+                         "pipeline with compute)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -104,7 +127,20 @@ def main(argv=None):
                           hierarchy_period=args.hierarchy_period,
                           neumann_q=args.neumann_q)
     sampler = args.participation
-    if sampler == "full" and args.clients_per_round:
+    if args.availability_trace:
+        # check before the clients-per-round promotion below so the error
+        # names the flag the user actually passed
+        if args.clients_per_round:
+            raise SystemExit(
+                "--availability-trace drives participation from the "
+                "recorded log — --clients-per-round has no effect; unset it")
+        if sampler not in ("full", "trace"):
+            raise SystemExit(
+                f"--availability-trace replays a recorded log through the "
+                f"trace sampler — it conflicts with --participation "
+                f"{sampler} (drop one of the two)")
+        sampler = "trace"
+    elif sampler == "full" and args.clients_per_round:
         sampler = "uniform"
     pspec = None
     if sampler != "full":
@@ -114,21 +150,49 @@ def main(argv=None):
             sampler=sampler, clients_per_round=args.clients_per_round,
             client_weights=cw, seed=args.availability_seed,
             availability_rate=args.availability_rate,
-            stale_discount=args.stale_discount)
+            stale_discount=args.stale_discount,
+            trace_path=args.availability_trace)
     elif args.stale_discount != 1.0:
         # full participation keeps every staleness counter at 0, so the
         # discount could never bite — flag the no-op instead of aborting
         print("--stale-discount ignored: full participation has no "
               "stale clients (pick a sampler)")
+    mesh = parse_mesh_arg(args.mesh) if args.mesh else None
+    if args.overlap and mesh is None:
+        # overlap re-schedules the STORM round (a documented algorithmic
+        # deviation at comm rounds) — without a mesh there is no collective
+        # to hide, so refuse rather than silently change the trajectory
+        raise SystemExit("--overlap needs --mesh: the overlap schedule "
+                         "exists to hide the data-axis collective behind "
+                         "the new-iterate oracle")
+    if mesh is not None:
+        axes = dict(mesh.shape)
+        if args.clients % axes["data"]:
+            raise SystemExit(f"--clients {args.clients} must be divisible by "
+                             f"the mesh data axis ({axes['data']})")
+        print(f"mesh: data={axes['data']} model={axes['model']} "
+              f"({len(mesh.devices.flat)} devices)"
+              + (" overlap=on" if args.overlap else "")
+              + (" comm=psum_scatter" if args.scatter_comm else ""))
+    elif args.scatter_comm:
+        print("--scatter-comm ignored: needs --mesh")
+    mesh_arg = mesh
+    if mesh is not None and args.scatter_comm:
+        from repro.optim.flat import make_shard_ctx
+        mesh_arg = make_shard_ctx(mesh, use_scatter=True)
     # every factory takes the full uniform switch set (sequence-spec engine)
     init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False,
                                     fuse_storm=args.fuse_storm,
                                     fuse_oracles=args.fuse_oracles,
-                                    participation=pspec)
+                                    participation=pspec,
+                                    mesh=mesh_arg, overlap=args.overlap)
     if pspec is not None:
-        detail = (f"rate={pspec.availability_rate}"
-                  if pspec.sampler == "trace" else
-                  f"m={pspec.clients_per_round or args.clients}/{args.clients}")
+        if pspec.trace_path is not None:
+            detail = f"log={pspec.trace_path}"
+        elif pspec.sampler == "trace":
+            detail = f"rate={pspec.availability_rate}"
+        else:
+            detail = f"m={pspec.clients_per_round or args.clients}/{args.clients}"
         print(f"participation: {pspec.sampler} {detail} seed={pspec.seed}")
     # flat-substrate states expose pytree views for eval/checkpoint
     as_view = step.views if hasattr(step, "views") else (lambda s: s)
@@ -138,6 +202,14 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     state = init(key)
     jstep = jax.jit(step, donate_argnums=(0,))
+    if mesh is not None:
+        # batches ride the mesh too: client axis over "data", rest replicated
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        b_shard = NamedSharding(mesh, P("data"))
+        place_batch = lambda b: jax.device_put(b, jax.tree.map(
+            lambda _: b_shard, b))
+    else:
+        place_batch = lambda b: b
     # the eval batch is fixed — generate it once, not per eval_loss call
     eval_batch = jax.tree.map(lambda v: v[0], batch_fn(jax.random.PRNGKey(123)))
 
@@ -158,7 +230,7 @@ def main(argv=None):
     history = []
     for t in range(args.steps):
         key, sub = jax.random.split(key)
-        state, metrics = jstep(state, batch_fn(sub))
+        state, metrics = jstep(state, place_batch(batch_fn(sub)))
         if (t + 1) % args.log_every == 0 or t == 0:
             l = eval_loss(state)
             history.append({"step": t + 1, "val_loss": l,

@@ -26,10 +26,16 @@ Layout (``FlatSpec``):
   client axis M → buffers are [M, N]); ``client_mean`` on such a buffer is
   ONE reduction per dtype instead of one per leaf.
 * ``client_mean_masked`` supports *partial* communication (the local-lower
-  algorithms: average x/ν, keep y/ω private): a per-tile comm mask derived
-  from ``section_ids`` collapses to contiguous slices, so the communicated
-  sections cost one sliced reduction each while private sections pass
-  through bit-identical and never enter an all-reduce.
+  algorithms: average x/ν, keep y/ω private): the per-group **section
+  extents are precomputed at spec-build time** (``_Group.extents``) and
+  adjacent same-mode/same-weight sections coalesce into contiguous element
+  runs, so the communicated sections cost one sliced reduction each while
+  private sections pass through bit-identical and never enter a reduction.
+  Each communicated run is written back **in place**
+  (``lax.dynamic_update_slice`` — under buffer donation the private tiles
+  are never copied; on CPU large runs are additionally chunked so the
+  reduce + broadcast stay cache-resident, which is what makes the sliced
+  reduction beat the per-leaf tree-map path off-TPU too).
 * **Participation** (``repro.federation.participation``): the same reductions
   take per-client ``weights`` ([M], zero = non-participant) — the mean is
   over participants only (weighted by data size / staleness discounts), and
@@ -41,17 +47,45 @@ Layout (``FlatSpec``):
   to 1), which — together with the engine zeroing its oracle contributions —
   freezes its variable AND momentum buffers bit-exact through the round.
 
-The padding tiles are zero and stay zero under every substrate op (the
-update is elementwise and 0 − lr·0 = 0), so round-trips are exact.
+Mesh sharding (``shards`` / ``ShardCtx``)
+-----------------------------------------
+
+``make_spec(..., shards=k)`` builds a layout partitionable over a mesh
+"model" axis of size k: every section is padded to a multiple of
+``block · shards`` and the buffer is laid out **shard-major** — shard j's
+contiguous chunk holds the j-th ``1/shards`` slice of *every* section, in
+section order.  Consequences:
+
+* a plain contiguous ``NamedSharding(mesh, P("data", "model"))`` on the
+  [M, N] buffer gives every model shard the SAME tile-aligned section
+  pattern (``_Group.extents`` describes one shard chunk; the global
+  ``section_ids`` is that pattern tiled ``shards`` times), so section
+  boundaries are tile-aligned to shard boundaries by construction;
+* the fused launches and the masked reductions run under ``jax.shard_map``
+  (pass ``shard=``, a :class:`ShardCtx`): each device launches the kernel on
+  its local [M/d, N/k] chunk with its slice of the per-tile SMEM tables, and
+  ``client_mean_masked`` lowers the participant mean to **per-shard partial
+  sums + one ``lax.psum`` over "data" per communicated run** (or the
+  ``psum_scatter`` + ``all_gather`` decomposition with
+  ``ShardCtx.use_scatter`` — the overlap-friendly all-reduce).  Private and
+  non-participant tiles never enter the collective.
+
+``shards=1`` (the default) reproduces the original single-chip layout
+bit-for-bit.  The padding tiles are zero and stay zero under every substrate
+op (the update is elementwise and 0 − lr·0 = 0), so round-trips are exact.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.kernels.storm.kernel import (BLOCK, momsgd3_step_flat,
                                         momsgd3_step_flat_jnp,
@@ -66,15 +100,18 @@ class _Leaf(NamedTuple):
     index: int          # position in the spec treedef's leaf order
     shape: tuple        # original leaf shape (without batch dims)
     size: int
-    offset: int         # element offset inside the dtype buffer
+    offset: int         # element offset inside the SECTION-CONTIGUOUS layout
 
 
 class _Group(NamedTuple):
     dtype: Any                  # np.dtype of the buffer
     leaves: tuple               # of _Leaf, ascending offset
-    padded: int                 # buffer length — multiple of block
+    padded: int                 # buffer length — multiple of block·shards
     block: int
     section_ids: np.ndarray     # [padded // block] int32 — tile → section
+    extents: tuple = ()         # static per-SHARD-CHUNK section extents:
+    #   ((section, start_elem, stop_elem), ...) covering [0, padded/shards)
+    #   — the section-run slices every reduction is built from
 
 
 class FlatSpec(NamedTuple):
@@ -82,6 +119,41 @@ class FlatSpec(NamedTuple):
     num_leaves: int
     sections: tuple             # section names, () when unsectioned
     groups: tuple               # of _Group
+    shards: int = 1             # model-axis partition count of the layout
+
+
+class ShardCtx(NamedTuple):
+    """How the flat substrate is partitioned over a device mesh: the client
+    axis M over ``data_axis``, the packed parameter axis N over
+    ``model_axis`` (which must equal ``FlatSpec.shards``).  ``use_scatter``
+    lowers the participant mean to ``psum_scatter`` + ``all_gather`` instead
+    of one ``psum`` (the decomposed all-reduce XLA can software-pipeline)."""
+    mesh: Any
+    data_axis: str = "data"
+    model_axis: str = "model"
+    use_scatter: bool = False
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def buffer_spec(self) -> PartitionSpec:
+        return PartitionSpec(self.data_axis, self.model_axis)
+
+
+def make_shard_ctx(mesh, *, data_axis: str = "data",
+                   model_axis: str = "model",
+                   use_scatter: bool = False) -> ShardCtx:
+    axes = dict(mesh.shape)
+    for a in (data_axis, model_axis):
+        if a not in axes:
+            raise ValueError(f"mesh axes {tuple(axes)} carry no {a!r} axis")
+    return ShardCtx(mesh, data_axis, model_axis, use_scatter)
 
 
 def _round_up(n: int, block: int) -> int:
@@ -89,14 +161,20 @@ def _round_up(n: int, block: int) -> int:
 
 
 def make_spec(tree, *, sections: Sequence[str] | None = None,
-              block: int = BLOCK) -> FlatSpec:
+              block: int = BLOCK, shards: int = 1) -> FlatSpec:
     """Build the flat layout for ``tree`` (arrays or ShapeDtypeStructs).
 
     ``sections``: top-level dict keys of ``tree`` whose subtrees must occupy
     contiguous, tile-aligned runs of each dtype buffer (the x|y|u segments of
     the triple-sequence kernel). Buffer order follows ``sections``, not the
     treedef's internal key order.
+
+    ``shards``: model-axis partition count — every section is padded to a
+    multiple of ``block · shards`` and the buffer is laid out shard-major
+    (see the module docstring), so a contiguous 1/shards chunk of the buffer
+    holds 1/shards of every section with tile-aligned section boundaries.
     """
+    assert shards >= 1, shards
     leaves, treedef = jax.tree.flatten(tree)
     if sections is None:
         sec_names = ()
@@ -120,9 +198,12 @@ def make_spec(tree, *, sections: Sequence[str] | None = None,
         if dt not in dtypes:
             dtypes.append(dt)
 
+    quantum = block * shards
     groups = []
     for dt in dtypes:
-        lfs, sec_ids, offset = [], [], 0
+        lfs, offset = [], 0
+        pattern: list = []      # per-shard-chunk tile → section
+        extents: list = []      # per-shard-chunk (section, start, stop)
         for s in range(n_sections):
             start = offset
             for i in order:
@@ -133,13 +214,44 @@ def make_spec(tree, *, sections: Sequence[str] | None = None,
                 lfs.append(_Leaf(i, shape, size, offset))
                 offset += size
             if offset > start:     # section present in this dtype group
-                offset = _round_up(offset, block)
-                sec_ids += [s] * ((offset - start) // block)
+                offset = _round_up(offset, quantum)
+                k = (offset - start) // quantum    # tiles per shard chunk
+                a = extents[-1][2] if extents else 0
+                extents.append((s, a, a + k * block))
+                pattern += [s] * k
         if not lfs:
             continue
         groups.append(_Group(dt, tuple(lfs), offset, block,
-                             np.asarray(sec_ids, np.int32)))
-    return FlatSpec(treedef, len(leaves), sec_names, tuple(groups))
+                             np.tile(np.asarray(pattern, np.int32), shards),
+                             tuple(extents)))
+    return FlatSpec(treedef, len(leaves), sec_names, tuple(groups), shards)
+
+
+def _interleave(spec: FlatSpec, grp: _Group, cont):
+    """Section-contiguous buffer → shard-major layout (reshape/concat only).
+    Identity when ``shards == 1``."""
+    if spec.shards == 1:
+        return cont
+    bs = cont.shape[:-1]
+    pieces, off = [], 0
+    for _, a, b in grp.extents:
+        per_shard = b - a
+        full = per_shard * spec.shards
+        pieces.append(cont[..., off:off + full]
+                      .reshape(bs + (spec.shards, per_shard)))
+        off += full
+    return jnp.concatenate(pieces, axis=-1).reshape(bs + (grp.padded,))
+
+
+def _deinterleave(spec: FlatSpec, grp: _Group, buf):
+    """Shard-major layout → section-contiguous buffer (the inverse)."""
+    if spec.shards == 1:
+        return buf
+    bs = buf.shape[:-1]
+    chunked = buf.reshape(bs + (spec.shards, grp.padded // spec.shards))
+    pieces = [chunked[..., :, a:b].reshape(bs + ((b - a) * spec.shards,))
+              for _, a, b in grp.extents]
+    return jnp.concatenate(pieces, axis=-1)
 
 
 def flatten_tree(spec: FlatSpec, tree, *, batch_dims: int = 0, dtype=None):
@@ -167,8 +279,9 @@ def flatten_tree(spec: FlatSpec, tree, *, batch_dims: int = 0, dtype=None):
         if cursor < grp.padded:
             parts.append(jnp.zeros(batch_shape + (grp.padded - cursor,),
                                    out_dt))
-        bufs.append(parts[0] if len(parts) == 1
-                    else jnp.concatenate(parts, axis=-1))
+        cont = (parts[0] if len(parts) == 1
+                else jnp.concatenate(parts, axis=-1))
+        bufs.append(_interleave(spec, grp, cont))
     return tuple(bufs)
 
 
@@ -176,9 +289,10 @@ def unflatten_tree(spec: FlatSpec, bufs):
     """Materialize the pytree view of flat buffers (slice + reshape only)."""
     leaves = [None] * spec.num_leaves
     for grp, buf in zip(spec.groups, bufs):
-        batch_shape = tuple(buf.shape[:-1])
+        cont = _deinterleave(spec, grp, buf)
+        batch_shape = tuple(cont.shape[:-1])
         for lf in grp.leaves:
-            seg = buf[..., lf.offset:lf.offset + lf.size]
+            seg = cont[..., lf.offset:lf.offset + lf.size]
             leaves[lf.index] = seg.reshape(batch_shape + lf.shape)
     return spec.treedef.unflatten(leaves)
 
@@ -188,36 +302,33 @@ def zeros_buffers(spec: FlatSpec, *, batch_shape: tuple = ()):
                  for g in spec.groups)
 
 
-def _per_tile(grp: _Group, buf, table):
-    """Per-section scalar table → per-tile SMEM array for ``buf``
-    (section pattern repeats over any leading batch dims)."""
+# ---------------------------------------------------------------------------
+# Per-tile hyper-parameter tables and fused launches
+# ---------------------------------------------------------------------------
+
+def _tile_table(grp: _Group, buf, table):
+    """Per-section scalar table → per-tile array [reps, T] for ``buf`` (the
+    section pattern repeats over any leading batch dims; ``reps`` is their
+    product).  Row-major flattening reproduces the kernel's client-major
+    SMEM layout; a 2-D P(data, model) sharding slices it consistently with
+    the buffer."""
     reps = int(np.prod(buf.shape[:-1], dtype=np.int64)) if buf.ndim > 1 else 1
-    seg = np.tile(grp.section_ids, reps)
-    return jnp.stack(table)[seg]
+    row = jnp.stack(table)[grp.section_ids]
+    return jnp.broadcast_to(row[None], (reps, row.shape[0]))
 
 
-def _mask_per_tile(grp: _Group, buf, mask):
-    """Per-client participation mask [M] → per-tile array aligned with
-    ``_per_tile``'s layout (client-major: client m owns a contiguous run of
-    ``padded // block`` tiles)."""
-    assert buf.ndim >= 2, "participation mask needs a leading client axis"
-    reps = int(np.prod(buf.shape[:-1], dtype=np.int64))
-    tiles = grp.padded // grp.block
-    assert mask.shape == (reps,), (mask.shape, reps)
-    return jnp.repeat(mask.astype(jnp.float32), tiles)
-
-
-def _gate(grp: _Group, buf, lr_tiles, decay_tiles, mask, frozen_decay: float):
-    """Gate per-tile (lr, decay|β) tables with the participation mask:
-    non-participants get lr = 0 and decay pinned to ``frozen_decay`` (1.0
-    freezes STORM/heavy-ball momenta bit-exact once their oracle
+def _gate(lr_tiles, decay_tiles, mask, frozen_decay: float):
+    """Gate per-tile (lr, decay|β) tables [M, T] with the participation mask
+    [M]: non-participants get lr = 0 and decay pinned to ``frozen_decay``
+    (1.0 freezes STORM/heavy-ball momenta bit-exact once their oracle
     contributions are zeroed)."""
     if mask is None:
         return lr_tiles, decay_tiles
-    mt = _mask_per_tile(grp, buf, mask)
-    lr_tiles = lr_tiles * mt
+    assert mask.shape == (lr_tiles.shape[0],), (mask.shape, lr_tiles.shape)
+    col = mask.astype(jnp.float32)[:, None]
+    lr_tiles = lr_tiles * col
     if decay_tiles is not None:
-        decay_tiles = jnp.where(mt > 0, decay_tiles,
+        decay_tiles = jnp.where(col > 0, decay_tiles,
                                 jnp.float32(frozen_decay))
     return lr_tiles, decay_tiles
 
@@ -250,9 +361,58 @@ def _dispatch(interpret):
     return "pallas", interpret
 
 
+def _check_shard(spec: FlatSpec, shard: ShardCtx, buf):
+    assert buf.ndim == 2, \
+        "the sharded substrate needs [M, N] buffers (batch_dims=1)"
+    if spec.shards != shard.model_size:
+        raise ValueError(
+            f"spec was built for shards={spec.shards} but the mesh "
+            f"{shard.model_axis} axis has size {shard.model_size}; rebuild "
+            f"the spec with make_spec(..., shards={shard.model_size})")
+    if buf.shape[0] % shard.data_size:
+        raise ValueError(
+            f"client axis M={buf.shape[0]} is not divisible by the mesh "
+            f"{shard.data_axis} axis size {shard.data_size}")
+
+
+def _launch(mode, flag, shard, spec, grp, kern_pallas, kern_jnp,
+            bufs, tables, n_out: int):
+    """One fused kernel launch on one dtype buffer — flattened globally, or
+    per device chunk under ``shard_map`` when ``shard`` is given (every
+    device then streams its local [M/d, N/k] chunk with its slice of the
+    per-tile tables; the launch itself is collective-free)."""
+    if mode == "pallas":
+        fn = functools.partial(kern_pallas, block=grp.block, interpret=flag)
+    else:
+        fn = functools.partial(kern_jnp, block=grp.block)
+    shape = bufs[0].shape
+    if shard is None:
+        outs = fn(*[b.reshape(-1) for b in bufs],
+                  *[t.reshape(-1) for t in tables])
+        outs = outs if n_out > 1 else (outs,)
+        return tuple(o.reshape(shape) for o in outs)
+
+    _check_shard(spec, shard, bufs[0])
+    pb = shard.buffer_spec
+
+    def body(*ops):
+        bs, ts = ops[:len(bufs)], ops[len(bufs):]
+        lshape = bs[0].shape
+        outs = fn(*[b.reshape(-1) for b in bs],
+                  *[t.reshape(-1) for t in ts])
+        outs = outs if n_out > 1 else (outs,)
+        return tuple(o.reshape(lshape) for o in outs)
+
+    return shard_map(body, mesh=shard.mesh,
+                     in_specs=(pb,) * (len(bufs) + len(tables)),
+                     out_specs=(pb,) * n_out,
+                     check_rep=False)(*bufs, *tables)
+
+
 def storm_partial_step(spec: FlatSpec, var_bufs, mom_bufs, g_old_bufs,
                        lrs, decays, *, mask=None,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       shard: ShardCtx | None = None):
     """One fused triple-sequence launch per dtype buffer:
 
         v_new  = v − lr_sec·m            (variable step, entering momentum)
@@ -266,46 +426,47 @@ def storm_partial_step(spec: FlatSpec, var_bufs, mom_bufs, g_old_bufs,
     tiles run with lr = 0 and decay = 1, so (with ``g_old`` zeroed via
     :func:`mask_buffers`) their variable and momentum rows are frozen
     bit-exact inside the same fused launch.
+
+    ``shard``: run each launch under ``shard_map`` on the mesh (elementwise —
+    no collective; the spec must have been built with matching ``shards``).
     """
     mode, flag = _dispatch(interpret)
     out_v, out_m = [], []
     for grp, v, m, go in zip(spec.groups, var_bufs, mom_bufs, g_old_bufs):
-        lr_t, dc_t = _gate(grp, v, _per_tile(grp, v, lrs),
-                           _per_tile(grp, v, decays), mask, 1.0)
-        args = (v.reshape(-1), m.reshape(-1), go.reshape(-1), lr_t, dc_t)
-        if mode == "pallas":
-            vn, mn = storm3_step_flat(*args, block=grp.block, interpret=flag)
-        else:
-            vn, mn = storm3_step_flat_jnp(*args, block=grp.block)
-        out_v.append(vn.reshape(v.shape))
-        out_m.append(mn.reshape(m.shape))
+        lr_t, dc_t = _gate(_tile_table(grp, v, lrs),
+                           _tile_table(grp, v, decays), mask, 1.0)
+        vn, mn = _launch(mode, flag, shard, spec, grp,
+                         storm3_step_flat, storm3_step_flat_jnp,
+                         (v, m, go), (lr_t, dc_t), 2)
+        out_v.append(vn)
+        out_m.append(mn)
     return tuple(out_v), tuple(out_m)
 
 
 def storm_full_update(spec: FlatSpec, var_bufs, mom_bufs, g_new_bufs,
                       g_old_bufs, lrs, decays, *,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      shard: ShardCtx | None = None):
     """Full fused update (v − lr·m, g_new + decay·(m − g_old)) — usable when
     both oracle values are already in hand (benchmarks, single-shot tests)."""
     mode, flag = _dispatch(interpret)
     out_v, out_m = [], []
     for grp, v, m, gn, go in zip(spec.groups, var_bufs, mom_bufs,
                                  g_new_bufs, g_old_bufs):
-        args = (v.reshape(-1), m.reshape(-1), gn.reshape(-1), go.reshape(-1),
-                _per_tile(grp, v, lrs), _per_tile(grp, v, decays))
-        if mode == "pallas":
-            vn, mn = storm3_update_flat(*args, block=grp.block,
-                                        interpret=flag)
-        else:
-            vn, mn = storm3_update_flat_jnp(*args, block=grp.block)
-        out_v.append(vn.reshape(v.shape))
-        out_m.append(mn.reshape(m.shape))
+        vn, mn = _launch(mode, flag, shard, spec, grp,
+                         storm3_update_flat, storm3_update_flat_jnp,
+                         (v, m, gn, go),
+                         (_tile_table(grp, v, lrs),
+                          _tile_table(grp, v, decays)), 2)
+        out_v.append(vn)
+        out_m.append(mn)
     return tuple(out_v), tuple(out_m)
 
 
 def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
                       lrs, betas, *, mask=None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      shard: ShardCtx | None = None):
     """One fused heavy-ball launch per dtype buffer:
 
         m_new = β_sec·m + g        (momentum update — FedAvg ordering)
@@ -317,25 +478,25 @@ def momentum_sgd_step(spec: FlatSpec, var_bufs, mom_bufs, g_bufs,
 
     ``mask``: optional per-client participation mask [M] — non-participants
     run with lr = 0 and β = 1 (identity momentum; pair with zeroed ``g`` via
-    :func:`mask_buffers` for a bit-exact freeze).
+    :func:`mask_buffers` for a bit-exact freeze).  ``shard``: as in
+    :func:`storm_partial_step`.
     """
     mode, flag = _dispatch(interpret)
     out_v, out_m = [], []
     for grp, v, m, gb in zip(spec.groups, var_bufs, mom_bufs, g_bufs):
-        lr_t, bt_t = _gate(grp, v, _per_tile(grp, v, lrs),
-                           _per_tile(grp, v, betas), mask, 1.0)
-        args = (v.reshape(-1), m.reshape(-1), gb.reshape(-1), lr_t, bt_t)
-        if mode == "pallas":
-            vn, mn = momsgd3_step_flat(*args, block=grp.block, interpret=flag)
-        else:
-            vn, mn = momsgd3_step_flat_jnp(*args, block=grp.block)
-        out_v.append(vn.reshape(v.shape))
-        out_m.append(mn.reshape(m.shape))
+        lr_t, bt_t = _gate(_tile_table(grp, v, lrs),
+                           _tile_table(grp, v, betas), mask, 1.0)
+        vn, mn = _launch(mode, flag, shard, spec, grp,
+                         momsgd3_step_flat, momsgd3_step_flat_jnp,
+                         (v, m, gb), (lr_t, bt_t), 2)
+        out_v.append(vn)
+        out_m.append(mn)
     return tuple(out_v), tuple(out_m)
 
 
 def sgd_step(spec: FlatSpec, var_bufs, g_bufs, lrs, *, mask=None,
-             interpret: bool | None = None):
+             interpret: bool | None = None,
+             shard: ShardCtx | None = None):
     """One fused plain-SGD launch per dtype buffer: v_new = v − lr_sec·g.
 
     The β = 0 fast path for momentum-less specs (FedBiO / FedBiO-Local):
@@ -343,18 +504,17 @@ def sgd_step(spec: FlatSpec, var_bufs, g_bufs, lrs, *, mask=None,
     XLA DCE, so the heavy-ball kernel would pay a full dead momentum write.
 
     ``mask``: optional per-client participation mask [M] — non-participants'
-    tiles run with lr = 0 (v − 0·g = v, bit-exact freeze).
+    tiles run with lr = 0 (v − 0·g = v, bit-exact freeze).  ``shard``: as in
+    :func:`storm_partial_step`.
     """
     mode, flag = _dispatch(interpret)
     out_v = []
     for grp, v, gb in zip(spec.groups, var_bufs, g_bufs):
-        lr_t, _ = _gate(grp, v, _per_tile(grp, v, lrs), None, mask, 1.0)
-        args = (v.reshape(-1), gb.reshape(-1), lr_t)
-        if mode == "pallas":
-            vn = sgd3_step_flat(*args, block=grp.block, interpret=flag)
-        else:
-            vn = sgd3_step_flat_jnp(*args, block=grp.block)
-        out_v.append(vn.reshape(v.shape))
+        lr_t, _ = _gate(_tile_table(grp, v, lrs), None, mask, 1.0)
+        (vn,) = _launch(mode, flag, shard, spec, grp,
+                        sgd3_step_flat, sgd3_step_flat_jnp,
+                        (v, gb), (lr_t,), 1)
+        out_v.append(vn)
     return tuple(out_v)
 
 
@@ -415,8 +575,71 @@ def _bcast_mean_grouped(x, num_groups: int, w=None):
     return jnp.where(col > 0, m, g).reshape(x.shape)
 
 
+def _normalize_weights(spec: FlatSpec, weights):
+    n_sections = max(len(spec.sections), 1)
+    if isinstance(weights, (tuple, list)):
+        assert len(weights) == n_sections, (len(weights), n_sections)
+        return tuple(weights)
+    return (weights,) * n_sections
+
+
+def _section_runs(grp: _Group, shards: int, modes, w_of_sec):
+    """Static (mode, weight, start, stop) element runs covering the whole
+    buffer, built from the spec-time section extents; adjacent runs merge
+    when both the mode and the weight array coincide (``"none"`` runs merge
+    unconditionally), including across shard-chunk boundaries."""
+    S = grp.padded // shards
+    runs: list = []
+    for j in range(shards):
+        for s, a, b in grp.extents:
+            mode, w = modes[int(s)], w_of_sec[int(s)]
+            start, stop = j * S + a, j * S + b
+            if runs and runs[-1][0] == mode and runs[-1][3] == start and (
+                    runs[-1][1] is w or mode == "none"):
+                runs[-1][3] = stop
+            else:
+                runs.append([mode, w, start, stop])
+    return runs
+
+
+_CHUNK = 1 << 12    # elements per in-cache chunk of a reduced run (CPU path)
+
+
+def _chunk_len(n: int) -> int:
+    c = n
+    while c > _CHUNK and c % 2 == 0:
+        c //= 2
+    return c
+
+
+def _update_run(buf, start: int, stop: int, upd):
+    """Write ``upd(segment)`` back into ``buf`` over the element run
+    [start, stop) — a ``dynamic_update_slice``, so under buffer donation the
+    reduction happens in place and the tiles outside the run are never
+    copied.  On CPU large runs are chunked so each reduce + broadcast stays
+    cache-resident (the broadcast re-reads the mean row once per client —
+    from L1/L2 instead of RAM), which is what lets the sliced reduction beat
+    the per-leaf tree-map path off-TPU."""
+    nd = buf.ndim
+    length = stop - start
+    c = _chunk_len(length) if jax.default_backend() == "cpu" else length
+    if c == length:
+        seg = buf[..., start:stop]
+        return lax.dynamic_update_slice(buf, upd(seg).astype(buf.dtype),
+                                        (0,) * (nd - 1) + (start,))
+
+    def body(j, acc):
+        o = start + j * c
+        seg = lax.dynamic_slice(acc, (0,) * (nd - 1) + (o,),
+                                acc.shape[:-1] + (c,))
+        return lax.dynamic_update_slice(acc, upd(seg).astype(acc.dtype),
+                                        (0,) * (nd - 1) + (o,))
+
+    return lax.fori_loop(0, length // c, body, buf)
+
+
 def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
-                       weights=None):
+                       weights=None, shard: ShardCtx | None = None):
     """Section-masked client communication over flat [M, N] buffers.
 
     ``modes``: one entry per section (aligned with ``spec.sections``; a
@@ -429,44 +652,122 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
     sequences).  Zero-weight clients are non-participants: the mean is taken
     over participants only and their rows pass through bit-identical.
 
-    Sections are contiguous tile-aligned runs of each dtype buffer
-    (``_Group.section_ids``), so the per-tile comm mask collapses to
-    contiguous same-mode slices: each communicated run is ONE sliced
-    reduction, and ``"none"`` runs are passed through as unreduced slices of
-    the input buffer — private sections are bit-identical by construction
-    and never enter an all-reduce (no wasted cross-client traffic).  Runs
-    merge across adjacent sections only when both the mode and the weight
-    array coincide.
+    Sections are contiguous tile-aligned element runs of each dtype buffer,
+    precomputed at spec-build time (``_Group.extents``) and coalesced across
+    adjacent same-mode/same-weight sections: each communicated run is ONE
+    sliced reduction written back in place, and ``"none"`` runs are simply
+    never touched — private sections are bit-identical by construction and
+    never enter a reduction (no wasted cross-client traffic).
+
+    ``shard``: run under ``shard_map`` on the mesh — every device reduces
+    its local columns with per-shard partial sums and ONE ``lax.psum`` (or
+    ``psum_scatter`` + ``all_gather``) over the data axis per communicated
+    run; private and non-participant tiles never enter the collective.
     """
     n_sections = max(len(spec.sections), 1)
     assert len(modes) == n_sections, (modes, spec.sections)
     assert all(m in ("none", "mean", "group") for m in modes), modes
-    if isinstance(weights, (tuple, list)):
-        assert len(weights) == n_sections, (len(weights), n_sections)
-        w_of_sec = tuple(weights)
-    else:
-        w_of_sec = (weights,) * n_sections
+    w_of_sec = _normalize_weights(spec, weights)
+    if shard is not None:
+        return _client_mean_masked_sharded(spec, bufs, modes, num_groups,
+                                           w_of_sec, shard)
     out = []
     for grp, buf in zip(spec.groups, bufs):
         assert buf.ndim >= 2, "client_mean_masked needs a leading client axis"
-        runs = []                      # [mode, weight, start elem, stop elem]
-        for tile, sec in enumerate(grp.section_ids):
-            mode, w = modes[int(sec)], w_of_sec[int(sec)]
-            if runs and runs[-1][0] == mode and (
-                    runs[-1][1] is w or mode == "none"):
-                runs[-1][3] += grp.block
-            else:
-                runs.append([mode, w, tile * grp.block,
-                             (tile + 1) * grp.block])
-        parts = []
-        for mode, w, start, stop in runs:
-            seg = buf[..., start:stop]
+        for mode, w, start, stop in _section_runs(grp, spec.shards, modes,
+                                                  w_of_sec):
             if mode == "none":
-                parts.append(seg)
-            elif mode == "mean":
-                parts.append(_bcast_mean(seg, w))
+                continue
+            if mode == "mean":
+                upd = functools.partial(lambda s, w: _bcast_mean(s, w), w=w)
             else:
-                parts.append(_bcast_mean_grouped(seg, num_groups, w))
-        out.append(parts[0] if len(parts) == 1
-                   else jnp.concatenate(parts, axis=-1))
+                upd = functools.partial(
+                    lambda s, w: _bcast_mean_grouped(s, num_groups, w), w=w)
+            buf = _update_run(buf, start, stop, upd)
+        out.append(buf)
+    return tuple(out)
+
+
+def _group_index_sets(shard: ShardCtx, num_groups: int):
+    """Contiguous device groups along the data axis for the pod-local mean
+    (``axis_index_groups`` of the grouped psum)."""
+    d = shard.data_size
+    if d % num_groups:
+        raise ValueError(
+            f"hierarchy_groups={num_groups} must divide the mesh "
+            f"{shard.data_axis} axis size {d} on the sharded path")
+    per = d // num_groups
+    return [[g * per + i for i in range(per)] for g in range(num_groups)]
+
+
+def _allreduce(x, shard: ShardCtx, groups):
+    """True all-reduce of per-shard partial sums over the data axis: one
+    ``psum`` — or its ``psum_scatter`` + ``all_gather`` decomposition
+    (``use_scatter``), the form XLA can software-pipeline with compute."""
+    if (shard.use_scatter and groups is None
+            and x.shape[-1] % shard.data_size == 0):
+        piece = lax.psum_scatter(x, shard.data_axis,
+                                 scatter_dimension=x.ndim - 1, tiled=True)
+        return lax.all_gather(piece, shard.data_axis, axis=x.ndim - 1,
+                              tiled=True)
+    return lax.psum(x, shard.data_axis, axis_index_groups=groups)
+
+
+def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
+                                w_of_sec, shard: ShardCtx):
+    out = []
+    for grp, buf in zip(spec.groups, bufs):
+        _check_shard(spec, shard, buf)
+        M = buf.shape[0]
+        # one run list per SHARD CHUNK (the extents are per-chunk already) —
+        # identical on every model shard, so the SPMD program's static
+        # slices line up on all devices
+        runs = _section_runs(grp, 1, modes, w_of_sec)
+        if all(r[0] == "none" for r in runs):
+            out.append(buf)
+            continue
+        groups_idx = (_group_index_sets(shard, num_groups)
+                      if any(r[0] == "group" for r in runs) else None)
+        # distinct weight arrays become shard_map operands ([M] over "data")
+        ws: list = []
+        w_idx: list = []
+        for mode, w, _, _ in runs:
+            if w is None or mode == "none":
+                w_idx.append(None)
+                continue
+            for k, a in enumerate(ws):
+                if a is w:
+                    w_idx.append(k)
+                    break
+            else:
+                ws.append(w)
+                w_idx.append(len(ws) - 1)
+
+        def body(b, *wloc, runs=runs, w_idx=w_idx, groups_idx=groups_idx):
+            for (mode, _, a, stop), wi in zip(runs, w_idx):
+                if mode == "none":
+                    continue        # private tiles never enter the collective
+                seg = b[:, a:stop]
+                gidx = groups_idx if mode == "group" else None
+                denom = M // num_groups if mode == "group" else M
+                if wi is None:
+                    tot = _allreduce(jnp.sum(seg, axis=0), shard, gidx)
+                    upd = jnp.broadcast_to((tot / denom)[None].astype(b.dtype),
+                                           seg.shape)
+                else:
+                    w_l = wloc[wi]
+                    wsum = lax.psum(jnp.sum(w_l), shard.data_axis,
+                                    axis_index_groups=gidx)
+                    scale = jnp.where(wsum > 0, denom / wsum, 0.0)
+                    col = (w_l * scale).astype(seg.dtype)[:, None]
+                    tot = _allreduce(jnp.sum(seg * col, axis=0), shard, gidx)
+                    upd = jnp.where(col > 0, (tot / denom)[None], seg)
+                b = lax.dynamic_update_slice(b, upd.astype(b.dtype), (0, a))
+            return b
+
+        pb = shard.buffer_spec
+        pw = PartitionSpec(shard.data_axis)
+        out.append(shard_map(body, mesh=shard.mesh,
+                             in_specs=(pb,) + (pw,) * len(ws),
+                             out_specs=pb, check_rep=False)(buf, *ws))
     return tuple(out)

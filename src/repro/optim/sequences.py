@@ -70,11 +70,36 @@ Two per-sequence async knobs decouple the communication cadence:
   sequence's reduction is discounted by α^staleness (α = 1: no discount;
   ``None`` inherits ``ParticipationSpec.stale_discount``), so stale local
   corrections fade instead of polluting the fresh average.
+
+Mesh sharding & comm/compute overlap
+------------------------------------
+
+:func:`make_engine` takes ``shard=`` (a :class:`repro.optim.flat.ShardCtx`):
+the spec is built with ``shards =`` the mesh "model"-axis size (tile-aligned
+shard-major layout), :class:`FlatState` buffers carry ``NamedSharding``s
+built from ``repro.sharding.rules.flat_state_specs`` (client axis M over
+"data", packed parameter axis N over "model"), and every fused launch and
+masked reduction runs under ``shard_map`` — the participant mean lowers to
+per-shard partial sums + true ``lax.psum``/``psum_scatter`` over "data"
+instead of the single-device broadcast mean.
+
+``overlap=True`` re-schedules the STORM round as *issue the
+variable-section reduction → run the new-iterate oracle → consume the
+correction add*: the new-iterate oracle reads the LOCAL (pre-reduction)
+iterate, so its output g_new feeds only the correction add and the issued
+"data"-axis collective has no consumer until the step returns — XLA's async
+collectives can then overlap the all-reduce with oracle compute, at
+unchanged communication volume.  Documented deviation (mirroring the
+existing "old point" deviation): at communication steps the STORM
+correction is evaluated at the pre-averaging local iterate.  Off by
+default; ``overlap=False`` is bit-identical to the sequential schedule, and
+at non-communication steps the two schedules coincide exactly.
 """
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -209,7 +234,7 @@ def comm_tree(cfg, step, tree, policy: str, *, weights=None,
 
 
 def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
-                 weights=None, comm_every=None):
+                 weights=None, comm_every=None, shard=None):
     """Apply per-section policies to flat [M, N] buffers — one masked
     (sliced) reduction per communicated section run, private sections
     bit-identical (``flat.client_mean_masked``).
@@ -218,6 +243,8 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
     section or a per-section tuple (staleness-discounted sequences).
     ``comm_every``: per-section cadence tuple — sections reduce only every
     k-th comm round; sections sharing a cadence share one guarded reduction.
+    ``shard``: a :class:`flat.ShardCtx` — the reductions run under
+    ``shard_map`` as true ``psum``/``psum_scatter`` collectives over "data".
     """
     assert all(p in POLICIES for p in policies), policies
     n = len(policies)
@@ -244,7 +271,8 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
             bufs = lax.cond(
                 due,
                 lambda b, mc=modes_comm, wc=w_c:
-                    flat.client_mean_masked(spec, b, mc, weights=wc),
+                    flat.client_mean_masked(spec, b, mc, weights=wc,
+                                            shard=shard),
                 lambda b: b, bufs)
             continue
         # pod-local rounds: HIERARCHICAL sections take the grouped mean
@@ -256,10 +284,11 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
         def do_comm(b, mc=modes_comm, ml=modes_local, wc=w_c):
             return lax.cond(
                 is_global,
-                lambda bb: flat.client_mean_masked(spec, bb, mc, weights=wc),
+                lambda bb: flat.client_mean_masked(spec, bb, mc, weights=wc,
+                                                   shard=shard),
                 lambda bb: flat.client_mean_masked(spec, bb, ml,
                                                    num_groups=groups,
-                                                   weights=wc),
+                                                   weights=wc, shard=shard),
                 b)
 
         bufs = lax.cond(due, do_comm, lambda b: b, bufs)
@@ -298,12 +327,17 @@ class Engine(NamedTuple):
       policy-driven communication (jit/scan it; donate the buffers).
     * ``views(state) -> (var_dict, mom_dict | None)`` — pytree views keyed
       by section (resp. momentum) names, for eval/checkpoint.
+    * ``shardings(state) -> NamedSharding pytree | None`` — the mesh
+      placement of a :class:`FlatState` (None without a shard context);
+      ``init_state`` already applies it to concrete states via
+      ``jax.device_put``.
     """
     aspec: AlgoSpec
     spec: flat.FlatSpec
     init_state: Any
     step: Any
     views: Any
+    shardings: Any = None
 
 
 def effective_staleness(aspec: AlgoSpec, participation) -> tuple:
@@ -316,7 +350,9 @@ def effective_staleness(aspec: AlgoSpec, participation) -> tuple:
 
 
 def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
-                block: int | None = None, participation=None) -> Engine:
+                block: int | None = None, participation=None,
+                shard: flat.ShardCtx | None = None,
+                overlap: bool = False) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -334,11 +370,15 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     the fused launches with it, zeroes non-participants' oracle
     contributions, weights the reductions by participants only, and advances
     the staleness counters on :class:`FlatState` ``.stale``.
+
+    ``shard`` / ``overlap``: mesh partitioning of the substrate and the
+    comm/compute overlap schedule — see the module docstring.
     """
     sections = aspec.sections
     spec = flat.make_spec({s: templates[s] for s in sections},
                           sections=sections,
-                          block=block if block else flat.BLOCK)
+                          block=block if block else flat.BLOCK,
+                          shards=shard.model_size if shard else 1)
     policies = aspec.policies
     has_mom = aspec.has_momentum
     part = participation
@@ -372,6 +412,25 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         bumped = jnp.where(mask > 0, 0, state.stale + 1)
         return jnp.where(is_comm, bumped, state.stale)
 
+    def state_shardings(state: FlatState):
+        """NamedSharding pytree for ``state`` (None without a mesh): [M, N]
+        buffers client-sharded over "data" and packed-axis-sharded over
+        "model", stale counters over "data" (``rules.flat_state_specs``)."""
+        if shard is None:
+            return None
+        from repro.sharding.rules import flat_state_specs
+        pspecs = flat_state_specs(state, data_axis=shard.data_axis,
+                                  model_axis=shard.model_axis)
+        return jax.tree.map(
+            lambda p: jax.sharding.NamedSharding(shard.mesh, p), pspecs,
+            is_leaf=lambda p: isinstance(p, jax.sharding.PartitionSpec))
+
+    def _placed(state: FlatState) -> FlatState:
+        if shard is None or any(isinstance(l, jax.core.Tracer)
+                                for l in jax.tree.leaves(state)):
+            return state        # abstract init (eval_shape) — caller places
+        return jax.device_put(state, state_shardings(state))
+
     def init_state(var_trees, mom_trees=None, step=None, stale=None):
         vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
                                    batch_dims=1)
@@ -394,9 +453,10 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             stale_b = jnp.zeros((part.num_clients,), jnp.int32)
         else:
             stale_b = stale
-        return FlatState(vars_b, mom_b,
-                         jnp.zeros((), jnp.int32) if step is None else step,
-                         stale_b)
+        return _placed(FlatState(
+            vars_b, mom_b,
+            jnp.zeros((), jnp.int32) if step is None else step,
+            stale_b))
 
     def _storm_step(state: FlatState, batch) -> FlatState:
         t = state.step
@@ -414,17 +474,24 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                   batch)), mask)
         # 2+3) partial momentum + variable step: ONE gated launch per dtype
         vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
-                                                g_old, lrs, decays, mask=mask)
-        vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence)
-        # 4) new-iterate oracle, same batch; STORM correction is one add
+                                                g_old, lrs, decays, mask=mask,
+                                                shard=shard)
+        # issue the variable-section reduction ...
+        vars_c = comm_buffers(spec, cfg, t, vars_b, policies,
+                              weights=wts, comm_every=cadence, shard=shard)
+        # 4) ... run the new-iterate oracle, same batch; the STORM correction
+        #    is one add.  overlap=True evaluates the oracle at the LOCAL
+        #    (pre-reduction) iterate: g_new then feeds only the correction
+        #    add and the issued "data"-axis collective has no consumer until
+        #    the step returns, so XLA can overlap it with oracle compute
+        #    (documented deviation at comm rounds; identical elsewhere).
         g_new = flat.mask_buffers(
-            _flatten_grads(oracle(flat.unflatten_tree(spec, vars_b),
-                                  batch)), mask)
+            _flatten_grads(oracle(flat.unflatten_tree(
+                spec, vars_b if overlap else vars_c), batch)), mask)
         mom_b = flat.buffers_add(mom_b, g_new)
         mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                             weights=wts, comm_every=cadence)
-        return FlatState(vars_b, mom_b, t + 1, _next_stale(state, mask))
+                             weights=wts, comm_every=cadence, shard=shard)
+        return FlatState(vars_c, mom_b, t + 1, _next_stale(state, mask))
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
@@ -437,15 +504,16 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             betas = (aspec.beta,) * len(aspec.sequences)
             vars_b, mom_b = flat.momentum_sgd_step(spec, state.vars,
                                                    state.mom, g, lrs, betas,
-                                                   mask=mask)
+                                                   mask=mask, shard=shard)
             mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                                 weights=wts, comm_every=cadence)
+                                 weights=wts, comm_every=cadence, shard=shard)
         else:
             # momentum-less: the plain-SGD launch (no dead momentum stream)
-            vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask)
+            vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask,
+                                   shard=shard)
             mom_b = ()
         vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence)
+                              weights=wts, comm_every=cadence, shard=shard)
         return FlatState(vars_b, mom_b, t + 1, _next_stale(state, mask))
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
@@ -457,4 +525,4 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         mt = flat.unflatten_tree(spec, state.mom)
         return vt, {q.momentum: mt[q.section] for q in aspec.sequences}
 
-    return Engine(aspec, spec, init_state, step, views)
+    return Engine(aspec, spec, init_state, step, views, state_shardings)

@@ -1,2 +1,2 @@
-from repro.sharding.rules import (batch_specs, cache_specs, param_specs,  # noqa: F401
-                                  state_specs)
+from repro.sharding.rules import (batch_specs, cache_specs,  # noqa: F401
+                                  flat_state_specs, param_specs, state_specs)

@@ -13,6 +13,37 @@ Rules (DESIGN.md §4):
   parameter dim over ``"data"`` (and the client axis over ``"pod"``).
 * Divisibility is always checked; non-divisible dims fall back to the next
   candidate or replication.
+
+Mesh & sharding of the flat substrate
+-------------------------------------
+
+The sequence-spec engine's :class:`~repro.optim.sequences.FlatState` holds
+per-dtype [M, N] buffers (client axis M × packed tile-padded parameter axis
+N).  :func:`flat_state_specs` places them ``P("data", "model")``: clients
+over the mesh "data" axis, the packed axis over "model" — which is exactly
+the partitioning ``repro.optim.flat.make_spec(..., shards=k)`` lays the
+buffer out for.
+
+**Tile-aligned section/shard invariant.**  With ``shards = k`` every
+variable section (x | y | u …) is padded to a multiple of ``block · k`` and
+the buffer is stored *shard-major*: the j-th contiguous 1/k chunk holds the
+j-th 1/k slice of every section, in section order.  A plain contiguous
+``NamedSharding`` over "model" therefore gives every shard the SAME
+tile-aligned section pattern (``_Group.extents`` describes one chunk), so:
+
+* the per-tile (lr, decay) SMEM tables slice consistently with the buffer
+  (same ``P("data", "model")`` on the [M, tiles] table);
+* inside ``shard_map`` the section-run slices are static and identical on
+  every device — each communicated run is per-shard partial sums + ONE
+  ``lax.psum`` (or ``psum_scatter``+``all_gather``) over "data", and
+  private / non-participant tiles never enter the collective.
+
+**Overlap schedule.**  ``make_engine(..., overlap=True)`` issues the
+variable-section reduction, runs the new-iterate oracle on the local
+(pre-reduction) iterate, and only then consumes the correction add — the
+issued "data"-axis collective has no consumer during oracle compute, so
+XLA async collectives can hide it behind the oracle at unchanged
+communication volume (deviation documented in ``repro.optim.sequences``).
 """
 from __future__ import annotations
 
@@ -176,6 +207,24 @@ def state_specs(state: Any, mesh: MeshConfig, *, placement: str):
         return P(*(lead_spec + core))
 
     return jax.tree_util.tree_map_with_path(per_leaf, state)
+
+
+def flat_state_specs(state: Any, *, data_axis: str = "data",
+                     model_axis: str = "model"):
+    """PartitionSpecs for a flat-substrate ``FlatState`` (or any pytree of
+    its shape): [M, N] buffers shard the client axis over ``data_axis`` and
+    the packed parameter axis over ``model_axis`` (the layout
+    ``optim.flat.make_spec(..., shards=)`` is built for — see the module
+    docstring's section/shard invariant); [M] staleness counters shard over
+    ``data_axis``; scalars (the step counter) replicate."""
+    def one(leaf):
+        if leaf.ndim == 2:
+            return P(data_axis, model_axis)
+        if leaf.ndim == 1:
+            return P(data_axis)
+        return P()
+
+    return jax.tree.map(one, state)
 
 
 def _generic_spec(shape: Sequence[int], mesh: MeshConfig) -> P:

@@ -58,6 +58,58 @@ def test_sampler_seed_changes_trace():
     assert not np.array_equal(ma, mb)
 
 
+def test_trace_file_replay(tmp_path):
+    """A recorded availability log replays deterministically (and
+    cyclically) through the trace sampler — including under jit, across
+    independent engine instances, and in both accepted JSON forms."""
+    import json
+    rows = [[1, 0, 1, 1], [0, 1, 1, 0], [1, 1, 0, 0]]
+    path = tmp_path / "avail.json"
+    path.write_text(json.dumps(rows))
+    spec = ParticipationSpec(sampler="trace", trace_path=str(path))
+    p1 = make_participation(spec, 4)
+    p2 = make_participation(spec, 4)       # a resumed run
+    for r in range(8):
+        want = np.asarray(rows[r % 3], np.float32)
+        np.testing.assert_array_equal(np.asarray(p1.mask_fn(jnp.int32(r))),
+                                      want)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(p2.mask_fn)(jnp.int32(r))), want)
+    # the {"masks": ...} envelope is accepted too
+    path.write_text(json.dumps({"masks": rows}))
+    p3 = make_participation(spec, 4)
+    np.testing.assert_array_equal(np.asarray(p3.mask_fn(jnp.int32(4))),
+                                  np.asarray(rows[1], np.float32))
+    # the replayed comm fraction reflects the log, not the nominal rate
+    assert expected_comm_fraction(p3, num_rounds=6) == pytest.approx(7 / 12)
+
+
+def test_trace_file_validation(tmp_path):
+    import json
+    path = tmp_path / "bad.json"
+    for bad, err in [([[1, 0, 1]], "0/1 matrix"),
+                     ([[2, 0, 1, 1]], "0/1"),
+                     ([[1, 1, 1, 1], [0, 0, 0, 0]], "min_clients")]:
+        path.write_text(json.dumps(bad))
+        with pytest.raises(ValueError, match=err):
+            make_participation(
+                ParticipationSpec(sampler="trace", trace_path=str(path)), 4)
+    # the documented floor applies to recorded logs too
+    path.write_text(json.dumps([[1, 1, 0, 0], [1, 0, 0, 0]]))
+    with pytest.raises(ValueError, match="min_clients=2"):
+        make_participation(ParticipationSpec(
+            sampler="trace", trace_path=str(path), min_clients=2), 4)
+    path.write_text(json.dumps([[1, 0, 1, 1]]))
+    with pytest.raises(ValueError, match="trace"):
+        make_participation(ParticipationSpec(
+            sampler="uniform", clients_per_round=2,
+            trace_path=str(path)), 4)
+    with pytest.raises(ValueError, match="clients_per_round"):
+        make_participation(ParticipationSpec(
+            sampler="trace", clients_per_round=2,
+            trace_path=str(path)), 4)
+
+
 def test_weighted_sampler_prefers_heavy_clients():
     spec = ParticipationSpec("weighted", 2, seed=3,
                              client_weights=(50.0, 50.0, 1e-3, 1e-3))

@@ -1,0 +1,265 @@
+"""Sharded flat substrate (repro.optim.flat ``shards=`` / ``ShardCtx``):
+
+* layout invariance on one device — the shard-major interleaved layout
+  (sections padded to block·shards, every shard chunk carrying the same
+  tile-aligned section pattern) must round-trip bit-exactly and produce the
+  same unflattened results as the shards=1 layout for both the fused
+  launches and the masked reductions;
+* execution invariance on a real ≥8-device mesh (subprocess — the host
+  device-count flag must precede jax init): ``client_mean_masked`` under
+  ``shard_map`` with true ``lax.psum``/``psum_scatter`` collectives matches
+  the single-device path within float-reassociation tolerance, private
+  sections BIT-exactly; sharded fused trajectories match the single-device
+  engine for all five algorithms, including under m = M/2 participation and
+  the comm/compute overlap schedule.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import flat
+
+
+def _mixed_tree():
+    return {
+        "x": {"w": jnp.arange(24.0).reshape(4, 6),
+              "b": (jnp.arange(7, dtype=jnp.bfloat16), jnp.float32(3.5))},
+        "y": {"h": jnp.arange(5.0) * 2.0,
+              "hb": jnp.full((3,), 2, jnp.bfloat16)},
+        "u": {"h": jnp.ones((5,)), "hb": jnp.ones((3,), jnp.bfloat16)},
+    }
+
+
+def _client_stack(tree, m):
+    return jax.tree.map(
+        lambda v: jnp.stack([jnp.asarray(v) + i for i in range(m)]), tree)
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_spec_roundtrip_and_invariants(shards):
+    """Sections pad to block·shards; section_ids is one per-chunk pattern
+    tiled ``shards`` times; the extents cover each chunk exactly; and
+    flatten/unflatten round-trips bit-exactly."""
+    tree = _mixed_tree()
+    spec = flat.make_spec(tree, sections=("x", "y", "u"), block=8,
+                          shards=shards)
+    assert spec.shards == shards
+    for grp in spec.groups:
+        assert grp.padded % (grp.block * shards) == 0
+        chunk = grp.padded // shards
+        pattern = grp.section_ids[: chunk // grp.block]
+        assert np.array_equal(grp.section_ids, np.tile(pattern, shards))
+        assert grp.extents[0][1] == 0 and grp.extents[-1][2] == chunk
+        for (_, _, stop), (_, start, _) in zip(grp.extents, grp.extents[1:]):
+            assert stop == start            # extents tile the chunk
+    bufs = flat.flatten_tree(spec, tree)
+    back = flat.unflatten_tree(spec, bufs)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).reshape(-1).view(np.uint8),
+            np.asarray(b).reshape(-1).view(np.uint8))
+
+
+def test_sharded_layout_comm_and_launch_invariance():
+    """The interleaved shards=2 layout must give the same (unflattened)
+    results as shards=1 for the masked reduction and the fused launch —
+    the layout is a pure storage permutation."""
+    tree = _mixed_tree()
+    M = 8
+    btree = _client_stack(tree, M)
+    s1 = flat.make_spec(tree, sections=("x", "y", "u"), block=8, shards=1)
+    s2 = flat.make_spec(tree, sections=("x", "y", "u"), block=8, shards=2)
+    b1 = flat.flatten_tree(s1, btree, batch_dims=1)
+    b2 = flat.flatten_tree(s2, btree, batch_dims=1)
+    w = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+
+    o1 = flat.client_mean_masked(s1, b1, ("mean", "none", "group"), weights=w)
+    o2 = flat.client_mean_masked(s2, b2, ("mean", "none", "group"), weights=w)
+    for a, b in zip(jax.tree.leaves(flat.unflatten_tree(s1, o1)),
+                    jax.tree.leaves(flat.unflatten_tree(s2, o2))):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+    lrs, decays = (0.05, 0.1, 0.2), (0.99, 0.98, 0.97)
+    mom1 = tuple(jnp.ones_like(x) for x in b1)
+    mom2 = tuple(jnp.ones_like(x) for x in b2)
+    g1 = tuple(0.5 * jnp.ones_like(x) for x in b1)
+    g2 = tuple(0.5 * jnp.ones_like(x) for x in b2)
+    v1, mp1 = flat.storm_partial_step(s1, b1, mom1, g1, lrs, decays)
+    v2, mp2 = flat.storm_partial_step(s2, b2, mom2, g2, lrs, decays)
+    for t1, t2 in ((v1, v2), (mp1, mp2)):
+        for a, b in zip(jax.tree.leaves(flat.unflatten_tree(s1, t1)),
+                        jax.tree.leaves(flat.unflatten_tree(s2, t2))):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_shard_ctx_validation():
+    """Mismatched spec/mesh shards and missing axes fail loudly."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(2, 1)
+    ctx = flat.make_shard_ctx(mesh)
+    tree = {"x": jnp.ones((16,)), "y": jnp.ones((16,))}
+    spec = flat.make_spec(tree, sections=("x", "y"), block=8, shards=2)
+    btree = _client_stack(tree, 4)
+    bufs = flat.flatten_tree(spec, btree, batch_dims=1)
+    with pytest.raises(ValueError, match="shards"):
+        flat.client_mean_masked(spec, bufs, ("mean", "none"), shard=ctx)
+    with pytest.raises(ValueError, match="axis"):
+        flat.make_shard_ctx(mesh, model_axis="nope")
+
+
+# ---------------------------------------------------------------------------
+# multi-device execution (subprocess: the device-count flag must be set
+# before jax initialises)
+# ---------------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.config import FederatedConfig
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.federation import trainer as tr
+    from repro.federation.participation import ParticipationSpec
+    from repro.optim import flat
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    ctx = flat.make_shard_ctx(mesh)
+
+    # --- substrate level: psum comm vs single-device, private bit-exact ---
+    key = jax.random.PRNGKey(0)
+    tree = {"x": jnp.zeros((70,)), "y": jnp.zeros((30,)),
+            "u": jnp.zeros((26,))}
+    M = 8
+    btree = jax.tree.map(
+        lambda v: jax.random.normal(key, (M,) + v.shape), tree)
+    s1 = flat.make_spec(tree, sections=("x", "y", "u"), block=8, shards=1)
+    s2 = flat.make_spec(tree, sections=("x", "y", "u"), block=8, shards=2)
+    b1 = flat.flatten_tree(s1, btree, batch_dims=1)
+    b2 = flat.flatten_tree(s2, btree, batch_dims=1)
+    w = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+    for ctx_i in (ctx, flat.make_shard_ctx(mesh, use_scatter=True)):
+        for modes in (("mean", "none", "group"), ("mean", "none", "mean")):
+            ref = flat.unflatten_tree(s1, flat.client_mean_masked(
+                s1, b1, modes, weights=w))
+            out = flat.unflatten_tree(s2, jax.jit(
+                lambda b: flat.client_mean_masked(
+                    s2, b, modes, weights=w, shard=ctx_i))(b2))
+            for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+            # private y: bit-exact vs the INPUT (never entered a collective)
+            for a, b in zip(jax.tree.leaves(btree["y"]),
+                            jax.tree.leaves(out["y"])):
+                np.testing.assert_array_equal(
+                    np.asarray(a).view(np.uint8),
+                    np.asarray(b).view(np.uint8))
+    # the sharded comm compiles to a REAL all-reduce (no broadcast-mean)
+    hlo = jax.jit(lambda b: flat.client_mean_masked(
+        s2, b, ("mean", "none", "mean"), shard=ctx)
+        ).lower(b2).compile().as_text()
+    assert "all-reduce" in hlo, "sharded comm lowered without a collective"
+
+    # the guard rails fire on real multi-device meshes too
+    try:
+        flat.client_mean_masked(s1, b1, ("mean", "none", "mean"), shard=ctx)
+        raise SystemExit("spec/mesh shards mismatch not caught")
+    except ValueError as e:
+        assert "shards" in str(e), e
+    try:
+        flat.client_mean_masked(
+            s2, tuple(b[:5] for b in b2), ("mean", "none", "mean"),
+            shard=ctx)
+        raise SystemExit("client-axis divisibility not caught")
+    except ValueError as e:
+        assert "divisible" in str(e), e
+    try:
+        flat.make_shard_ctx(mesh, model_axis="nope")
+        raise SystemExit("missing mesh axis not caught")
+    except ValueError as e:
+        assert "axis" in str(e), e
+    print("SUBSTRATE_OK")
+
+    # --- engine level: all five algos, sharded vs single-device ---
+    cfg = ARCHS["mamba2-130m"].reduced()
+    from repro.models import build_model
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=4, local_steps=2, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05, neumann_q=2,
+                          neumann_tau=0.3)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=1,
+                                 seq_len=16)
+    FIELDS = {"fedbio": ("x", "y", "u"),
+              "fedbioacc": ("x", "y", "u", "omega", "nu", "q"),
+              "fedbio_local": ("x", "y"),
+              "fedbioacc_local": ("x", "y", "omega", "nu"),
+              "fedavg": ("params", "mom")}
+
+    def run(algo, steps=3, **kw):
+        maker = getattr(tr, f"make_{algo}_train_step")
+        init, step = maker(model, fed, n_micro=1, remat=False,
+                           fuse_storm=True, storm_block=256, **kw)
+        st = init(jax.random.PRNGKey(0))
+        jstep = jax.jit(step, donate_argnums=(0,))
+        key = jax.random.PRNGKey(1)
+        for _ in range(steps):
+            key, sub = jax.random.split(key)
+            st, _ = jstep(st, batch_fn(sub))
+        return step.views(st)
+
+    for algo, fields in FIELDS.items():
+        ref = run(algo)
+        out = run(algo, mesh=mesh)
+        for n in fields:
+            for a, b in zip(jax.tree.leaves(getattr(ref, n)),
+                            jax.tree.leaves(getattr(out, n))):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-4,
+                    err_msg=f"{algo}.{n}")
+        print(f"ALGO_OK {algo}")
+
+    # --- m = M/2 participation + overlap schedule, sharded vs single ---
+    pspec = ParticipationSpec(sampler="uniform", clients_per_round=2)
+    for kw in ({"participation": pspec}, {"overlap": True},
+               {"participation": pspec, "overlap": True}):
+        ref = run("fedbioacc", **kw)
+        out = run("fedbioacc", mesh=mesh, **kw)
+        for n in FIELDS["fedbioacc"]:
+            for a, b in zip(jax.tree.leaves(getattr(ref, n)),
+                            jax.tree.leaves(getattr(out, n))):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-4,
+                    err_msg=f"participation/overlap {kw} {n}")
+    print("PARTICIPATION_OVERLAP_OK")
+""")
+
+
+@pytest.mark.timeout(900)
+def test_sharded_substrate_executes_and_matches():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=850)
+    assert res.returncode == 0, res.stderr[-4000:]
+    for marker in ("SUBSTRATE_OK", "ALGO_OK fedbio", "ALGO_OK fedbioacc",
+                   "ALGO_OK fedbio_local", "ALGO_OK fedbioacc_local",
+                   "ALGO_OK fedavg", "PARTICIPATION_OVERLAP_OK"):
+        assert marker in res.stdout, (marker, res.stdout, res.stderr[-2000:])
