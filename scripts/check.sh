@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Smoke gate: the tier-1 suite, a fused smoke-train of every federated
-# algorithm, and a fast benchmark pass (with the machine-readable kernel
+# Smoke gate: the tier-1 suite, a spec-driven smoke-train of every federated
+# algorithm (committed repro.api Experiment JSONs), checkpoint-resume from an
+# embedded spec, and a fast benchmark pass (with the machine-readable kernel
 # perf artifact, BENCH_kernels.json).
 #
 #   ./scripts/check.sh            # full tier-1 + smoke trains + benchmarks
@@ -16,34 +17,35 @@ if [[ "${1:-}" != "--bench" && "${1:-}" != "--smoke" ]]; then
 fi
 
 if [[ "${1:-}" != "--bench" ]]; then
-    # every algorithm end-to-end on the flat substrate (sequence-spec engine:
-    # fused STORM/heavy-ball updates + section-masked communication) with the
-    # fused oracles on — the exact path `--fuse-storm --fuse-oracles` users run
+    # every committed Experiment spec must parse and validate
+    python -m repro.api.validate experiments/*.json
+
+    # every algorithm end-to-end from its committed declarative spec (the
+    # flat-substrate engine with fused oracles; fedbioacc_local's spec also
+    # exercises 2-of-4 uniform participation) — the exact path
+    # `--experiment exp.json` users run
     for algo in fedbio fedbioacc fedbio_local fedbioacc_local fedavg; do
-        echo "smoke-train: $algo (fused)"
-        python -m repro.launch.train --arch mamba2-130m --reduced \
-            --algo "$algo" --steps 2 --clients 2 --per-client 1 --seq 32 \
-            --local-steps 2 --neumann-q 2 --log-every 1 \
-            --fuse-storm --fuse-oracles
+        echo "smoke-train: $algo (from experiments/$algo.json)"
+        python -m repro.launch.train --experiment "experiments/$algo.json" \
+            --log-every 1
     done
-    # partial participation through the participation engine: 4-of-8 uniform
-    # client sampling, gated fused launches + participants-only reductions
-    for algo in fedbioacc fedbioacc_local; do
-        echo "smoke-train: $algo (fused, 4-of-8 participation)"
-        python -m repro.launch.train --arch mamba2-130m --reduced \
-            --algo "$algo" --steps 2 --clients 8 --clients-per-round 4 \
-            --per-client 1 --seq 32 --local-steps 2 --neumann-q 2 \
-            --log-every 1 --fuse-storm --fuse-oracles
-    done
+
+    # checkpoint-resume from the embedded spec: train half the run with a
+    # checkpoint, then continue it with --resume and ZERO re-specified flags
+    ckpt="$(mktemp -d)"
+    echo "smoke-train: fedbioacc spec + checkpoint @ 3, resume to 4"
+    python -m repro.launch.train --experiment experiments/fedbioacc.json \
+        --steps 4 --log-every 2 --ckpt-dir "$ckpt" --ckpt-every 3
+    python -m repro.launch.train --resume "$ckpt" --log-every 1
+    rm -rf "$ckpt"
+
     # multi-device: the sharded flat substrate on a 4x2 debug mesh (8 forced
     # host devices) — shard_map fused launches, real psum reductions, and
-    # the comm/compute overlap schedule, for a few communication rounds
-    echo "smoke-train: fedbioacc (fused, sharded 4x2 mesh, overlap)"
+    # the comm/compute overlap schedule, from the committed sharded spec
+    echo "smoke-train: fedbioacc (sharded 4x2 mesh + overlap, from spec)"
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        python -m repro.launch.train --arch mamba2-130m --reduced \
-        --algo fedbioacc --steps 4 --clients 4 --per-client 1 --seq 32 \
-        --local-steps 2 --log-every 2 --fuse-storm --fuse-oracles \
-        --mesh 4,2 --overlap
+        python -m repro.launch.train \
+        --experiment experiments/fedbioacc_sharded_overlap.json --log-every 2
 fi
 
 if [[ "${1:-}" != "--smoke" ]]; then

@@ -1,0 +1,25 @@
+"""``repro.api`` — one declarative :class:`Experiment` spec, one
+:func:`build` entrypoint, one algorithm registry.
+
+    from repro.api import Experiment, AlgorithmSpec, build
+
+    exp = Experiment(algorithm=AlgorithmSpec("fedbioacc"))
+    run = build(exp)                       # uniform Run surface
+    state = run.init(jax.random.PRNGKey(exp.schedule.seed))
+    state, _ = jax.jit(run.step)(state, run.batch_fn(key))
+    print(run.eval_fn(state))
+    exp2 = Experiment.from_json(exp.to_json())   # round-trips, versioned
+
+Consumers: ``launch.train --experiment exp.json`` (plus flag overrides),
+``launch.dryrun --experiment``, ``benchmarks.run`` sweeps (lists of
+``exp.edit(...)`` calls), and checkpoint resume (the spec is embedded next
+to the arrays; ``--resume ckpt_dir`` rebuilds the exact run).
+"""
+from repro.api.build import Run, build, federated_config  # noqa: F401
+from repro.api.registry import (AlgorithmEntry, algorithms,  # noqa: F401
+                                get as get_algorithm, make_algorithm,
+                                register)
+from repro.api.spec import (SPEC_VERSION, AlgorithmSpec,  # noqa: F401
+                            Experiment, ExecutionSpec, ProblemSpec,
+                            ScheduleSpec, SpecError)
+from repro.federation.participation import ParticipationSpec  # noqa: F401

@@ -1,0 +1,124 @@
+"""Algorithm registry — the one table :func:`repro.api.build` dispatches on.
+
+Two layers register here:
+
+* **Model-scale trainers** (``repro.federation.trainer``): the five
+  ``make_*_train_step`` factories self-register at import with
+  :func:`register`, declaring their algorithm-specific hyperparams (which
+  :class:`~repro.api.spec.AlgorithmSpec.params` keys exist, their defaults,
+  and whether each lands on a :class:`~repro.config.FederatedConfig` field
+  or is a factory keyword) and their section names (what
+  ``schedule.comm_every`` may address).  Every factory takes the uniform
+  switch set ``(model, cfg, *, n_micro, remat, use_flash, use_lru_kernel,
+  fuse_oracles, fuse_storm, storm_block, participation, mesh, overlap,
+  comm_every)`` — the registry is what lets :func:`repro.api.build` call
+  them without a bespoke kwargs pile per algorithm.
+
+* **Core problem-level algorithms** (:func:`make_algorithm`, absorbed from
+  the deprecated ``repro.core.api``): the small-problem reference loops the
+  paper figures/benchmarks run on (quadratic / data-cleaning / hyper-rep),
+  including the Table-1 baselines.  They share the registry module so every
+  "which algorithms exist" question has one answer.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+
+@dataclass(frozen=True)
+class AlgorithmEntry:
+    """One registered model-scale trainer factory.
+
+    ``hparams`` maps each algorithm-specific hyperparam name to its default;
+    ``cfg_fields`` names the subset that sets same-named
+    :class:`~repro.config.FederatedConfig` fields — the rest are passed to
+    the factory as keywords (e.g. fedavg's ``momentum``).
+    """
+    name: str
+    factory: Callable
+    hparams: Mapping[str, float] = field(default_factory=dict)
+    cfg_fields: Tuple[str, ...] = ()
+    sections: Tuple[str, ...] = ()
+    description: str = ""
+
+    def split_params(self, params: Mapping[str, float]):
+        """(cfg_overrides, factory_kwargs) for an AlgorithmSpec's params,
+        with the entry's defaults filled in."""
+        merged = {**dict(self.hparams), **dict(params)}
+        cfg = {k: v for k, v in merged.items() if k in self.cfg_fields}
+        kw = {k: v for k, v in merged.items() if k not in self.cfg_fields}
+        return cfg, kw
+
+
+_TRAINERS: Dict[str, AlgorithmEntry] = {}
+
+
+def register(name: str, *, hparams: Mapping[str, float] | None = None,
+             cfg_fields: Tuple[str, ...] = (),
+             sections: Tuple[str, ...] = (), description: str = ""):
+    """Decorator: register a ``make_*_train_step`` factory under ``name``."""
+    def deco(factory):
+        _TRAINERS[name] = AlgorithmEntry(
+            name=name, factory=factory, hparams=dict(hparams or {}),
+            cfg_fields=tuple(cfg_fields), sections=tuple(sections),
+            description=description)
+        return factory
+    return deco
+
+
+def _ensure_registered() -> None:
+    # the trainers self-register at import; importing here (not at module
+    # top) keeps spec validation importable without pulling the model stack
+    # in a fixed order and avoids an import cycle
+    if not _TRAINERS:
+        importlib.import_module("repro.federation.trainer")
+
+
+def get(name: str) -> AlgorithmEntry:
+    _ensure_registered()
+    if name not in _TRAINERS:
+        raise KeyError(f"no trainer registered for algorithm {name!r}; "
+                       f"registered: {sorted(_TRAINERS)}")
+    return _TRAINERS[name]
+
+
+def algorithms() -> Tuple[str, ...]:
+    """Registered model-scale algorithm names (the valid
+    ``Experiment.algorithm.name`` values)."""
+    _ensure_registered()
+    return tuple(sorted(_TRAINERS))
+
+
+# ---------------------------------------------------------------------------
+# Core problem-level algorithms (absorbed from repro.core.api)
+# ---------------------------------------------------------------------------
+
+def _core_factories() -> Dict[str, Callable]:
+    from repro.core.baselines import (make_commfedbio, make_fednest,
+                                      make_mrbo, make_stocbio)
+    from repro.core.fedbio import make_fedbio
+    from repro.core.fedbioacc import make_fedbioacc
+    from repro.core.local_lower import make_fedbio_local, make_fedbioacc_local
+    return {
+        "fedbio": make_fedbio,
+        "fedbioacc": make_fedbioacc,
+        "fedbio_local": make_fedbio_local,
+        "fedbioacc_local": make_fedbioacc_local,
+        "fednest": make_fednest,
+        "commfedbio": make_commfedbio,
+        "stocbio": make_stocbio,
+        "mrbo": make_mrbo,
+    }
+
+
+def make_algorithm(problem, cfg) -> Any:
+    """Problem-level algorithm factory (``cfg.algorithm`` names it): the
+    reference loops of Algorithms 1-4 plus the Table-1 baselines, on a
+    :class:`repro.core.problems.Problem`."""
+    factories = _core_factories()
+    if cfg.algorithm not in factories:
+        raise KeyError(f"unknown algorithm {cfg.algorithm!r}; "
+                       f"choose from {sorted(factories)}")
+    return factories[cfg.algorithm](problem, cfg)

@@ -1,0 +1,405 @@
+"""The declarative :class:`Experiment` spec — one serializable description
+of a federated bilevel run.
+
+Every scenario the stack can execute — which algorithm, on which
+architecture, with which client-sampling process, on which device mesh,
+under which schedule — is a frozen dataclass tree:
+
+    Experiment
+    ├── AlgorithmSpec      name + algorithm-specific hyperparams (registry)
+    ├── ProblemSpec        arch / reduced / synthetic data / per-client sizes
+    ├── ParticipationSpec  client sampling (repro.federation.participation)
+    ├── ExecutionSpec      fusion, mesh axes, overlap, scatter-comm
+    └── ScheduleSpec       steps, lrs, cadences, hierarchy, Neumann terms
+
+``Experiment`` round-trips to/from JSON (:meth:`Experiment.to_json` /
+:meth:`Experiment.from_json`, versioned via ``version``), validates with
+actionable errors (:meth:`Experiment.validate`), and is hashable, so it can
+be closed over by jitted code, used as a cache key, embedded in checkpoints
+(``repro.checkpoint.save_checkpoint(..., experiment=)``) and swept by
+editing fields (:meth:`Experiment.edit` takes dotted paths:
+``exp.edit(**{"participation.availability_rate": 0.5})``).
+
+The single entrypoint :func:`repro.api.build` compiles an ``Experiment``
+into a :class:`~repro.api.build.Run` — uniform ``init/step/views/shardings/
+eval_fn/spec`` across train, dryrun, benchmarks and checkpoint-resume.
+
+JSON schema (version 1)
+-----------------------
+
+::
+
+    {
+      "version": 1,
+      "algorithm":     {"name": str,          # registry key (api.algorithms())
+                        "params": {str: num}},# algorithm-specific hyperparams
+      "problem":       {"arch": str,          # repro.configs.ARCHS key
+                        "reduced": bool,      # CPU-sized same-family variant
+                        "num_clients": int,   # M
+                        "per_client": int,    # per-client batch size
+                        "seq_len": int,
+                        "client_sizes": [num] | null,  # per-client data sizes
+                        "param_dtype": "auto"|"float32"|"bfloat16",
+                        "data_seed": int},    # synthetic client streams
+      "participation": {"sampler": "full"|"uniform"|"weighted"|"trace",
+                        "clients_per_round": int, "client_weights": [num]|null,
+                        "seed": int, "availability_rate": num,
+                        "min_clients": int, "stale_discount": num,
+                        "trace_path": str|null},
+      "execution":     {"fuse_storm": bool, "fuse_oracles": bool,
+                        "storm_block": int|null,
+                        "mesh": [data, model] | "production" | null,
+                        "overlap": bool, "scatter_comm": bool,
+                        "n_micro": int, "remat": bool,
+                        "use_flash": bool, "use_lru_kernel": bool},
+      "schedule":      {"steps": int, "local_steps": int,
+                        "lr_x": num, "lr_y": num, "lr_u": num,
+                        "hierarchy_period": int, "hierarchy_groups": int,
+                        "neumann_q": int, "neumann_tau": num,
+                        "lower_l2": num,
+                        "comm_every": {section: int},   # async cadences
+                        "seed": int}
+    }
+
+Unknown keys, wrong versions, unknown algorithms/hyperparams and
+inconsistent combinations (``mesh`` without ``fuse_storm``, ``overlap``
+without ``mesh``, ``weighted`` without weights, ...) all fail with errors
+that name the offending field and the fix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field, fields
+from typing import Any, Optional, Tuple
+
+from repro.federation.participation import SAMPLERS, ParticipationSpec
+
+SPEC_VERSION = 1
+
+PARAM_DTYPES = ("auto", "float32", "bfloat16")
+
+
+class SpecError(ValueError):
+    """An Experiment that cannot be built — the message names the field."""
+
+
+def _err(fieldname: str, msg: str):
+    raise SpecError(f"Experiment.{fieldname}: {msg}")
+
+
+@dataclass(frozen=True)
+class AlgorithmSpec:
+    """Which algorithm, by registry name, plus its own hyperparams.
+
+    ``params`` holds only *algorithm-specific* knobs (the registry entry
+    declares which exist and their defaults — e.g. the STORM constants
+    ``c_nu``/``c_omega``/``c_u``/``alpha_delta``/``alpha_u0`` for the
+    FedBiOAcc family, ``momentum`` for FedAvg); shared schedule knobs (lrs,
+    local steps, Neumann terms) live in :class:`ScheduleSpec`.  Stored as a
+    sorted tuple of (key, value) pairs so the spec stays hashable; construct
+    with a plain dict.
+    """
+    name: str = "fedbioacc"
+    params: Tuple[Tuple[str, float], ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.params, dict):
+            object.__setattr__(self, "params",
+                               tuple(sorted(self.params.items())))
+        else:
+            object.__setattr__(self, "params",
+                               tuple(sorted(tuple(p) for p in self.params)))
+
+    @property
+    def params_dict(self) -> dict:
+        return dict(self.params)
+
+
+@dataclass(frozen=True)
+class ProblemSpec:
+    """What is being trained: the assigned architecture and its synthetic
+    heterogeneous client streams.  ``client_sizes`` (per-client data sizes)
+    seed the weighted participation sampler and its weighted reductions when
+    the participation spec itself carries no weights."""
+    arch: str = "mamba2-130m"
+    reduced: bool = True
+    num_clients: int = 4
+    per_client: int = 2
+    seq_len: int = 128
+    client_sizes: Optional[Tuple[float, ...]] = None
+    param_dtype: str = "auto"      # auto: float32 if reduced else bfloat16
+    data_seed: int = 0
+
+    def __post_init__(self):
+        if self.client_sizes is not None:
+            object.__setattr__(self, "client_sizes",
+                               tuple(float(v) for v in self.client_sizes))
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """How the step executes: fusion switches, the device mesh and the
+    communication lowering — never *what* is computed (fused and unfused
+    trajectories match to float rounding; sharded matches single-device).
+    ``overlap`` is the one documented deviation (see ``optim.sequences``)."""
+    fuse_storm: bool = False
+    fuse_oracles: bool = False
+    storm_block: Optional[int] = None
+    mesh: Any = None               # (data, model) sizes | "production" | None
+    overlap: bool = False
+    scatter_comm: bool = False
+    n_micro: int = 1
+    remat: bool = False
+    use_flash: bool = False
+    use_lru_kernel: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.mesh, (list, tuple)):
+            object.__setattr__(self, "mesh",
+                               tuple(int(v) for v in self.mesh))
+
+
+@dataclass(frozen=True)
+class ScheduleSpec:
+    """When things happen: step counts, learning rates, communication
+    cadences and the solver constants shared by every algorithm."""
+    steps: int = 100
+    local_steps: int = 4
+    lr_x: float = 0.02
+    lr_y: float = 0.05
+    lr_u: float = 0.05
+    hierarchy_period: int = 0
+    hierarchy_groups: int = 2
+    neumann_q: int = 8
+    neumann_tau: float = 0.5
+    lower_l2: float = 1e-2
+    comm_every: Tuple[Tuple[str, int], ...] = ()   # per-section async cadence
+    seed: int = 0
+
+    def __post_init__(self):
+        if isinstance(self.comm_every, dict):
+            object.__setattr__(self, "comm_every",
+                               tuple(sorted(self.comm_every.items())))
+        else:
+            object.__setattr__(self, "comm_every",
+                               tuple(sorted(tuple(p) for p in self.comm_every)))
+
+    @property
+    def comm_every_dict(self) -> dict:
+        return dict(self.comm_every)
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """One declarative, serializable federated bilevel run."""
+    algorithm: AlgorithmSpec = field(default_factory=AlgorithmSpec)
+    problem: ProblemSpec = field(default_factory=ProblemSpec)
+    participation: ParticipationSpec = ParticipationSpec()
+    execution: ExecutionSpec = field(default_factory=ExecutionSpec)
+    schedule: ScheduleSpec = field(default_factory=ScheduleSpec)
+    version: int = SPEC_VERSION
+
+    # -- validation ---------------------------------------------------------
+
+    def normalize(self) -> "Experiment":
+        """Canonical form (idempotent): the sampler promotions every
+        consumer shares — a recorded ``trace_path`` or a nonzero
+        ``clients_per_round`` on the default ``full`` sampler select the
+        trace resp. uniform sampler.  :func:`repro.api.build` normalizes, so
+        one JSON means one run everywhere (train CLI, dryrun, benchmarks,
+        resume)."""
+        p = self.participation
+        if p.trace_path is not None and p.sampler == "full":
+            return self.edit(**{"participation.sampler": "trace"})
+        if p.sampler == "full" and p.clients_per_round:
+            return self.edit(**{"participation.sampler": "uniform"})
+        return self
+
+    def validate(self) -> "Experiment":
+        """Check the spec against the registry and the stack's invariants;
+        raises :class:`SpecError` naming the field and the fix.  Returns
+        ``self`` so it chains (``build(exp.validate())``)."""
+        from repro.api import registry
+
+        if self.version != SPEC_VERSION:
+            _err("version", f"unsupported spec version {self.version!r} "
+                 f"(this build reads version {SPEC_VERSION})")
+        if self.algorithm.name not in registry.algorithms():
+            _err("algorithm.name",
+                 f"unknown algorithm {self.algorithm.name!r}; registered: "
+                 f"{sorted(registry.algorithms())}")
+        entry = registry.get(self.algorithm.name)
+        unknown = set(self.algorithm.params_dict) - set(entry.hparams)
+        if unknown:
+            _err("algorithm.params",
+                 f"{sorted(unknown)} are not hyperparams of "
+                 f"{self.algorithm.name!r} (it takes {sorted(entry.hparams)})")
+
+        from repro.configs import ARCHS
+        if self.problem.arch not in ARCHS:
+            _err("problem.arch", f"unknown arch {self.problem.arch!r}; "
+                 f"choose from {sorted(ARCHS)}")
+        if self.problem.num_clients < 1:
+            _err("problem.num_clients", "need at least one client")
+        if self.problem.param_dtype not in PARAM_DTYPES:
+            _err("problem.param_dtype",
+                 f"{self.problem.param_dtype!r} not in {PARAM_DTYPES}")
+        cs = self.problem.client_sizes
+        if cs is not None and len(cs) != self.problem.num_clients:
+            _err("problem.client_sizes",
+                 f"{len(cs)} sizes for num_clients={self.problem.num_clients}")
+
+        p = self.normalize().participation
+        if p.sampler not in SAMPLERS:
+            _err("participation.sampler",
+                 f"unknown sampler {p.sampler!r}; choose from {SAMPLERS}")
+        if (p.sampler == "weighted" and p.client_weights is None
+                and cs is None):
+            _err("participation",
+                 "sampler='weighted' needs client_weights (or "
+                 "problem.client_sizes to inherit from)")
+        if p.clients_per_round > self.problem.num_clients:
+            _err("participation.clients_per_round",
+                 f"{p.clients_per_round} > num_clients="
+                 f"{self.problem.num_clients}")
+        if p.trace_path is not None and p.sampler != "trace":
+            _err("participation.trace_path",
+                 f"a recorded availability log is a sampler='trace' knob — "
+                 f"it conflicts with sampler={p.sampler!r} (drop one)")
+        if p.sampler == "trace" and p.clients_per_round:
+            _err("participation.clients_per_round",
+                 "the trace sampler draws participation from the "
+                 "availability process/log — clients_per_round has no "
+                 "effect; unset it or use uniform/weighted")
+
+        ex = self.execution
+        if (ex.mesh is not None or ex.overlap) and not ex.fuse_storm:
+            _err("execution",
+                 "mesh/overlap need fuse_storm=true — the sharded substrate "
+                 "and the overlap schedule are fused-engine features")
+        if ex.overlap and ex.mesh is None:
+            _err("execution.overlap",
+                 "overlap needs a mesh: the schedule exists to hide the "
+                 "data-axis collective behind the new-iterate oracle")
+        if ex.scatter_comm and ex.mesh is None:
+            _err("execution.scatter_comm", "scatter_comm needs a mesh")
+        if ex.mesh is not None and not (
+                ex.mesh == "production"
+                or (isinstance(ex.mesh, tuple) and len(ex.mesh) == 2
+                    and all(int(v) >= 1 for v in ex.mesh))):
+            _err("execution.mesh",
+                 f"{ex.mesh!r} is neither [data, model] sizes nor "
+                 f"'production'")
+        if isinstance(ex.mesh, tuple) \
+                and self.problem.num_clients % ex.mesh[0]:
+            _err("execution.mesh",
+                 f"num_clients={self.problem.num_clients} not divisible by "
+                 f"the mesh data axis ({ex.mesh[0]})")
+
+        sch = self.schedule
+        if sch.steps < 1 or sch.local_steps < 1:
+            _err("schedule", "steps and local_steps must be >= 1")
+        sections = entry.sections
+        for sec, k in sch.comm_every:
+            if sec not in sections:
+                _err("schedule.comm_every",
+                     f"{sec!r} is not a section of {self.algorithm.name!r} "
+                     f"(sections: {sections})")
+            if int(k) < 1:
+                _err("schedule.comm_every", f"cadence for {sec!r} must be "
+                     f">= 1, got {k}")
+        return self
+
+    # -- JSON ---------------------------------------------------------------
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        d = dataclasses.asdict(self)
+        d["algorithm"]["params"] = self.algorithm.params_dict
+        d["participation"] = self.participation._asdict()
+        d["schedule"]["comm_every"] = self.schedule.comm_every_dict
+        # version first — the one key a reader must dispatch on
+        d = {"version": d.pop("version"), **d}
+        return json.dumps(d, indent=indent, sort_keys=False)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Experiment":
+        try:
+            d = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise SpecError(f"Experiment JSON does not parse: {e}") from e
+        if not isinstance(d, dict):
+            raise SpecError("Experiment JSON must be an object")
+        version = d.pop("version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise SpecError(f"Experiment.version: unsupported spec version "
+                            f"{version!r} (this build reads {SPEC_VERSION})")
+        parts = {}
+        groups = {"algorithm": AlgorithmSpec, "problem": ProblemSpec,
+                  "execution": ExecutionSpec, "schedule": ScheduleSpec}
+        for key, klass in groups.items():
+            sub = d.pop(key, {})
+            if not isinstance(sub, dict):
+                raise SpecError(f"Experiment.{key}: expected an object")
+            known = {f.name for f in fields(klass)}
+            unknown = set(sub) - known
+            if unknown:
+                raise SpecError(f"Experiment.{key}: unknown keys "
+                                f"{sorted(unknown)} (knows {sorted(known)})")
+            parts[key] = klass(**sub)
+        sub = d.pop("participation", {})
+        known = set(ParticipationSpec._fields)
+        unknown = set(sub) - known
+        if unknown:
+            raise SpecError(f"Experiment.participation: unknown keys "
+                            f"{sorted(unknown)} (knows {sorted(known)})")
+        if sub.get("client_weights") is not None:
+            sub["client_weights"] = tuple(sub["client_weights"])
+        parts["participation"] = ParticipationSpec(**sub)
+        if d:
+            raise SpecError(f"Experiment: unknown top-level keys {sorted(d)}")
+        return cls(version=version, **parts)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            fh.write(self.to_json())
+            fh.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Experiment":
+        with open(path) as fh:
+            return cls.from_json(fh.read())
+
+    # -- sweeps -------------------------------------------------------------
+
+    def edit(self, **changes: Any) -> "Experiment":
+        """A new Experiment with dotted-path fields replaced — the sweep
+        primitive (a scenario list is ``[base.edit(**e) for e in edits]``):
+
+            exp.edit(**{"participation.availability_rate": 0.5,
+                        "schedule.steps": 32})
+        """
+        out = self
+        for path, value in changes.items():
+            head, _, rest = path.partition(".")
+            if not hasattr(out, head):
+                _err(head, f"no such field (editing {path!r})")
+            if not rest:
+                out = dataclasses.replace(out, **{head: value})
+                continue
+            sub = getattr(out, head)
+            if isinstance(sub, ParticipationSpec):
+                if rest not in ParticipationSpec._fields:
+                    _err(path, "no such field")
+                # NamedTuple _replace skips the dataclasses' __post_init__
+                # normalization — coerce list edits so the spec stays
+                # hashable and JSON-round-trip-equal
+                if isinstance(value, list):
+                    value = tuple(value)
+                sub = sub._replace(**{rest: value})
+            else:
+                if rest not in {f.name for f in fields(sub)}:
+                    _err(path, "no such field")
+                sub = dataclasses.replace(sub, **{rest: value})
+            out = dataclasses.replace(out, **{head: sub})
+        return out

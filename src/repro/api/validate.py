@@ -1,0 +1,38 @@
+"""Validate committed Experiment spec files.
+
+    PYTHONPATH=src python -m repro.api.validate experiments/*.json
+
+Each file must parse as a versioned ``repro.api.Experiment`` AND pass
+:meth:`Experiment.validate` (registry lookup, arch lookup, consistency).
+Exit code 1 if any file fails; prints one line per file.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.api.spec import Experiment, SpecError
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", metavar="EXP.json")
+    args = ap.parse_args(argv)
+    failed = 0
+    for path in args.paths:
+        try:
+            exp = Experiment.load(path).validate()
+        except (SpecError, OSError) as e:
+            print(f"FAIL {path}: {e}")
+            failed += 1
+            continue
+        mesh = exp.execution.mesh
+        print(f"OK   {path}: {exp.algorithm.name} on {exp.problem.arch}"
+              f"{' (reduced)' if exp.problem.reduced else ''}, "
+              f"M={exp.problem.num_clients}, steps={exp.schedule.steps}"
+              + (f", mesh={mesh}" if mesh is not None else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,1 +1,3 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (checkpoint_metadata,  # noqa: F401
+                                 load_checkpoint, load_experiment,
+                                 save_checkpoint)

@@ -3,6 +3,13 @@
 Layout: ``<dir>/manifest.json`` (treedef + shapes/dtypes + user metadata) and
 ``<dir>/arrays.npz`` (flattened leaves, keyed ``a<i>``). bfloat16 leaves are
 bit-cast to uint16 for npz compatibility and restored on load.
+
+Passing ``experiment=`` (a :class:`repro.api.Experiment`) additionally
+writes ``<dir>/experiment.json`` — the full declarative run spec — so a
+checkpoint is self-describing: ``load_experiment(ckpt_dir)`` +
+``repro.api.build`` reconstruct the exact run (state structure included,
+via ``jax.eval_shape(run.init, ...)``) with zero re-specified flags
+(``launch.train --resume ckpt_dir``).
 """
 from __future__ import annotations
 
@@ -14,13 +21,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+EXPERIMENT_FILE = "experiment.json"
+
 
 def _path_str(path) -> str:
     return jax.tree_util.keystr(path)
 
 
-def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None):
+def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None,
+                    *, experiment: Any = None):
     os.makedirs(ckpt_dir, exist_ok=True)
+    if experiment is not None:
+        experiment.save(os.path.join(ckpt_dir, EXPERIMENT_FILE))
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays, manifest_leaves = {}, []
     for i, (path, leaf) in enumerate(leaves_with_paths):
@@ -60,3 +72,13 @@ def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
 def checkpoint_metadata(ckpt_dir: str) -> Dict:
     with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
         return json.load(fh)["metadata"]
+
+
+def load_experiment(ckpt_dir: str):
+    """The :class:`repro.api.Experiment` embedded in a checkpoint, or None
+    for spec-less (pre-redesign) checkpoints."""
+    path = os.path.join(ckpt_dir, EXPERIMENT_FILE)
+    if not os.path.exists(path):
+        return None
+    from repro.api.spec import Experiment
+    return Experiment.load(path)

@@ -1,28 +1,13 @@
-"""Algorithm factory: ``make_algorithm(problem, fed_cfg)``."""
+"""DEPRECATED — absorbed into :mod:`repro.api.registry`.
+
+``make_algorithm(problem, fed_cfg)`` (the problem-level factory for the
+reference loops and Table-1 baselines) now lives in ``repro.api`` next to
+the model-scale trainer registry, so every "which algorithms exist"
+question has one answer.  This module remains as an import alias for
+existing callers; new code should use ``repro.api.make_algorithm`` (or the
+full declarative path: ``repro.api.Experiment`` + ``repro.api.build``).
+"""
 from __future__ import annotations
 
-from repro.config import FederatedConfig
-from repro.core.baselines import (make_commfedbio, make_fednest, make_mrbo,
-                                  make_stocbio)
-from repro.core.fedbio import Algorithm, make_fedbio
-from repro.core.fedbioacc import make_fedbioacc
-from repro.core.local_lower import make_fedbio_local, make_fedbioacc_local
-from repro.core.problems import Problem
-
-_FACTORIES = {
-    "fedbio": make_fedbio,
-    "fedbioacc": make_fedbioacc,
-    "fedbio_local": make_fedbio_local,
-    "fedbioacc_local": make_fedbioacc_local,
-    "fednest": make_fednest,
-    "commfedbio": make_commfedbio,
-    "stocbio": make_stocbio,
-    "mrbo": make_mrbo,
-}
-
-
-def make_algorithm(problem: Problem, cfg: FederatedConfig) -> Algorithm:
-    if cfg.algorithm not in _FACTORIES:
-        raise KeyError(f"unknown algorithm {cfg.algorithm!r}; "
-                       f"choose from {sorted(_FACTORIES)}")
-    return _FACTORIES[cfg.algorithm](problem, cfg)
+from repro.api.registry import make_algorithm  # noqa: F401
+from repro.core.fedbio import Algorithm  # noqa: F401  (re-export, back-compat)

@@ -34,8 +34,20 @@ through BOTH paths — unfused steps freeze non-participants bit-exact with a
 (masked lr, pinned decay) and run participation-weighted masked reductions.
 The compiled engine is recorded on ``train_step.participation`` (its
 ``.spec`` is the declarative scenario).  Staleness-discounted reductions
-(α^staleness aging of returning clients) additionally need the per-client
-counters on ``FlatState.stale`` and are therefore fused-path only.
+(α^staleness aging of returning clients) run on BOTH paths with the same
+arithmetic: the fused engine carries the per-client counters on
+``FlatState.stale``; the unfused tree states carry them on their own
+``stale`` slot (the empty tuple — zero pytree leaves — without a
+participation engine, so pre-participation checkpoints and jit caches keep
+their exact structure).
+
+Every factory is also **self-registered** into ``repro.api.registry`` with
+its algorithm-specific hyperparams (the STORM constants for the FedBiOAcc
+family, ``momentum`` for FedAvg) and section names — the declarative
+``repro.api.Experiment``/``build`` path constructs the exact same factory
+calls, so registry-built runs are bit-identical to hand-built ones.
+``comm_every=`` (a ``{section: k}`` dict) overrides per-sequence
+communication cadences on both paths (``sequences.with_comm_every``).
 
 Every factory also accepts ``mesh=`` (a jax ``Mesh`` with ("data", "model")
 axes, or a prebuilt ``optim.flat.ShardCtx`` for the non-default knobs —
@@ -67,6 +79,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import register
 from repro.config import FederatedConfig
 from repro.core import hypergrad as hg
 from repro.core.model_problem import make_model_bilevel
@@ -77,12 +90,18 @@ from repro.models.registry import Model
 from repro.optim import sequences as seqs
 from repro.optim.sequences import FlatState
 
+# ``stale`` on every legacy state: per-client staleness counters [M] int32
+# (rounds missed since last participation) when a participation engine with
+# staleness discounting is possible — the empty tuple (NO pytree leaves)
+# otherwise, so pre-participation structures are unchanged bit-for-bit.
+
 
 class FedBiOTrainState(NamedTuple):
     x: Any               # [M, ...] body
     y: Any               # [M, ...] head (lower variable)
     u: Any               # [M, ...] Eq. (4) auxiliary
     step: jnp.ndarray
+    stale: Any = ()
 
 
 class FedBiOAccTrainState(NamedTuple):
@@ -93,6 +112,7 @@ class FedBiOAccTrainState(NamedTuple):
     nu: Any              # x-momentum (body-sized)
     q: Any               # u-momentum
     step: jnp.ndarray
+    stale: Any = ()
 
 
 class FedBiOAccLocalTrainState(NamedTuple):
@@ -101,12 +121,14 @@ class FedBiOAccLocalTrainState(NamedTuple):
     omega: Any           # y-momentum (private)
     nu: Any              # x-momentum (averaged with x)
     step: jnp.ndarray
+    stale: Any = ()
 
 
 class FedAvgTrainState(NamedTuple):
     params: Any
     mom: Any
     step: jnp.ndarray
+    stale: Any = ()
 
 
 # Back-compat alias: the fuse_storm=True state of every algorithm is the
@@ -126,10 +148,14 @@ def _comm_seqs(cfg, step, aspec, trees: dict, weights=None):
     """Communicate trees keyed by SECTION name under the sections' policies
     (momenta are passed under their sequence's section too — e.g. ν under
     "x"); returns the same keys so pairings stay structural.  ``weights``:
-    per-client participation weights [M] (participants-only mean)."""
+    per-client participation weights [M] (participants-only mean) — one
+    shared array, or a dict keyed by section (staleness-discounted
+    sequences, where each section's α produces its own aged weights)."""
     by_sec = {q.section: q for q in aspec.sequences}
+    w_of = (weights.get if isinstance(weights, dict)
+            else lambda name, w=weights: w)
     return {name: seqs.comm_tree(cfg, step, t, by_sec[name].comm,
-                                 weights=weights,
+                                 weights=w_of(name),
                                  comm_every=by_sec[name].comm_every)
             for name, t in trees.items()}
 
@@ -151,24 +177,42 @@ def _freeze(mask, new, old):
 def _participation_setup(cfg: FederatedConfig, aspec,
                          participation: ParticipationSpec | None,
                          fuse_storm: bool):
-    """Compile the participation spec and return (part, round_ctx) — the
-    unfused paths derive (mask, weights) per step from ``round_ctx``.
-    Staleness discounting needs the engine's per-client counters
-    (``FlatState.stale``), so it is fused-path only."""
-    part = make_participation(participation, cfg.num_clients)
-    if part is not None and not fuse_storm:
-        alphas = seqs.effective_staleness(aspec, part)
-        if any(a != 1.0 for a in alphas):
-            raise NotImplementedError(
-                "staleness discounting (stale_discount/Sequence.staleness != "
-                "1) requires the fused engine — pass fuse_storm=True")
+    """Compile the participation spec and return ``(part, round_ctx,
+    init_stale, next_stale)`` for the unfused tree paths.
 
-    def round_ctx(step):
+    ``round_ctx(step, stale)`` derives the round's ``(mask, weights)`` —
+    ``weights`` is one shared [M] array, or a per-SECTION dict when
+    staleness discounting is on: each sequence's α ages returning clients'
+    weights through the engine-shared ``sequences.staleness_weights`` /
+    ``sequences.advance_stale`` helpers (one source for the arithmetic), so
+    fused and unfused discounted trajectories agree to float rounding.
+    ``init_stale()`` / ``next_stale(step, mask, stale)`` manage the legacy
+    states' per-client counters (the empty tuple when no discounting can
+    ever bite — keeping pre-participation state structures unchanged)."""
+    part = make_participation(participation, cfg.num_clients)
+    stale_alpha = seqs.effective_staleness(aspec, part)
+    discounted = any(a != 1.0 for a in stale_alpha)
+
+    def round_ctx(step, stale=()):
         if part is None:
             return None, None
-        return part.round_weights(step // cfg.local_steps)
+        mask, w = part.round_weights(step // cfg.local_steps)
+        if not discounted:
+            return mask, w
+        aged = seqs.staleness_weights(w, stale, stale_alpha)
+        return mask, {q.section: a
+                      for q, a in zip(aspec.sequences, aged)}
 
-    return part, round_ctx
+    def init_stale():
+        return (jnp.zeros((cfg.num_clients,), jnp.int32)
+                if part is not None and discounted else ())
+
+    def next_stale(step, mask, stale):
+        if part is None or not discounted:
+            return stale
+        return seqs.advance_stale(cfg, step, mask, stale)
+
+    return part, round_ctx, init_stale, next_stale
 
 
 def _private_heads_init(model: Model, key, m: int):
@@ -237,6 +281,13 @@ def _local_lower_setup(model: Model, cfg: FederatedConfig, f, g,
     return jax.vmap(oracle), templates, init_trees
 
 
+def _aspec(name: str, comm_every: dict | None):
+    """The algorithm's sequence spec, with per-section communication
+    cadences applied (the ``comm_every={section: k}`` factory knob)."""
+    aspec = seqs.SPECS[name]
+    return seqs.with_comm_every(aspec, comm_every) if comm_every else aspec
+
+
 def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
     """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
     mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
@@ -289,6 +340,9 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
 # FedBiO (Algorithm 1) at model scale
 # ---------------------------------------------------------------------------
 
+@register("fedbio", sections=("x", "y", "u"),
+          description="FedBiO (Alg. 1): alternating SGD on (x, y, u), "
+                      "global lower problem")
 def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            n_micro: int = 1, remat: bool = True,
                            use_flash: bool = False, use_lru_kernel: bool = False,
@@ -296,15 +350,16 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            fuse_storm: bool = False,
                            storm_block: int | None = None,
                            participation: ParticipationSpec | None = None,
-                           mesh=None, overlap: bool = False):
+                           mesh=None, overlap: bool = False,
+                           comm_every: dict | None = None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    aspec = seqs.SPECS["fedbio"]
+    aspec = _aspec("fedbio", comm_every)
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
-    part, round_ctx = _participation_setup(cfg, aspec, participation,
-                                           fuse_storm)
+    part, round_ctx, init_stale, next_stale = _participation_setup(
+        cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
@@ -317,17 +372,18 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
     def init(key):
         tr = init_trees(key)
         return FedBiOTrainState(tr["x"], tr["y"], tr["u"],
-                                jnp.zeros((), jnp.int32))
+                                jnp.zeros((), jnp.int32), init_stale())
 
     def train_step(state: FedBiOTrainState, batch):
-        mask, w = round_ctx(state.step)
+        mask, w = round_ctx(state.step, state.stale)
         gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
         x = _freeze(mask, _sgd(state.x, gd["x"], cfg.lr_x), state.x)
         y = _freeze(mask, _sgd(state.y, gd["y"], cfg.lr_y), state.y)
         u = _freeze(mask, _sgd(state.u, gd["u"], cfg.lr_u), state.u)
         cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y, "u": u},
                         weights=w)
-        new = FedBiOTrainState(cd["x"], cd["y"], cd["u"], state.step + 1)
+        new = FedBiOTrainState(cd["x"], cd["y"], cd["u"], state.step + 1,
+                               next_stale(state.step, mask, state.stale))
         return new, {"step": new.step}
 
     train_step.participation = part
@@ -338,6 +394,13 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
 # FedBiOAcc (Algorithm 2) at model scale
 # ---------------------------------------------------------------------------
 
+@register("fedbioacc",
+          hparams={"c_nu": 1.0, "c_omega": 1.0, "c_u": 1.0,
+                   "alpha_delta": 1.0, "alpha_u0": 8.0},
+          cfg_fields=("c_nu", "c_omega", "c_u", "alpha_delta", "alpha_u0"),
+          sections=("x", "y", "u"),
+          description="FedBiOAcc (Alg. 2): STORM-accelerated, global lower "
+                      "problem")
 def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               n_micro: int = 1, remat: bool = True,
                               use_flash: bool = False,
@@ -346,7 +409,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               fuse_oracles: bool = False,
                               storm_block: int | None = None,
                               participation: ParticipationSpec | None = None,
-                              mesh=None, overlap: bool = False):
+                              mesh=None, overlap: bool = False,
+                              comm_every: dict | None = None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -358,15 +422,16 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     ``mesh`` shards the flat substrate over the mesh ("data", "model") axes
     with real ``psum`` collectives under ``shard_map``; ``overlap`` enables
     the comm/compute overlap schedule (both need ``fuse_storm=True``).
+    ``comm_every`` overrides per-section communication cadences.
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    aspec = seqs.SPECS["fedbioacc"]
+    aspec = _aspec("fedbioacc", comm_every)
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
-    part, round_ctx = _participation_setup(cfg, aspec, participation,
-                                           fuse_storm)
+    part, round_ctx, init_stale, next_stale = _participation_setup(
+        cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
@@ -382,11 +447,11 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
         return FedBiOAccTrainState(
             tr["x"], tr["y"], tr["u"], tree_zeros_like(tr["y"]),
             tree_zeros_like(tr["x"]), tree_zeros_like(tr["u"]),
-            jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32), init_stale())
 
     def train_step(state: FedBiOAccTrainState, batch):
         t = state.step
-        mask, w = round_ctx(t)
+        mask, w = round_ctx(t, state.stale)
         a = seqs.alpha_schedule(cfg, t)
         # 1) old-iterate oracle FIRST (frees the old body afterwards)
         gd = voracle({"x": state.x, "y": state.y, "u": state.u}, batch)
@@ -419,7 +484,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
         q = _freeze(mask, jax.tree.map(jnp.add, q, gd2["u"]), state.q)
         md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega, "u": q},
                         weights=w)
-        new = FedBiOAccTrainState(x, y, u, md["y"], md["x"], md["u"], t + 1)
+        new = FedBiOAccTrainState(x, y, u, md["y"], md["x"], md["u"], t + 1,
+                                  next_stale(t, mask, state.stale))
         return new, {"step": new.step}
 
     train_step.participation = part
@@ -431,6 +497,9 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 # per-client PRIVATE heads (personalisation); only the body is averaged.
 # ---------------------------------------------------------------------------
 
+@register("fedbio_local", sections=("x", "y"),
+          description="FedBiO-Local (Alg. 3): private per-client heads, "
+                      "Neumann hyper-gradient")
 def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  n_micro: int = 1, remat: bool = True,
                                  use_flash: bool = False,
@@ -439,7 +508,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  fuse_storm: bool = False,
                                  storm_block: int | None = None,
                                  participation: ParticipationSpec | None = None,
-                                 mesh=None, overlap: bool = False):
+                                 mesh=None, overlap: bool = False,
+                                 comm_every: dict | None = None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -447,11 +517,11 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    aspec = seqs.SPECS["fedbio_local"]
+    aspec = _aspec("fedbio_local", comm_every)
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
-    part, round_ctx = _participation_setup(cfg, aspec, participation,
-                                           fuse_storm)
+    part, round_ctx, init_stale, next_stale = _participation_setup(
+        cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
@@ -466,15 +536,16 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     def init(key):
         tr = init_trees(key)
         return FedBiOTrainState(tr["x"], tr["y"], tree_zeros_like(tr["y"]),
-                                jnp.zeros((), jnp.int32))
+                                jnp.zeros((), jnp.int32), init_stale())
 
     def train_step(state: FedBiOTrainState, batch):
-        mask, w = round_ctx(state.step)
+        mask, w = round_ctx(state.step, state.stale)
         gd = voracle({"x": state.x, "y": state.y}, batch)
         x = _freeze(mask, _sgd(state.x, gd["x"], cfg.lr_x), state.x)
         y = _freeze(mask, _sgd(state.y, gd["y"], cfg.lr_y), state.y)
         cd = _comm_seqs(cfg, state.step, aspec, {"x": x, "y": y}, weights=w)
-        new = FedBiOTrainState(cd["x"], cd["y"], state.u, state.step + 1)
+        new = FedBiOTrainState(cd["x"], cd["y"], state.u, state.step + 1,
+                               next_stale(state.step, mask, state.stale))
         return new, {"step": new.step}
 
     train_step.participation = part
@@ -485,6 +556,13 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
 # FedBiOAcc with local lower level (Algorithm 4) at model scale
 # ---------------------------------------------------------------------------
 
+@register("fedbioacc_local",
+          hparams={"c_nu": 1.0, "c_omega": 1.0,
+                   "alpha_delta": 1.0, "alpha_u0": 8.0},
+          cfg_fields=("c_nu", "c_omega", "alpha_delta", "alpha_u0"),
+          sections=("x", "y"),
+          description="FedBiOAcc-Local (Alg. 4): STORM momenta on (y, Φ), "
+                      "private lower problems")
 def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     n_micro: int = 1, remat: bool = True,
                                     use_flash: bool = False,
@@ -493,17 +571,18 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     fuse_storm: bool = False,
                                     storm_block: int | None = None,
                                     participation: ParticipationSpec | None = None,
-                                    mesh=None, overlap: bool = False):
+                                    mesh=None, overlap: bool = False,
+                                    comm_every: dict | None = None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE)."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
-    aspec = seqs.SPECS["fedbioacc_local"]
+    aspec = _aspec("fedbioacc_local", comm_every)
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
-    part, round_ctx = _participation_setup(cfg, aspec, participation,
-                                           fuse_storm)
+    part, round_ctx, init_stale, next_stale = _participation_setup(
+        cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
@@ -518,11 +597,11 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
         tr = init_trees(key)
         return FedBiOAccLocalTrainState(
             tr["x"], tr["y"], tree_zeros_like(tr["y"]),
-            tree_zeros_like(tr["x"]), jnp.zeros((), jnp.int32))
+            tree_zeros_like(tr["x"]), jnp.zeros((), jnp.int32), init_stale())
 
     def train_step(state: FedBiOAccLocalTrainState, batch):
         t = state.step
-        mask, w = round_ctx(t)
+        mask, w = round_ctx(t, state.stale)
         a = seqs.alpha_schedule(cfg, t)
         gd = voracle({"x": state.x, "y": state.y}, batch)
         omega = jax.tree.map(lambda m, o: (1.0 - cfg.c_omega * a * a) * (m - o),
@@ -543,7 +622,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
         nu = _freeze(mask, jax.tree.map(jnp.add, nu, gd2["x"]), state.nu)
         md = _comm_seqs(cfg, t, aspec, {"x": nu, "y": omega},  # ν too (l.14)
                         weights=w)
-        new = FedBiOAccLocalTrainState(x, y, md["y"], md["x"], t + 1)
+        new = FedBiOAccLocalTrainState(x, y, md["y"], md["x"], t + 1,
+                                       next_stale(t, mask, state.stale))
         return new, {"step": new.step}
 
     train_step.participation = part
@@ -554,6 +634,9 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 # FedAvg (single-level local-SGD baseline substrate)
 # ---------------------------------------------------------------------------
 
+@register("fedavg", hparams={"momentum": 0.9}, sections=("params",),
+          description="FedAvg baseline: local heavy-ball SGD + periodic "
+                      "averaging")
 def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            n_micro: int = 1, remat: bool = True,
                            momentum: float = 0.9, use_flash: bool = False,
@@ -562,7 +645,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            fuse_storm: bool = False,
                            storm_block: int | None = None,
                            participation: ParticipationSpec | None = None,
-                           mesh=None, overlap: bool = False):
+                           mesh=None, overlap: bool = False,
+                           comm_every: dict | None = None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -573,7 +657,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
         return _microbatch_mean(one, batch, n_micro)
 
     M = cfg.num_clients
-    aspec = seqs.SPECS["fedavg"]._replace(beta=momentum)
+    aspec = _aspec("fedavg", comm_every)._replace(beta=momentum)
 
     def oracle(v, batch):
         return {"params": jax.grad(loss_fn)(v["params"], batch["train"])}
@@ -584,8 +668,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     def init_trees(key):
         return {"params": _bcast(model.init(key), M)}
 
-    part, round_ctx = _participation_setup(cfg, aspec, participation,
-                                           fuse_storm)
+    part, round_ctx, init_stale, next_stale = _participation_setup(
+        cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
 
     if fuse_storm:
@@ -598,10 +682,10 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     def init(key):
         tr = init_trees(key)
         return FedAvgTrainState(tr["params"], tree_zeros_like(tr["params"]),
-                                jnp.zeros((), jnp.int32))
+                                jnp.zeros((), jnp.int32), init_stale())
 
     def train_step(state: FedAvgTrainState, batch):
-        mask, w = round_ctx(state.step)
+        mask, w = round_ctx(state.step, state.stale)
         grads = voracle({"params": state.params}, batch)["params"]
         mom = jax.tree.map(lambda m, gr: momentum * m + gr.astype(m.dtype),
                            state.mom, grads)
@@ -613,7 +697,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                             weights=w)["params"]
         mom = _comm_seqs(cfg, state.step, aspec, {"params": mom},
                          weights=w)["params"]
-        new = FedAvgTrainState(params, mom, state.step + 1)
+        new = FedAvgTrainState(params, mom, state.step + 1,
+                               next_stale(state.step, mask, state.stale))
         return new, {"step": new.step}
 
     train_step.participation = part

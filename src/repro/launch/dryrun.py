@@ -80,18 +80,19 @@ def input_specs(arch: str, shape_name: str, mesh_cfg: MeshConfig,
 
 def build_train(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
                 optimized: bool = False):
-    from repro.federation.trainer import (make_fedbio_train_step,
-                                          make_fedbioacc_train_step)
+    from repro.api import registry
     cfg = get_config(arch)
     spec = archspec.deploy_spec(arch, optimized)
     M = archspec.num_clients(arch, mesh_cfg, optimized)
     model = build_model(cfg)
+    # the unfused production-mesh lowering keeps its rules-driven pjit
+    # shardings (archspec placement), but dispatches through the registry —
+    # no bespoke per-algorithm maker choice
     fed = FederatedConfig(algorithm=spec.algorithm, num_clients=M,
                           local_steps=4, placement=spec.placement)
-    make = (make_fedbio_train_step if spec.algorithm == "fedbio"
-            else make_fedbioacc_train_step)
-    init, step = make(model, fed, n_micro=spec.n_micro_train, remat=True,
-                      fuse_oracles=spec.fuse_oracles)
+    init, step = registry.get(spec.algorithm).factory(
+        model, fed, n_micro=spec.n_micro_train, remat=True,
+        fuse_oracles=spec.fuse_oracles)
     state_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
     batch_shapes = input_specs(arch, shape_name, mesh_cfg, optimized)
 
@@ -106,39 +107,75 @@ def build_train(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
     return jitted, (state_shapes, batch_shapes)
 
 
+def _experiment_for_fused(arch: str, fused_mesh: tuple, optimized: bool,
+                          overlap: bool, num_clients: int):
+    """The declarative Experiment the ``--fused-mesh`` dry-run lowers: the
+    archspec deployment (algorithm, fused oracles, microbatching) as spec
+    fields — the same ``repro.api.build`` path train/bench/resume use."""
+    from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
+                           ProblemSpec, ScheduleSpec)
+    spec = archspec.deploy_spec(arch, optimized)
+    return Experiment(
+        algorithm=AlgorithmSpec(spec.algorithm),
+        problem=ProblemSpec(arch=arch, reduced=False,
+                            num_clients=num_clients),
+        execution=ExecutionSpec(fuse_storm=True,
+                                fuse_oracles=spec.fuse_oracles,
+                                mesh=tuple(fused_mesh), overlap=overlap,
+                                n_micro=spec.n_micro_train, remat=True),
+        schedule=ScheduleSpec(local_steps=4))
+
+
+def _jit_sharded_run(run, state_shapes, batch_shapes):
+    """jit a built Run's step for mesh lowering — flat-state shardings from
+    the run, batches client-axis over "data", metrics replicated, state
+    donated (the one sharded-train jit recipe, shared by ``--fused-mesh``
+    and ``--experiment``)."""
+    state_sh = run.shardings(state_shapes)
+    batch_sh = jax.tree.map(
+        lambda l: NamedSharding(run.mesh,
+                                P(*(("data",) + (None,) * (l.ndim - 1)))),
+        batch_shapes)
+    metrics_sh = jax.tree.map(
+        lambda _: NamedSharding(run.mesh, P()),
+        jax.eval_shape(run.step, state_shapes, batch_shapes)[1])
+    return jax.jit(run.step, in_shardings=(state_sh, batch_sh),
+                   out_shardings=(state_sh, metrics_sh),
+                   donate_argnums=(0,))
+
+
 def build_train_fused(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig,
                       optimized: bool = False, overlap: bool = False):
     """Fused sharded flat-substrate train step on a custom ("data", "model")
     mesh: [M, N] buffers partitioned by ``rules.flat_state_specs``, fused
-    launches + psum reductions under shard_map (``--fused-mesh``)."""
-    from repro.federation.trainer import (make_fedbio_train_step,
-                                          make_fedbioacc_train_step)
-    cfg = get_config(arch)
-    spec = archspec.deploy_spec(arch, optimized)
+    launches + psum reductions under shard_map (``--fused-mesh``).  Built
+    through ``repro.api.build`` from a declarative Experiment."""
+    from repro.api import build as api_build
     axes = dict(mesh.shape)
     M = 2 * axes["data"]                  # two clients per data shard
-    model = build_model(cfg)
-    fed = FederatedConfig(algorithm=spec.algorithm, num_clients=M,
-                          local_steps=4, placement=spec.placement)
-    make = (make_fedbio_train_step if spec.algorithm == "fedbio"
-            else make_fedbioacc_train_step)
-    init, step = make(model, fed, n_micro=spec.n_micro_train, remat=True,
-                      fuse_oracles=spec.fuse_oracles, fuse_storm=True,
-                      mesh=mesh, overlap=overlap)
-    state_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    exp = _experiment_for_fused(arch, (axes["data"], axes["model"]),
+                                optimized, overlap, M)
+    run = api_build(exp)
+    state_shapes = jax.eval_shape(run.init, jax.random.PRNGKey(0))
     batch_shapes = input_specs(arch, shape_name, mesh_cfg, optimized,
                                num_clients=M)
-    state_sh = step.shardings(state_shapes)
-    batch_sh = jax.tree.map(
-        lambda l: NamedSharding(mesh, P(*(("data",) + (None,) * (l.ndim - 1)))),
-        batch_shapes)
-    metrics_sh = jax.tree.map(
-        lambda _: NamedSharding(mesh, P()),
-        jax.eval_shape(step, state_shapes, batch_shapes)[1])
-    jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
-                     out_shardings=(state_sh, metrics_sh),
-                     donate_argnums=(0,))
-    return jitted, (state_shapes, batch_shapes)
+    return _jit_sharded_run(run, state_shapes, batch_shapes), \
+        (state_shapes, batch_shapes)
+
+
+def build_train_experiment(exp_path: str):
+    """``--experiment exp.json``: lower the spec'd run exactly as
+    ``launch.train`` would execute it (state/batch shapes from the spec
+    itself; sharded iff the spec carries a mesh)."""
+    from repro.api import Experiment, build as api_build
+    run = api_build(Experiment.load(exp_path))
+    state_shapes = jax.eval_shape(run.init, jax.random.PRNGKey(0))
+    batch_shapes = jax.eval_shape(run.batch_fn, jax.random.PRNGKey(0))
+    if run.mesh is None:
+        jitted = jax.jit(run.step, donate_argnums=(0,))
+        return jitted, (state_shapes, batch_shapes), None
+    return (_jit_sharded_run(run, state_shapes, batch_shapes),
+            (state_shapes, batch_shapes), run.mesh)
 
 
 def build_prefill(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
@@ -197,6 +234,60 @@ def build_decode(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
 # runner
 # ---------------------------------------------------------------------------
 
+def _compiled_stats(compiled, rec: Dict[str, Any], keep_hlo: bool) -> None:
+    """memory/cost/collective analysis shared by every dry-run mode."""
+    mem: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:            # pragma: no cover
+        mem["error"] = str(e)
+
+    cost: Dict[str, float] = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "bytes accessed output", "optimal_seconds"):
+            if k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:            # pragma: no cover
+        cost["error"] = str(e)
+
+    hlo = compiled.as_text()
+    rec.update(memory=mem, cost=cost, collectives=collective_bytes(hlo),
+               hlo_bytes=len(hlo))
+    if keep_hlo:
+        rec["hlo"] = hlo
+
+
+def run_experiment(exp_path: str, *, keep_hlo: bool = False) -> Dict[str, Any]:
+    """Lower + compile one declarative Experiment spec (``--experiment``)."""
+    rec: Dict[str, Any] = {"experiment": exp_path, "kind": "train"}
+    t0 = time.time()
+    jitted, args, mesh = build_train_experiment(exp_path)
+    if mesh is not None:
+        rec["mesh"] = dict(mesh.shape)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+    else:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    rec.update(status="OK", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1))
+    _compiled_stats(compiled, rec, keep_hlo)
+    return rec
+
+
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             keep_hlo: bool = False, optimized: bool = False,
             fused_mesh: tuple | None = None,
@@ -241,40 +332,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    # --- memory analysis ---
-    mem: Dict[str, Any] = {}
-    try:
-        ma = compiled.memory_analysis()
-        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
-                     "temp_size_in_bytes", "generated_code_size_in_bytes",
-                     "alias_size_in_bytes"):
-            if hasattr(ma, attr):
-                mem[attr] = int(getattr(ma, attr))
-    except Exception as e:            # pragma: no cover
-        mem["error"] = str(e)
-
-    # --- cost analysis ---
-    cost: Dict[str, float] = {}
-    try:
-        ca = compiled.cost_analysis()
-        if isinstance(ca, (list, tuple)):
-            ca = ca[0]
-        for k in ("flops", "bytes accessed", "transcendentals",
-                  "bytes accessed output", "optimal_seconds"):
-            if k in ca:
-                cost[k] = float(ca[k])
-    except Exception as e:            # pragma: no cover
-        cost["error"] = str(e)
-
-    # --- collective schedule ---
-    hlo = compiled.as_text()
-    coll = collective_bytes(hlo)
-
     rec.update(status="OK", kind=kind, lower_s=round(t_lower, 1),
-               compile_s=round(t_compile, 1), memory=mem, cost=cost,
-               collectives=coll, hlo_bytes=len(hlo))
-    if keep_hlo:
-        rec["hlo"] = hlo
+               compile_s=round(t_compile, 1))
+    _compiled_stats(compiled, rec, keep_hlo)
     return rec
 
 
@@ -295,12 +355,32 @@ def main():
                     help="with --fused-mesh: the comm/compute overlap "
                          "schedule (variable all-reduce issued concurrently "
                          "with the new-iterate oracle)")
+    ap.add_argument("--experiment", default=None, metavar="EXP.json",
+                    help="lower ONE declarative repro.api Experiment spec "
+                         "instead of the (arch × shape) grid — the exact "
+                         "run launch.train would execute (sharded iff the "
+                         "spec carries a mesh)")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch × shape) on the chosen mesh")
     ap.add_argument("--out", default=None, help="append JSON records here")
     args = ap.parse_args()
     fused_mesh = (tuple(int(v) for v in args.fused_mesh.split(","))
                   if args.fused_mesh else None)
+
+    if args.experiment:
+        try:
+            rec = run_experiment(args.experiment)
+        except Exception as e:
+            rec = {"experiment": args.experiment, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}"}
+        print(json.dumps({k: v for k, v in rec.items() if k != "hlo"},
+                         indent=1), flush=True)
+        if args.out:
+            with open(args.out, "a") as fh:
+                fh.write(json.dumps(rec) + "\n")
+        if rec["status"] != "OK":
+            raise SystemExit(1)
+        return
 
     combos = []
     if args.all:

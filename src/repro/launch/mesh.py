@@ -42,15 +42,6 @@ def make_debug_mesh(data: int = 1, model: int = 1):
         ("data", "model"))
 
 
-def parse_mesh_arg(arg: str):
-    """CLI mesh knob → a jax Mesh: ``"DATA,MODEL"`` (e.g. ``4,2``) builds the
-    debug mesh of that shape; ``"production"`` the 16×16 production mesh."""
-    if arg == "production":
-        return make_production_mesh()
-    try:
-        data, model = (int(v) for v in arg.split(","))
-    except ValueError:
-        raise SystemExit(
-            f"--mesh expects DATA,MODEL (e.g. 4,2) or 'production'; "
-            f"got {arg!r}")
-    return make_debug_mesh(data, model)
+# NOTE: the CLI mesh knob is now declarative — ``ExecutionSpec.mesh`` holds
+# ``(data, model)`` sizes or ``"production"`` and ``repro.api.build``
+# resolves it through the two constructors above.

@@ -1,12 +1,25 @@
-"""Federated bilevel training driver.
+"""Federated bilevel training driver — a thin adapter over ``repro.api``.
 
-Runs the same train-step code path the dry-run lowers, on whatever devices
-exist (CPU debug mesh in this container, the production mesh on real pods).
+Every run IS a declarative :class:`repro.api.Experiment`: flags never feed a
+bespoke kwargs pile, they produce spec edits applied to a base Experiment
+(the built-in defaults, ``--experiment exp.json``, or the spec embedded in a
+checkpoint).  The spec is embedded in every checkpoint, so resume needs no
+re-specified flags.
 
+    # flags build a spec
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --reduced \
         --algo fedbioacc --steps 100 --clients 4 --per-client 2 --seq 128
 
-Checkpoints land in --ckpt-dir every --ckpt-every rounds.
+    # a committed spec runs as-is; flags override individual fields
+    PYTHONPATH=src python -m repro.launch.train --experiment exp.json
+    PYTHONPATH=src python -m repro.launch.train --experiment exp.json --steps 500
+
+    # resume reconstructs the exact run from the embedded spec — zero flags;
+    # a spec-affecting flag that CONTRADICTS the embedded spec fails loudly
+    PYTHONPATH=src python -m repro.launch.train --resume ckpt_dir
+
+Checkpoints land in --ckpt-dir every --ckpt-every rounds (raw train state +
+``experiment.json``).
 """
 from __future__ import annotations
 
@@ -18,87 +31,111 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
-from repro.config import FederatedConfig
-from repro.configs import ARCHS, get_config
-from repro.data import make_fed_batch_fn
-from repro.federation.participation import ParticipationSpec
-from repro.federation.trainer import (make_fedavg_train_step,
-                                      make_fedbio_local_train_step,
-                                      make_fedbio_train_step,
-                                      make_fedbioacc_local_train_step,
-                                      make_fedbioacc_train_step)
-from repro.launch.mesh import parse_mesh_arg
-from repro.models import build_model
+from repro.api import Experiment, SpecError, build
+from repro.checkpoint import (checkpoint_metadata, load_checkpoint,
+                              load_experiment, save_checkpoint)
+from repro.configs import ARCHS
 
-_MAKERS = {
-    "fedbio": make_fedbio_train_step,
-    "fedbioacc": make_fedbioacc_train_step,
-    "fedbio_local": make_fedbio_local_train_step,
-    "fedbioacc_local": make_fedbioacc_local_train_step,
-    "fedavg": make_fedavg_train_step,
+# CLI dest → dotted Experiment path, for every flag that simply sets one
+# spec field.  Flags with coupled semantics (--seed, --participation
+# promotions, --mesh parsing, --comm-every) are handled in
+# :func:`apply_overrides` below.
+_FLAG_PATHS = {
+    "algo": "algorithm.name",
+    "arch": "problem.arch",
+    "reduced": "problem.reduced",
+    "clients": "problem.num_clients",
+    "per_client": "problem.per_client",
+    "seq": "problem.seq_len",
+    "steps": "schedule.steps",
+    "local_steps": "schedule.local_steps",
+    "lr_x": "schedule.lr_x",
+    "lr_y": "schedule.lr_y",
+    "lr_u": "schedule.lr_u",
+    "hierarchy_period": "schedule.hierarchy_period",
+    "neumann_q": "schedule.neumann_q",
+    "fuse_storm": "execution.fuse_storm",
+    "fuse_oracles": "execution.fuse_oracles",
+    "overlap": "execution.overlap",
+    "scatter_comm": "execution.scatter_comm",
+    "participation": "participation.sampler",
+    "clients_per_round": "participation.clients_per_round",
+    "availability_seed": "participation.seed",
+    "availability_rate": "participation.availability_rate",
+    "availability_trace": "participation.trace_path",
+    "stale_discount": "participation.stale_discount",
 }
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
-    ap.add_argument("--reduced", action="store_true",
+def _parser() -> argparse.ArgumentParser:
+    S = argparse.SUPPRESS   # spec-affecting flags: only record what was SET
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--experiment", default=None, metavar="EXP.json",
+                    help="base Experiment spec (repro.api JSON); other "
+                         "flags override individual fields")
+    ap.add_argument("--resume", default=None, metavar="CKPT_DIR",
+                    help="reconstruct the run from the checkpoint's embedded "
+                         "experiment.json and continue it; spec-affecting "
+                         "flags must match the embedded spec")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=S)
+    ap.add_argument("--reduced", action="store_true", default=S,
                     help="train the reduced same-family variant (CPU-sized)")
-    ap.add_argument("--algo", choices=sorted(_MAKERS), default="fedbioacc")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--local-steps", type=int, default=4)
-    ap.add_argument("--per-client", type=int, default=2)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr-x", type=float, default=0.02)
-    ap.add_argument("--lr-y", type=float, default=0.05)
-    ap.add_argument("--lr-u", type=float, default=0.05)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--hierarchy-period", type=int, default=0,
+    ap.add_argument("--algo", default=S,
+                    help="registered algorithm name (repro.api.algorithms())")
+    ap.add_argument("--steps", type=int, default=S)
+    ap.add_argument("--clients", type=int, default=S)
+    ap.add_argument("--local-steps", type=int, default=S)
+    ap.add_argument("--per-client", type=int, default=S)
+    ap.add_argument("--seq", type=int, default=S)
+    ap.add_argument("--lr-x", type=float, default=S)
+    ap.add_argument("--lr-y", type=float, default=S)
+    ap.add_argument("--lr-u", type=float, default=S)
+    ap.add_argument("--seed", type=int, default=S,
+                    help="sets both problem.data_seed and schedule.seed")
+    ap.add_argument("--hierarchy-period", type=int, default=S,
                     help="k>0: pod-local averaging, cross-pod only every "
                          "k-th round (all algorithms honor this)")
-    ap.add_argument("--neumann-q", type=int, default=8,
+    ap.add_argument("--neumann-q", type=int, default=S,
                     help="Neumann series terms for the local-lower "
                          "hyper-gradient (fedbio_local/fedbioacc_local)")
+    ap.add_argument("--comm-every", default=S, metavar="SEC=K[,SEC=K]",
+                    help="per-section async communication cadence, e.g. "
+                         "'u=2' reduces the u sequence every 2nd comm round")
     ap.add_argument("--participation",
                     choices=["full", "uniform", "weighted", "trace"],
-                    default="full",
+                    default=S,
                     help="client sampler: m-of-M uniform/data-size-weighted "
                          "sampling or a trace-driven availability process "
                          "(non-participants frozen, participants-only means)")
-    ap.add_argument("--clients-per-round", type=int, default=0,
+    ap.add_argument("--clients-per-round", type=int, default=S,
                     help="m for the uniform/weighted samplers (0 = all "
                          "clients; implies --participation uniform when set)")
-    ap.add_argument("--availability-seed", type=int, default=0,
+    ap.add_argument("--availability-seed", type=int, default=S,
                     help="seed of the deterministic per-round availability "
                          "process (resume-safe: masks depend only on "
                          "seed + round)")
-    ap.add_argument("--availability-rate", type=float, default=0.7,
+    ap.add_argument("--availability-rate", type=float, default=S,
                     help="trace sampler: per-round client up-probability")
-    ap.add_argument("--availability-trace", default=None, metavar="PATH.json",
+    ap.add_argument("--availability-trace", default=S, metavar="PATH.json",
                     help="recorded availability log ([rounds, clients] 0/1 "
                          "JSON matrix) replayed deterministically (cyclic) "
                          "through the trace sampler; implies "
                          "--participation trace")
-    ap.add_argument("--client-weights", default=None,
+    ap.add_argument("--client-weights", default=S,
                     help="comma-separated per-client data sizes (required by "
                          "--participation weighted; also weights the means)")
-    ap.add_argument("--stale-discount", type=float, default=1.0,
+    ap.add_argument("--stale-discount", type=float, default=S,
                     help="alpha^staleness discount for returning clients' "
-                         "contributions (fused engine only; 1.0 = off; "
-                         "a no-op under full participation)")
-    ap.add_argument("--fuse-storm", action="store_true",
+                         "contributions (1.0 = off; a no-op under full "
+                         "participation)")
+    ap.add_argument("--fuse-storm", action="store_true", default=S,
                     help="flat-buffer substrate: the algorithm's sequence "
                          "spec compiled to fused triple-sequence updates "
                          "+ section-masked communication (all algorithms)")
-    ap.add_argument("--fuse-oracles", action="store_true",
+    ap.add_argument("--fuse-oracles", action="store_true", default=S,
                     help="share one linearization (and one batch) across "
                          "the oracle directions (no-op for fedavg)")
-    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+    ap.add_argument("--mesh", default=S, metavar="DATA,MODEL",
                     help="shard the flat substrate over a (data, model) "
                          "device mesh (e.g. 4,2 under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8, or "
@@ -106,146 +143,166 @@ def main(argv=None):
                          "over 'data', packed params over 'model', real "
                          "psum collectives under shard_map; needs "
                          "--fuse-storm")
-    ap.add_argument("--overlap", action="store_true",
+    ap.add_argument("--overlap", action="store_true", default=S,
                     help="comm/compute overlap: issue the variable-section "
                          "all-reduce concurrently with the new-iterate "
-                         "oracle (STORM algorithms; needs --fuse-storm)")
-    ap.add_argument("--scatter-comm", action="store_true",
+                         "oracle (STORM algorithms; needs --mesh)")
+    ap.add_argument("--scatter-comm", action="store_true", default=S,
                     help="with --mesh: lower the participant mean to the "
                          "psum_scatter + all_gather all-reduce decomposition "
                          "instead of one psum (the form XLA can software-"
                          "pipeline with compute)")
-    args = ap.parse_args(argv)
+    # driver-only knobs (never part of the spec / trajectory)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    return ap
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg, dtype=jnp.float32 if args.reduced else jnp.bfloat16)
-    fed = FederatedConfig(algorithm=args.algo, num_clients=args.clients,
-                          local_steps=args.local_steps, lr_x=args.lr_x,
-                          lr_y=args.lr_y, lr_u=args.lr_u,
-                          hierarchy_period=args.hierarchy_period,
-                          neumann_q=args.neumann_q)
-    sampler = args.participation
-    if args.availability_trace:
-        # check before the clients-per-round promotion below so the error
-        # names the flag the user actually passed
-        if args.clients_per_round:
-            raise SystemExit(
-                "--availability-trace drives participation from the "
-                "recorded log — --clients-per-round has no effect; unset it")
-        if sampler not in ("full", "trace"):
-            raise SystemExit(
-                f"--availability-trace replays a recorded log through the "
-                f"trace sampler — it conflicts with --participation "
-                f"{sampler} (drop one of the two)")
-        sampler = "trace"
-    elif sampler == "full" and args.clients_per_round:
-        sampler = "uniform"
-    pspec = None
-    if sampler != "full":
-        cw = (tuple(float(v) for v in args.client_weights.split(","))
-              if args.client_weights else None)
-        pspec = ParticipationSpec(
-            sampler=sampler, clients_per_round=args.clients_per_round,
-            client_weights=cw, seed=args.availability_seed,
-            availability_rate=args.availability_rate,
-            stale_discount=args.stale_discount,
-            trace_path=args.availability_trace)
-    elif args.stale_discount != 1.0:
+
+def apply_overrides(base: Experiment, ov: dict) -> Experiment:
+    """Apply explicitly-passed CLI flags as spec edits (the only way flags
+    reach the run), mirroring the CLI's coupled-flag semantics."""
+    edits = {}
+    for dest, path in _FLAG_PATHS.items():
+        if dest in ov:
+            edits[path] = ov[dest]
+    if "seed" in ov:
+        edits["problem.data_seed"] = ov["seed"]
+        edits["schedule.seed"] = ov["seed"]
+    if "client_weights" in ov:
+        edits["participation.client_weights"] = tuple(
+            float(v) for v in ov["client_weights"].split(","))
+    if "mesh" in ov:
+        m = ov["mesh"]
+        if m == "production":
+            edits["execution.mesh"] = "production"
+        else:
+            try:
+                edits["execution.mesh"] = tuple(int(v) for v in m.split(","))
+            except ValueError:
+                raise SystemExit(f"--mesh expects DATA,MODEL (e.g. 4,2) or "
+                                 f"'production'; got {m!r}")
+    if "comm_every" in ov:
+        try:
+            edits["schedule.comm_every"] = {
+                k: int(v) for k, v in
+                (pair.split("=") for pair in ov["comm_every"].split(","))}
+        except ValueError:
+            raise SystemExit(f"--comm-every expects SEC=K[,SEC=K] (e.g. "
+                             f"u=2); got {ov['comm_every']!r}")
+    # sampler promotions (trace_path / clients_per_round on the default
+    # sampler) are part of the SPEC's normal form — Experiment.normalize(),
+    # applied by validate()/build() for every consumer, not a CLI quirk;
+    # contradictory combinations fail there with field-naming errors
+    exp = base.edit(**edits).normalize()
+    if exp.participation.sampler == "full" \
+            and exp.participation.stale_discount != 1.0:
         # full participation keeps every staleness counter at 0, so the
         # discount could never bite — flag the no-op instead of aborting
-        print("--stale-discount ignored: full participation has no "
+        print("stale_discount ignored: full participation has no "
               "stale clients (pick a sampler)")
-    mesh = parse_mesh_arg(args.mesh) if args.mesh else None
-    if args.overlap and mesh is None:
-        # overlap re-schedules the STORM round (a documented algorithmic
-        # deviation at comm rounds) — without a mesh there is no collective
-        # to hide, so refuse rather than silently change the trajectory
-        raise SystemExit("--overlap needs --mesh: the overlap schedule "
-                         "exists to hide the data-axis collective behind "
-                         "the new-iterate oracle")
-    if mesh is not None:
-        axes = dict(mesh.shape)
-        if args.clients % axes["data"]:
-            raise SystemExit(f"--clients {args.clients} must be divisible by "
-                             f"the mesh data axis ({axes['data']})")
+    return exp
+
+
+def _resolve_experiment(args, overrides: dict) -> tuple[Experiment, int]:
+    """(experiment, start_step) from --resume / --experiment / defaults,
+    with flag overrides applied."""
+    if args.resume:
+        base = load_experiment(args.resume)
+        if base is None:
+            raise SystemExit(
+                f"--resume {args.resume}: no experiment.json in the "
+                f"checkpoint (pre-spec checkpoint?) — re-specify the run "
+                f"with --experiment/flags instead")
+        exp = apply_overrides(base, overrides)
+        # compare normal forms: CLI-embedded specs are already canonical,
+        # hand-embedded ones may predate promotion
+        if exp != base.normalize():
+            raise SystemExit(
+                f"--resume {args.resume}: flags contradict the embedded "
+                f"experiment spec (passed: "
+                f"{sorted('--' + k.replace('_', '-') for k in overrides)}). "
+                f"Resume continues the EXACT run; drop the conflicting "
+                f"flags or start a fresh run with --experiment")
+        return exp, int(checkpoint_metadata(args.resume)["step"])
+    if args.experiment:
+        return apply_overrides(Experiment.load(args.experiment),
+                               overrides), 0
+    if "arch" not in overrides:
+        raise SystemExit("--arch is required (or pass --experiment/--resume)")
+    # the CLI's historical baseline: nothing reduced unless asked
+    base = Experiment()
+    base = base.edit(**{"problem.reduced": False})
+    return apply_overrides(base, overrides), 0
+
+
+def main(argv=None):
+    ap = _parser()
+    ns = ap.parse_args(argv)
+    # SUPPRESS-defaulted flags only exist on the namespace when passed
+    driver = {"experiment", "resume", "ckpt_dir", "ckpt_every", "log_every"}
+    overrides = {k: v for k, v in vars(ns).items() if k not in driver}
+    exp, start = _resolve_experiment(ns, overrides)
+
+    try:
+        run = build(exp)
+    except SpecError as e:
+        raise SystemExit(str(e))
+    exp = run.spec
+
+    if run.mesh is not None:
+        axes = dict(run.mesh.shape)
         print(f"mesh: data={axes['data']} model={axes['model']} "
-              f"({len(mesh.devices.flat)} devices)"
-              + (" overlap=on" if args.overlap else "")
-              + (" comm=psum_scatter" if args.scatter_comm else ""))
-    elif args.scatter_comm:
-        print("--scatter-comm ignored: needs --mesh")
-    mesh_arg = mesh
-    if mesh is not None and args.scatter_comm:
-        from repro.optim.flat import make_shard_ctx
-        mesh_arg = make_shard_ctx(mesh, use_scatter=True)
-    # every factory takes the full uniform switch set (sequence-spec engine)
-    init, step = _MAKERS[args.algo](model, fed, n_micro=1, remat=False,
-                                    fuse_storm=args.fuse_storm,
-                                    fuse_oracles=args.fuse_oracles,
-                                    participation=pspec,
-                                    mesh=mesh_arg, overlap=args.overlap)
+              f"({len(run.mesh.devices.flat)} devices)"
+              + (" overlap=on" if exp.execution.overlap else "")
+              + (" comm=psum_scatter" if exp.execution.scatter_comm else ""))
+    pspec = run.participation
     if pspec is not None:
+        M = exp.problem.num_clients
         if pspec.trace_path is not None:
             detail = f"log={pspec.trace_path}"
         elif pspec.sampler == "trace":
             detail = f"rate={pspec.availability_rate}"
         else:
-            detail = f"m={pspec.clients_per_round or args.clients}/{args.clients}"
+            detail = f"m={pspec.clients_per_round or M}/{M}"
         print(f"participation: {pspec.sampler} {detail} seed={pspec.seed}")
-    # flat-substrate states expose pytree views for eval/checkpoint
-    as_view = step.views if hasattr(step, "views") else (lambda s: s)
-    batch_fn = make_fed_batch_fn(cfg, num_clients=args.clients,
-                                 per_client=args.per_client, seq_len=args.seq,
-                                 seed=args.seed)
-    key = jax.random.PRNGKey(args.seed)
-    state = init(key)
-    jstep = jax.jit(step, donate_argnums=(0,))
-    if mesh is not None:
-        # batches ride the mesh too: client axis over "data", rest replicated
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        b_shard = NamedSharding(mesh, P("data"))
-        place_batch = lambda b: jax.device_put(b, jax.tree.map(
-            lambda _: b_shard, b))
+
+    key = jax.random.PRNGKey(exp.schedule.seed)
+    if start:
+        state = load_checkpoint(ns.resume, jax.eval_shape(run.init, key))
+        if run.shardings(state) is not None:
+            state = jax.device_put(state, run.shardings(state))
+        print(f"resumed from {ns.resume} @ step {start}")
     else:
-        place_batch = lambda b: b
-    # the eval batch is fixed — generate it once, not per eval_loss call
-    eval_batch = jax.tree.map(lambda v: v[0], batch_fn(jax.random.PRNGKey(123)))
+        state = run.init(key)
+    # replay the batch-key sequence up to the resume point so a resumed run
+    # continues the exact uninterrupted trajectory
+    for _ in range(start):
+        key, _ = jax.random.split(key)
 
-    def eval_loss(state):
-        state = as_view(state)
-        p = (state.params if hasattr(state, "params")
-             else {"body": state.x, "head": state.y})
-        p0 = jax.tree.map(lambda v: v[0], p)
-        l, _ = model.loss(p0, eval_batch["val"])
-        return float(l)
-
-    # parameter count from shapes only — no second full model.init
+    jstep = jax.jit(run.step, donate_argnums=(0,))
     n_params = sum(int(np.prod(s.shape)) for s in
-                   jax.tree.leaves(jax.eval_shape(model.init, key)))
-    print(f"arch={cfg.name} family={cfg.family} algo={args.algo} "
-          f"params={n_params:,}")
+                   jax.tree.leaves(jax.eval_shape(run.model.init,
+                                                  jax.random.PRNGKey(0))))
+    print(f"arch={run.model_cfg.name} family={run.model_cfg.family} "
+          f"algo={exp.algorithm.name} params={n_params:,}")
     t0 = time.time()
     history = []
-    for t in range(args.steps):
+    for t in range(start, exp.schedule.steps):
         key, sub = jax.random.split(key)
-        state, metrics = jstep(state, place_batch(batch_fn(sub)))
-        if (t + 1) % args.log_every == 0 or t == 0:
-            l = eval_loss(state)
+        state, metrics = jstep(state, run.place_batch(run.batch_fn(sub)))
+        if (t + 1) % ns.log_every == 0 or t == start:
+            l = run.eval_fn(state)
             history.append({"step": t + 1, "val_loss": l,
                             "wall_s": round(time.time() - t0, 1)})
             print(json.dumps(history[-1]), flush=True)
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            payload = as_view(state)._asdict()
-            # the legacy view drops FlatState.stale — without the per-client
-            # staleness counters a discounted run cannot resume exactly
-            stale = getattr(state, "stale", ())
-            if not isinstance(stale, tuple):
-                payload["stale"] = stale
-            save_checkpoint(args.ckpt_dir, payload,
-                            {"step": t + 1, "arch": cfg.name})
-            print(f"checkpoint @ step {t+1} -> {args.ckpt_dir}")
+        if ns.ckpt_dir and (t + 1) % ns.ckpt_every == 0:
+            # the RAW state (flat buffers included) + the embedded spec:
+            # --resume rebuilds the structure from the spec alone
+            save_checkpoint(ns.ckpt_dir, state,
+                            {"step": t + 1, "arch": run.model_cfg.name},
+                            experiment=exp)
+            print(f"checkpoint @ step {t+1} -> {ns.ckpt_dir}")
     assert not any(jnp.isnan(jnp.asarray(h["val_loss"])) for h in history)
     return history
 

@@ -189,6 +189,23 @@ def alpha_schedule(cfg, t):
     return cfg.alpha_delta / (cfg.alpha_u0 + t.astype(jnp.float32)) ** (1.0 / 3.0)
 
 
+def with_comm_every(aspec: AlgoSpec, cadences: dict) -> AlgoSpec:
+    """Override per-sequence communication cadences by SECTION name (the
+    ``Experiment.schedule.comm_every`` knob): ``{"u": 2}`` makes the u
+    sequence enter a reduction only every 2nd comm round."""
+    unknown = set(cadences) - set(aspec.sections)
+    if unknown:
+        raise ValueError(f"comm_every names unknown sections "
+                         f"{sorted(unknown)} (spec {aspec.name!r} has "
+                         f"{aspec.sections})")
+    if any(int(k) < 1 for k in cadences.values()):
+        raise ValueError(f"comm_every cadences must be >= 1: {cadences}")
+    return aspec._replace(sequences=tuple(
+        q._replace(comm_every=int(cadences[q.section]))
+        if q.section in cadences else q
+        for q in aspec.sequences))
+
+
 # ---------------------------------------------------------------------------
 # Policy-driven communication
 # ---------------------------------------------------------------------------
@@ -349,6 +366,27 @@ def effective_staleness(aspec: AlgoSpec, participation) -> tuple:
                  for q in aspec.sequences)
 
 
+def staleness_weights(w, stale, stale_alpha: tuple) -> tuple:
+    """Per-sequence α^staleness-aged participation weights — ONE aged array
+    per distinct α, shared by the sequences using it (so the flat path's
+    ``client_mean_masked`` still merges their tile runs).  The single
+    source of the discount arithmetic: the fused engine and the unfused
+    tree paths both call this, keeping their trajectories bit-consistent."""
+    s = stale.astype(jnp.float32)
+    by_alpha = {a: (w if a == 1.0 else w * jnp.float32(a) ** s)
+                for a in set(stale_alpha)}
+    return tuple(by_alpha[a] for a in stale_alpha)
+
+
+def advance_stale(cfg, step, mask, stale):
+    """Advance per-client staleness counters at communication steps:
+    participants reset to 0, absentees age by 1 (shared by the fused
+    engine and the unfused tree paths)."""
+    is_comm = (step + 1) % cfg.local_steps == 0
+    bumped = jnp.where(mask > 0, 0, stale + 1)
+    return jnp.where(is_comm, bumped, stale)
+
+
 def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 block: int | None = None, participation=None,
                 shard: flat.ShardCtx | None = None,
@@ -398,19 +436,12 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         mask, w = part.round_weights(state.step // cfg.local_steps)
         if not discounted:
             return mask, w          # one shared array → runs merge in comm
-        s = state.stale.astype(jnp.float32)
-        # one discounted array per DISTINCT α — sections sharing α share the
-        # array object, so client_mean_masked still merges their tile runs
-        by_alpha = {a: (w if a == 1.0 else w * jnp.float32(a) ** s)
-                    for a in set(stale_alpha)}
-        return mask, tuple(by_alpha[a] for a in stale_alpha)
+        return mask, staleness_weights(w, state.stale, stale_alpha)
 
     def _next_stale(state: FlatState, mask):
         if part is None:
             return state.stale
-        is_comm = (state.step + 1) % cfg.local_steps == 0
-        bumped = jnp.where(mask > 0, 0, state.stale + 1)
-        return jnp.where(is_comm, bumped, state.stale)
+        return advance_stale(cfg, state.step, mask, state.stale)
 
     def state_shardings(state: FlatState):
         """NamedSharding pytree for ``state`` (None without a mesh): [M, N]

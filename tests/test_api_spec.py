@@ -1,0 +1,352 @@
+"""repro.api: Experiment JSON round-trip, registry-built Runs bit-identical
+to the pre-redesign factory path (fused + unfused, with participation, and
+on a device mesh via subprocess), actionable validation errors, and
+checkpoint spec embedding / resume."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
+                       ParticipationSpec, ProblemSpec, ScheduleSpec,
+                       SpecError, build, federated_config)
+
+_ALGOS = {
+    "fedbio": ("x", "y", "u"),
+    "fedbioacc": ("x", "y", "u", "omega", "nu", "q"),
+    "fedbio_local": ("x", "y"),
+    "fedbioacc_local": ("x", "y", "omega", "nu"),
+    "fedavg": ("params", "mom"),
+}
+
+
+def _exp(algo, **edits) -> Experiment:
+    base = Experiment(
+        algorithm=AlgorithmSpec(algo),
+        problem=ProblemSpec(arch="mamba2-130m", reduced=True, num_clients=4,
+                            per_client=1, seq_len=16),
+        schedule=ScheduleSpec(steps=3, local_steps=2, lr_x=0.05, lr_y=0.05,
+                              lr_u=0.05, neumann_q=2, neumann_tau=0.3))
+    return base.edit(**edits) if edits else base
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", sorted(_ALGOS))
+def test_json_roundtrip_equality(algo):
+    exp = _exp(algo,
+               **{"algorithm.params": {"momentum": 0.8} if algo == "fedavg"
+                  else ({"c_nu": 0.9} if "acc" in algo else {}),
+                  "participation.sampler": "uniform",
+                  "participation.clients_per_round": 2,
+                  "schedule.comm_every": {"params" if algo == "fedavg"
+                                          else "x": 2}})
+    exp.validate()
+    back = Experiment.from_json(exp.to_json())
+    assert back == exp
+    # a second trip through disk-shaped text is still stable
+    assert Experiment.from_json(back.to_json()) == exp
+
+
+def test_json_rejects_unknowns_and_bad_version():
+    with pytest.raises(SpecError, match="version"):
+        Experiment.from_json(json.dumps({"version": 99}))
+    with pytest.raises(SpecError, match="unknown keys"):
+        Experiment.from_json(json.dumps({"problem": {"archh": "x"}}))
+    with pytest.raises(SpecError, match="top-level"):
+        Experiment.from_json(json.dumps({"extra": 1}))
+    with pytest.raises(SpecError, match="parse"):
+        Experiment.from_json("{nope")
+
+
+def test_edit_list_values_stay_hashable_and_roundtrip():
+    """edit() on the NamedTuple participation spec coerces list values the
+    same way from_json does — the spec stays hashable and round-trip
+    equal (a sweep editing client_weights must not defeat --resume's
+    exact-match check)."""
+    exp = _exp("fedbio").edit(
+        **{"participation.client_weights": [1.0, 2.0, 3.0, 4.0]})
+    hash(exp)
+    assert Experiment.from_json(exp.to_json()) == exp
+
+
+def test_validation_errors_are_actionable():
+    with pytest.raises(SpecError, match="unknown algorithm"):
+        _exp("fedbio").edit(**{"algorithm.name": "nope"}).validate()
+    with pytest.raises(SpecError, match="not hyperparams"):
+        _exp("fedbio").edit(**{"algorithm.params": {"c_nu": 1.0}}).validate()
+    with pytest.raises(SpecError, match="unknown arch"):
+        _exp("fedbio").edit(**{"problem.arch": "nope"}).validate()
+    with pytest.raises(SpecError, match="fuse_storm"):
+        _exp("fedbio").edit(**{"execution.mesh": (2, 1)}).validate()
+    with pytest.raises(SpecError, match="divisible"):
+        _exp("fedbio").edit(**{"execution.mesh": (3, 1),
+                               "execution.fuse_storm": True}).validate()
+    with pytest.raises(SpecError, match="not a section"):
+        _exp("fedavg").edit(**{"schedule.comm_every": {"u": 2}}).validate()
+    with pytest.raises(SpecError, match="client_weights"):
+        _exp("fedbio").edit(
+            **{"participation.sampler": "weighted"}).validate()
+    with pytest.raises(SpecError, match="no such field"):
+        _exp("fedbio").edit(**{"schedule.nope": 1})
+
+
+def test_normalize_promotes_samplers_for_every_consumer():
+    """clients_per_round / trace_path on the default 'full' sampler promote
+    in the SPEC's normal form (build applies it), not as a CLI quirk — the
+    same JSON means the same run via build()/dryrun/benchmarks/resume."""
+    exp = _exp("fedbio").edit(**{"participation.clients_per_round": 2})
+    assert exp.normalize().participation.sampler == "uniform"
+    assert exp.normalize().normalize() == exp.normalize()   # idempotent
+    run = build(exp)
+    assert run.spec.participation.sampler == "uniform"
+    assert run.participation is not None                    # 2-of-4 sampling
+    exp = _exp("fedbio").edit(**{"participation.trace_path": "log.json"})
+    assert exp.normalize().participation.sampler == "trace"
+    with pytest.raises(SpecError, match="trace_path"):
+        _exp("fedbio").edit(**{"participation.trace_path": "log.json",
+                               "participation.sampler": "uniform"}).validate()
+    with pytest.raises(SpecError, match="clients_per_round"):
+        _exp("fedbio").edit(**{"participation.sampler": "trace",
+                               "participation.clients_per_round": 2}).validate()
+
+
+def test_federated_config_carries_algorithm_params():
+    exp = _exp("fedbioacc", **{"algorithm.params": {"c_nu": 0.7,
+                                                    "alpha_u0": 4.0}})
+    fed = federated_config(exp)
+    assert fed.c_nu == 0.7 and fed.alpha_u0 == 4.0
+    assert fed.c_omega == 1.0          # registry default
+    assert fed.num_clients == 4 and fed.local_steps == 2
+
+
+# ---------------------------------------------------------------------------
+# registry-built runs == pre-redesign factory path, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def factory_setup():
+    from repro.configs import ARCHS
+    from repro.data import make_fed_batch_fn
+    from repro.models import build_model
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=1,
+                                 seq_len=16, seed=0)
+    return model, batch_fn
+
+
+def _traj(init, step, batch_fn, steps):
+    state = init(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    key = jax.random.PRNGKey(1)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        state, _ = jstep(state, batch_fn(sub))
+    return step.views(state) if hasattr(step, "views") else state
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("algo", sorted(_ALGOS))
+def test_built_run_bit_identical_to_factory(factory_setup, algo, fuse):
+    """build(Experiment.from_json(exp.to_json())) reproduces the direct
+    make_*_train_step call BIT-identically — fused and unfused, and under
+    2-of-4 uniform participation for the STORM algorithms."""
+    from repro.federation import trainer as tr
+
+    model, batch_fn = factory_setup
+    part = (ParticipationSpec("uniform", 2, seed=7)
+            if algo in ("fedbioacc", "fedbioacc_local") else None)
+    exp = _exp(algo)
+    if fuse:
+        exp = exp.edit(**{"execution.fuse_storm": True,
+                          "execution.storm_block": 256})
+    if part is not None:
+        exp = exp.edit(**{"participation.sampler": "uniform",
+                          "participation.clients_per_round": 2,
+                          "participation.seed": 7})
+
+    run = build(Experiment.from_json(exp.to_json()))
+    v_run = _traj(run.init, run.step, run.batch_fn, 3)
+
+    maker = getattr(tr, f"make_{algo}_train_step")
+    kw = dict(fuse_storm=True, storm_block=256) if fuse else {}
+    init, step = maker(model, federated_config(exp), n_micro=1, remat=False,
+                       participation=part, **kw)
+    v_fac = _traj(init, step, batch_fn, 3)
+
+    for n in _ALGOS[algo]:
+        for a, b in zip(jax.tree.leaves(getattr(v_run, n)),
+                        jax.tree.leaves(getattr(v_fac, n))):
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8),
+                err_msg=f"{algo}.{n}")
+
+
+def test_comm_every_spec_reaches_engine(factory_setup):
+    """schedule.comm_every={'u': 2}: at the first comm round x averages
+    while u still differs across clients (the async cadence knob, driven
+    from the declarative spec)."""
+    model, batch_fn = factory_setup
+    exp = _exp("fedbio", **{"schedule.local_steps": 1,
+                            "schedule.comm_every": {"u": 2}})
+    run = build(exp)
+    state = run.init(jax.random.PRNGKey(0))
+    state, _ = jax.jit(run.step)(state, run.batch_fn(jax.random.PRNGKey(1)))
+
+    def spread(tree):
+        return max(float(jnp.max(jnp.std(v.astype(jnp.float32), axis=0)))
+                   for v in jax.tree.leaves(tree))
+
+    assert spread(state.x) < 1e-7
+    assert spread(state.u) > 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint spec embedding + resume
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_embeds_spec_and_resumes_exactly(tmp_path):
+    """An interrupted run (checkpoint = raw state + experiment.json) resumed
+    through the embedded spec continues the exact uninterrupted trajectory,
+    bit for bit — the fused FlatState round-trips through npz."""
+    from repro.checkpoint import (load_checkpoint, load_experiment,
+                                  save_checkpoint)
+
+    exp = _exp("fedbioacc", **{"execution.fuse_storm": True,
+                               "execution.storm_block": 256,
+                               "schedule.steps": 4})
+    run = build(exp)
+    keys = []
+    key = jax.random.PRNGKey(exp.schedule.seed)
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        keys.append(sub)
+    jstep = jax.jit(run.step)
+
+    state = run.init(jax.random.PRNGKey(exp.schedule.seed))
+    for k in keys[:2]:
+        state, _ = jstep(state, run.batch_fn(k))
+    ckpt = str(tmp_path / "ck")
+    save_checkpoint(ckpt, state, {"step": 2}, experiment=exp)
+
+    # --- "new process": rebuild from the embedded spec alone -------------
+    exp2 = load_experiment(ckpt)
+    assert exp2 == exp
+    run2 = build(exp2)
+    like = jax.eval_shape(run2.init, jax.random.PRNGKey(exp2.schedule.seed))
+    state2 = load_checkpoint(ckpt, like)
+    for k in keys[2:]:
+        state2, _ = jax.jit(run2.step)(state2, run2.batch_fn(k))
+
+    # --- uninterrupted reference -----------------------------------------
+    ref = run.init(jax.random.PRNGKey(exp.schedule.seed))
+    for k in keys:
+        ref, _ = jstep(ref, run.batch_fn(k))
+
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(state2)):
+        np.testing.assert_array_equal(np.asarray(a).ravel().view(np.uint8),
+                                      np.asarray(b).ravel().view(np.uint8))
+
+
+def test_resume_flag_mismatch_fails_loudly(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    from repro.launch import train as train_cli
+
+    exp = _exp("fedbio")
+    ckpt = str(tmp_path / "ck")
+    save_checkpoint(ckpt, {"x": jnp.zeros(())}, {"step": 2}, experiment=exp)
+    ns = train_cli._parser().parse_args(["--resume", ckpt, "--lr-x", "0.5"])
+    with pytest.raises(SystemExit, match="contradict"):
+        train_cli._resolve_experiment(ns, {"lr_x": 0.5})
+    # a flag that MATCHES the embedded spec is not a mismatch
+    ns = train_cli._parser().parse_args(["--resume", ckpt, "--lr-x", "0.05"])
+    got, start = train_cli._resolve_experiment(ns, {"lr_x": 0.05})
+    assert got == exp and start == 2
+
+
+def test_cli_flags_build_the_same_spec():
+    """The CLI is a pure adapter: flags produce the Experiment, never a
+    separate kwargs path."""
+    from repro.launch import train as train_cli
+
+    ov = {"arch": "mamba2-130m", "reduced": True, "algo": "fedbioacc_local",
+          "clients": 8, "clients_per_round": 4, "seed": 3,
+          "fuse_storm": True, "comm_every": "x=2"}
+    exp = train_cli.apply_overrides(
+        Experiment().edit(**{"problem.reduced": False}), ov)
+    assert exp.algorithm.name == "fedbioacc_local"
+    assert exp.problem.num_clients == 8 and exp.problem.reduced
+    assert exp.participation.sampler == "uniform"       # promoted
+    assert exp.participation.clients_per_round == 4
+    assert exp.problem.data_seed == 3 and exp.schedule.seed == 3
+    assert exp.schedule.comm_every_dict == {"x": 2}
+    exp.validate()
+
+
+# ---------------------------------------------------------------------------
+# mesh (subprocess: the device-count flag must precede jax init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.api import Experiment, build
+
+    exp_json = %r
+    exp = Experiment.from_json(exp_json)
+
+    def traj(exp):
+        run = build(exp)
+        state = run.init(jax.random.PRNGKey(0))
+        if run.mesh is not None:
+            assert run.shardings(state) is not None
+        jstep = jax.jit(run.step, donate_argnums=(0,))
+        key = jax.random.PRNGKey(1)
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            state, _ = jstep(state, run.place_batch(run.batch_fn(sub)))
+        return run.views(state)
+
+    sharded = traj(exp)
+    single = traj(exp.edit(**{"execution.mesh": None,
+                              "execution.overlap": False}))
+    for n in ("x", "y", "u", "omega", "nu", "q"):
+        for a, b in zip(jax.tree.leaves(getattr(sharded, n)),
+                        jax.tree.leaves(getattr(single, n))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5, rtol=2e-4, err_msg=n)
+    print("MESH_OK")
+""")
+
+
+@pytest.mark.timeout(900)
+def test_mesh_experiment_matches_single_device():
+    """A spec carrying a (4, 2) mesh builds the sharded run (shard_map
+    launches + psum reductions) and reproduces the single-device fused
+    trajectory — driven purely from JSON, in a subprocess with 8 forced
+    host devices."""
+    exp = _exp("fedbioacc", **{"execution.fuse_storm": True,
+                               "execution.storm_block": 256,
+                               "execution.mesh": (4, 2)})
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT % exp.to_json()],
+        env=env, capture_output=True, text=True, timeout=850)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "MESH_OK" in res.stdout

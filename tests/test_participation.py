@@ -432,14 +432,59 @@ def test_uniform_full_m_bit_identical_trajectories(setup, algo, fuse):
                 err_msg=f"{algo}.{n}")
 
 
-def test_unfused_staleness_discount_raises(setup):
+@pytest.mark.parametrize("local_steps", [1, 2])
+@pytest.mark.parametrize("algo", ["fedbioacc", "fedbioacc_local"])
+def test_unfused_staleness_matches_fused(setup, algo, local_steps):
+    """stale_discount < 1 on the LEGACY tree path: the unfused states carry
+    per-client staleness counters (bit-identical to the engine's
+    ``FlatState.stale``) and the discounted α^staleness reductions reproduce
+    the fused engine's trajectories — including the comm-round gating of
+    the counter bumps (local_steps > 1)."""
+    from repro.federation import trainer as tr
+
+    import dataclasses
+
+    model, fed, batch_fn = setup
+    fed = dataclasses.replace(fed, local_steps=local_steps)
+    maker = getattr(tr, f"make_{algo}_train_step")
+    pspec = ParticipationSpec("uniform", 2, seed=11, stale_discount=0.3)
+
+    def traj(**kw):
+        init, step = maker(model, fed, n_micro=1, remat=False,
+                           participation=pspec, **kw)
+        state = init(jax.random.PRNGKey(0))
+        jstep = jax.jit(step)
+        key = jax.random.PRNGKey(1)
+        for _ in range(3 * local_steps):
+            key, sub = jax.random.split(key)
+            state, _ = jstep(state, batch_fn(sub))
+        return state, (step.views(state) if hasattr(step, "views")
+                       else state)
+
+    st_u, v_u = traj()
+    st_f, v_f = traj(fuse_storm=True, storm_block=256)
+    # counters advance bit-identically on both paths
+    np.testing.assert_array_equal(np.asarray(st_u.stale),
+                                  np.asarray(st_f.stale))
+    assert int(np.asarray(st_u.stale).max()) > 0   # a client actually aged
+    for n in _ALGOS[algo]:
+        for a, b in zip(jax.tree.leaves(getattr(v_u, n)),
+                        jax.tree.leaves(getattr(v_f, n))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{algo}.{n}")
+
+
+def test_undiscounted_unfused_states_carry_no_counters(setup):
+    """Without staleness discounting the legacy states keep their exact
+    pre-participation structure (stale = the empty tuple, zero leaves)."""
     from repro.federation.trainer import make_fedbioacc_train_step
 
     model, fed, _ = setup
-    with pytest.raises(NotImplementedError):
-        make_fedbioacc_train_step(
-            model, fed, n_micro=1, remat=False,
-            participation=ParticipationSpec("uniform", 2, stale_discount=0.5))
+    init, _ = make_fedbioacc_train_step(
+        model, fed, n_micro=1, remat=False,
+        participation=ParticipationSpec("uniform", 2))
+    assert init(jax.random.PRNGKey(0)).stale == ()
 
 
 def test_participation_recorded_on_train_step(setup):
