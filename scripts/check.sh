@@ -46,6 +46,24 @@ if [[ "${1:-}" != "--bench" ]]; then
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python -m repro.launch.train \
         --experiment experiments/fedbioacc_sharded_overlap.json --log-every 2
+
+    # fault tolerance: NaN + byzantine injection with the screened clip
+    # aggregator and rollback budget, from the committed faulty spec — the
+    # run must stay finite (the unguarded engine demonstrably diverges on
+    # this spec; see tests/test_fault_tolerance.py)
+    echo "smoke-train: fedbioacc_faulty (NaN+byzantine, clip + rollback)"
+    python -m repro.launch.train \
+        --experiment experiments/fedbioacc_faulty.json --log-every 1
+
+    # crash auto-resume: hard-kill the run mid-way (after the step-2
+    # checkpoint), then the --max-restarts supervisor resumes it from the
+    # atomic checkpoint and completes — the kill-mid-run drill end-to-end
+    ckpt="$(mktemp -d)"
+    echo "smoke-train: fedbioacc kill @ step 3 -> auto-resume to 4"
+    python -m repro.launch.train --experiment experiments/fedbioacc.json \
+        --steps 4 --log-every 2 --ckpt-dir "$ckpt" --ckpt-every 2 \
+        --max-restarts 2 --restart-backoff 0.2 --crash-at-step 3
+    rm -rf "$ckpt"
 fi
 
 if [[ "${1:-}" != "--smoke" ]]; then

@@ -22,4 +22,6 @@ from repro.api.registry import (AlgorithmEntry, algorithms,  # noqa: F401
 from repro.api.spec import (SPEC_VERSION, AlgorithmSpec,  # noqa: F401
                             Experiment, ExecutionSpec, ProblemSpec,
                             ScheduleSpec, SpecError)
+from repro.federation.faults import (FaultSpec, RobustnessSpec,  # noqa: F401
+                                     RollbackError, RollbackGuard)
 from repro.federation.participation import ParticipationSpec  # noqa: F401

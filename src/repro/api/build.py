@@ -135,6 +135,7 @@ def build(experiment: Experiment) -> Run:
         storm_block=ex.storm_block, participation=pspec,
         mesh=mesh_arg, overlap=ex.overlap,
         comm_every=exp.schedule.comm_every_dict or None,
+        faults=exp.faults, robustness=exp.robustness,
         **factory_kw)
 
     views = step.views if hasattr(step, "views") else (lambda s: s)

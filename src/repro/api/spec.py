@@ -10,7 +10,9 @@ under which schedule — is a frozen dataclass tree:
     ├── ProblemSpec        arch / reduced / synthetic data / per-client sizes
     ├── ParticipationSpec  client sampling (repro.federation.participation)
     ├── ExecutionSpec      fusion, mesh axes, overlap, scatter-comm
-    └── ScheduleSpec       steps, lrs, cadences, hierarchy, Neumann terms
+    ├── ScheduleSpec       steps, lrs, cadences, hierarchy, Neumann terms
+    ├── FaultSpec?         client failure injection (repro.federation.faults)
+    └── RobustnessSpec?    health screen / robust aggregator / rollback
 
 ``Experiment`` round-trips to/from JSON (:meth:`Experiment.to_json` /
 :meth:`Experiment.from_json`, versioned via ``version``), validates with
@@ -58,8 +60,23 @@ JSON schema (version 1)
                         "neumann_q": int, "neumann_tau": num,
                         "lower_l2": num,
                         "comm_every": {section: int},   # async cadences
-                        "seed": int}
+                        "seed": int},
+      "faults":        {"dropout_rate": num, "nan_rate": num,  # | null
+                        "byzantine_rate": num, "byzantine_scale": num,
+                        "seed": int, "start_round": int},
+      "robustness":    {"aggregator": "mean"|"clip"|"trim",    # | null
+                        "screen": bool, "z_thresh": num,
+                        "clip_factor": num, "trim_frac": num,
+                        "spike_factor": num, "retry_budget": int,
+                        "ring": int}
     }
+
+``faults``/``robustness`` (both optional, default null — the bit-identical
+unguarded stack) declare the fault-tolerance layer: deterministic per-round
+client failure injection and the guard policy against it (health-masked
+robust aggregation + the train loop's rollback/retry) — see
+``repro.federation.faults``.  Both require ``execution.fuse_storm`` and a
+flat (non-hierarchical) schedule.
 
 Unknown keys, wrong versions, unknown algorithms/hyperparams and
 inconsistent combinations (``mesh`` without ``fuse_storm``, ``overlap``
@@ -73,6 +90,7 @@ import json
 from dataclasses import dataclass, field, fields
 from typing import Any, Optional, Tuple
 
+from repro.federation.faults import AGGREGATORS, FaultSpec, RobustnessSpec
 from repro.federation.participation import SAMPLERS, ParticipationSpec
 
 SPEC_VERSION = 1
@@ -198,6 +216,8 @@ class Experiment:
     participation: ParticipationSpec = ParticipationSpec()
     execution: ExecutionSpec = field(default_factory=ExecutionSpec)
     schedule: ScheduleSpec = field(default_factory=ScheduleSpec)
+    faults: Optional[FaultSpec] = None
+    robustness: Optional[RobustnessSpec] = None
     version: int = SPEC_VERSION
 
     # -- validation ---------------------------------------------------------
@@ -309,6 +329,44 @@ class Experiment:
             if int(k) < 1:
                 _err("schedule.comm_every", f"cadence for {sec!r} must be "
                      f">= 1, got {k}")
+
+        fl, rb = self.faults, self.robustness
+        if fl is not None or rb is not None:
+            which = "faults" if fl is not None else "robustness"
+            if not ex.fuse_storm:
+                _err(which, "needs execution.fuse_storm=true — fault "
+                     "injection and the robust reductions are features of "
+                     "the fused sequence-spec engine")
+            if sch.hierarchy_period > 0:
+                _err(which, "does not compose with the hierarchical grouped "
+                     "mean (schedule.hierarchy_period > 0) — the robust "
+                     "reductions and the fault model are global")
+        if fl is not None:
+            for name in ("dropout_rate", "nan_rate", "byzantine_rate"):
+                r = getattr(fl, name)
+                if not 0.0 <= float(r) <= 1.0:
+                    _err(f"faults.{name}", f"{r} is not in [0, 1]")
+            if fl.start_round < 0:
+                _err("faults.start_round", f"{fl.start_round} must be >= 0")
+        if rb is not None:
+            if rb.aggregator not in AGGREGATORS:
+                _err("robustness.aggregator",
+                     f"unknown aggregator {rb.aggregator!r}; choose from "
+                     f"{AGGREGATORS}")
+            if not 0.0 <= float(rb.trim_frac) < 0.5:
+                _err("robustness.trim_frac",
+                     f"{rb.trim_frac} is not in [0, 0.5) — trimming both "
+                     f"ends must leave at least one row")
+            if float(rb.clip_factor) <= 0:
+                _err("robustness.clip_factor",
+                     f"{rb.clip_factor} must be > 0")
+            if float(rb.spike_factor) <= 1.0:
+                _err("robustness.spike_factor",
+                     f"{rb.spike_factor} must be > 1 (a loss equal to the "
+                     f"last good one is healthy)")
+            if rb.retry_budget < 0 or rb.ring < 1:
+                _err("robustness",
+                     "retry_budget must be >= 0 and ring >= 1")
         return self
 
     # -- JSON ---------------------------------------------------------------
@@ -316,7 +374,12 @@ class Experiment:
     def to_json(self, *, indent: int | None = 1) -> str:
         d = dataclasses.asdict(self)
         d["algorithm"]["params"] = self.algorithm.params_dict
+        # dataclasses.asdict reconstructs NamedTuples (json would emit
+        # lists) — serialize them as objects explicitly
         d["participation"] = self.participation._asdict()
+        d["faults"] = self.faults._asdict() if self.faults else None
+        d["robustness"] = (self.robustness._asdict()
+                           if self.robustness else None)
         d["schedule"]["comm_every"] = self.schedule.comm_every_dict
         # version first — the one key a reader must dispatch on
         d = {"version": d.pop("version"), **d}
@@ -356,6 +419,21 @@ class Experiment:
         if sub.get("client_weights") is not None:
             sub["client_weights"] = tuple(sub["client_weights"])
         parts["participation"] = ParticipationSpec(**sub)
+        for key, klass in (("faults", FaultSpec),
+                           ("robustness", RobustnessSpec)):
+            sub = d.pop(key, None)
+            if sub is None:
+                parts[key] = None
+                continue
+            if not isinstance(sub, dict):
+                raise SpecError(f"Experiment.{key}: expected an object or "
+                                f"null")
+            known = set(klass._fields)
+            unknown = set(sub) - known
+            if unknown:
+                raise SpecError(f"Experiment.{key}: unknown keys "
+                                f"{sorted(unknown)} (knows {sorted(known)})")
+            parts[key] = klass(**sub)
         if d:
             raise SpecError(f"Experiment: unknown top-level keys {sorted(d)}")
         return cls(version=version, **parts)
@@ -388,8 +466,13 @@ class Experiment:
                 out = dataclasses.replace(out, **{head: value})
                 continue
             sub = getattr(out, head)
-            if isinstance(sub, ParticipationSpec):
-                if rest not in ParticipationSpec._fields:
+            if sub is None and head in ("faults", "robustness"):
+                # sweeping a guard knob on an unguarded base spec enables
+                # the layer with defaults — `edit(**{"faults.nan_rate": .1})`
+                sub = FaultSpec() if head == "faults" else RobustnessSpec()
+            if isinstance(sub, (ParticipationSpec, FaultSpec,
+                                RobustnessSpec)):
+                if rest not in type(sub)._fields:
                     _err(path, "no such field")
                 # NamedTuple _replace skips the dataclasses' __post_init__
                 # normalization — coerce list edits so the spec stays

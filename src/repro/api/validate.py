@@ -27,10 +27,20 @@ def main(argv=None) -> int:
             failed += 1
             continue
         mesh = exp.execution.mesh
+        guards = ""
+        if exp.faults is not None:
+            fl = exp.faults
+            guards += (f", faults[drop={fl.dropout_rate} nan={fl.nan_rate} "
+                       f"byz={fl.byzantine_rate}]")
+        if exp.robustness is not None:
+            rb = exp.robustness
+            guards += (f", robust[{rb.aggregator}"
+                       f"{' screened' if rb.screen else ''} "
+                       f"retries={rb.retry_budget}]")
         print(f"OK   {path}: {exp.algorithm.name} on {exp.problem.arch}"
               f"{' (reduced)' if exp.problem.reduced else ''}, "
               f"M={exp.problem.num_clients}, steps={exp.schedule.steps}"
-              + (f", mesh={mesh}" if mesh is not None else ""))
+              + (f", mesh={mesh}" if mesh is not None else "") + guards)
     return 1 if failed else 0
 
 

@@ -1,8 +1,18 @@
 """Numpy-backed pytree checkpointing (no orbax offline).
 
-Layout: ``<dir>/manifest.json`` (treedef + shapes/dtypes + user metadata) and
-``<dir>/arrays.npz`` (flattened leaves, keyed ``a<i>``). bfloat16 leaves are
-bit-cast to uint16 for npz compatibility and restored on load.
+Layout: ``<dir>/manifest.json`` (treedef + shapes/dtypes + user metadata +
+the name of the arrays file it points at) and ``<dir>/arrays-<step>.npz``
+(flattened leaves, keyed ``a<i>``). bfloat16 leaves are bit-cast to uint16
+for npz compatibility and restored on load.
+
+Writes are **atomic at the manifest**: the arrays file is written first
+under a fresh token name (temp file + fsync + ``os.replace``), then the
+manifest — the single commit point — is swapped in the same way, and only
+then are stale arrays files pruned.  A crash at ANY byte of the sequence
+leaves the previous (manifest, arrays) pair fully intact, which is what
+lets ``launch.train --max-restarts`` kill-and-resume safely mid-write.
+Old-style checkpoints (no ``arrays`` key in the manifest) fall back to
+``arrays.npz``.
 
 Passing ``experiment=`` (a :class:`repro.api.Experiment`) additionally
 writes ``<dir>/experiment.json`` — the full declarative run spec — so a
@@ -28,11 +38,25 @@ def _path_str(path) -> str:
     return jax.tree_util.keystr(path)
 
 
+def _atomic_replace(path: str, write_fn):
+    """Write via ``write_fn(open file)`` into a sibling temp file, fsync it,
+    and ``os.replace`` over ``path`` — readers see the old bytes or the new
+    bytes, never a partial write."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        write_fn(fh)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
 def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None,
                     *, experiment: Any = None):
     os.makedirs(ckpt_dir, exist_ok=True)
     if experiment is not None:
-        experiment.save(os.path.join(ckpt_dir, EXPERIMENT_FILE))
+        _atomic_replace(os.path.join(ckpt_dir, EXPERIMENT_FILE),
+                        lambda fh: fh.write(
+                            (experiment.to_json() + "\n").encode()))
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays, manifest_leaves = {}, []
     for i, (path, leaf) in enumerate(leaves_with_paths):
@@ -44,17 +68,28 @@ def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None,
         arrays[f"a{i}"] = arr
         manifest_leaves.append({"path": _path_str(path), "dtype": dtype,
                                 "shape": list(arr.shape)})
-    np.savez(os.path.join(ckpt_dir, "arrays.npz"), **arrays)
-    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as fh:
-        json.dump({"leaves": manifest_leaves, "metadata": metadata or {},
-                   "treedef": str(treedef)}, fh, indent=1)
+    # token-named arrays file first, manifest (the commit point) last; prune
+    # superseded arrays files only after the manifest points at the new one
+    arrays_name = f"arrays-{int((metadata or {}).get('step', 0)):08d}.npz"
+    _atomic_replace(os.path.join(ckpt_dir, arrays_name),
+                    lambda fh: np.savez(fh, **arrays))
+    manifest = {"leaves": manifest_leaves, "metadata": metadata or {},
+                "treedef": str(treedef), "arrays": arrays_name}
+    _atomic_replace(os.path.join(ckpt_dir, "manifest.json"),
+                    lambda fh: fh.write(json.dumps(manifest, indent=1)
+                                        .encode()))
+    for name in os.listdir(ckpt_dir):
+        if (name.startswith("arrays") and name != arrays_name
+                and (name.endswith(".npz") or name.endswith(".tmp"))):
+            os.remove(os.path.join(ckpt_dir, name))
 
 
 def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes must match)."""
-    with np.load(os.path.join(ckpt_dir, "arrays.npz")) as data:
-        with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
-            manifest = json.load(fh)
+    with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    arrays_name = manifest.get("arrays", "arrays.npz")
+    with np.load(os.path.join(ckpt_dir, arrays_name)) as data:
         leaves, treedef = jax.tree_util.tree_flatten(like)
         if len(leaves) != len(manifest["leaves"]):
             raise ValueError(

@@ -4,6 +4,10 @@ from repro.federation.trainer import (make_fedavg_train_step,  # noqa: F401
                                       make_fedbioacc_local_train_step,
                                       make_fedbioacc_train_step)
 from repro.federation.evaluate import eval_federated, perplexity  # noqa: F401
+from repro.federation.faults import (AGGREGATORS, Faults,  # noqa: F401
+                                     FaultSpec, RobustnessSpec,
+                                     RollbackError, RollbackGuard,
+                                     expected_fault_fraction, make_faults)
 from repro.federation.participation import (Participation,  # noqa: F401
                                             ParticipationSpec,
                                             expected_comm_fraction,

@@ -1,0 +1,228 @@
+"""Fault engine: deterministic failure injection, robustness policy, rollback.
+
+The reproduction's trajectories assumed every client update is finite,
+honest, and delivered — one NaN row entering the all-reduced mean silently
+poisons all clients.  Real federated deployments (the non-IID analyses of
+arXiv:2302.05412 and the compressed-hypergradient path of arXiv:2302.04969)
+face exactly those failures, and the STORM u-sequence is the most
+numerically fragile path in the system.  This module gives the stack a
+declarative fault model and the guard machinery around it:
+
+* :class:`FaultSpec` — **what goes wrong**: per-round, per-client dropout
+  (the client computes but never delivers), NaN/Inf-corrupted updates, and
+  scaled ("byzantine") updates.  Compiled by :func:`make_faults` into masks
+  that are a *pure function* of ``fold_in(fold_in(seed, round), retry)`` —
+  resume-exact like participation, and re-drawable on rollback retries (the
+  ``retry`` counter rides :class:`~repro.optim.sequences.FlatState` and is
+  bumped by the rollback guard, so a retried round sees a fresh draw).
+
+  Injection compiles down to (a) an extra per-round client *keep* mask
+  multiplied into the participation mask/weights (dropout == the client
+  missed the round), and (b) a corruption transform applied to client rows
+  of the communicated segments **inside the reduction**
+  (``flat.client_mean_masked(..., corrupt=)``) — corruption models what the
+  client *sends*, so private sections, cadence-skipped sections and
+  non-participant rows are never touched, and with guards off the corrupted
+  mean demonstrably poisons every participant (the failure this PR exists
+  to catch).
+
+* :class:`RobustnessSpec` — **what the server does about it**: a per-client
+  health screen (non-finite check + update-norm z-score over the round's
+  participants, ``flat.health_mask``) whose mask composes with the
+  participation weights; a robust aggregator (plain participants-only
+  ``mean``, per-client norm ``clip`` before the mean, or coordinate-wise
+  ``trim`` med mean); and the trainer-level rollback policy
+  (``spike_factor`` / ``retry_budget`` / ``ring``) driven by
+  :class:`RollbackGuard`.  Screened-out participants are *recovered*: they
+  receive the robust aggregate instead of keeping their corrupted row, so a
+  faulted client rejoins the consensus iterate at the next round boundary.
+
+* :class:`RollbackGuard` — **last-known-good rollback**: the train loop
+  snapshots (step, state, key, loss) at healthy round boundaries into a
+  small ring; a non-finite eval loss or a spike beyond
+  ``spike_factor x last-good`` rolls the run back to the newest good
+  snapshot, folds the retry counter into the batch key (and into the fault
+  draws via ``FlatState.retry``), and counts down ``retry_budget`` before
+  failing loudly with :class:`RollbackError`.
+
+Both specs are plain hashable NamedTuples, ride
+:class:`repro.api.Experiment` (``experiment.faults`` /
+``experiment.robustness``), round-trip through JSON and are
+``edit()``-sweepable.  With both absent every trajectory is bit-identical
+to the unguarded stack.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+AGGREGATORS = ("mean", "clip", "trim")
+
+
+class FaultSpec(NamedTuple):
+    """Declarative per-round client fault process (hashable, JSON-friendly).
+
+    Each rate is an independent per-(round, client) Bernoulli probability;
+    draws are pure functions of ``fold_in(fold_in(seed, round), retry)``.
+    A dropped client sends nothing (it is masked out like a non-participant
+    for the round); a corrupted client's *communicated* rows are replaced
+    with NaN; a byzantine client's are scaled by ``byzantine_scale``.
+    ``start_round`` delays injection (clean warmup rounds).
+    """
+    dropout_rate: float = 0.0
+    nan_rate: float = 0.0
+    byzantine_rate: float = 0.0
+    byzantine_scale: float = 10.0
+    seed: int = 0
+    start_round: int = 0
+
+
+class RobustnessSpec(NamedTuple):
+    """Declarative guard policy (hashable, JSON-friendly).
+
+    ``screen`` enables the per-client health mask (non-finite check +
+    update-norm z-score with threshold ``z_thresh`` over the round's
+    participants; ``z_thresh = 0`` keeps the finite check only).
+    ``aggregator`` picks the reduction: ``"mean"`` (participants-only
+    weighted mean — bit-identical to the unguarded mean when every client is
+    healthy), ``"clip"`` (per-client norm clipping to ``clip_factor`` x the
+    healthy-mean norm before the mean; local under ``shard_map``) or
+    ``"trim"`` (coordinate-wise ``trim_frac``-trimmed mean; gather-based on
+    the sharded path — see ``optim.flat``).  ``spike_factor`` /
+    ``retry_budget`` / ``ring`` parameterize :class:`RollbackGuard`.
+    """
+    aggregator: str = "mean"
+    screen: bool = True
+    z_thresh: float = 3.0
+    clip_factor: float = 2.0
+    trim_frac: float = 0.2
+    spike_factor: float = 10.0
+    retry_budget: int = 3
+    ring: int = 2
+
+
+class Faults(NamedTuple):
+    """A compiled :class:`FaultSpec`: ``round_masks(round, retry)`` returns
+    the round's ``(keep, nan, byz)`` — each [M] f32 in {0, 1}, jit-traceable
+    in both indices and independent across (round, retry) pairs."""
+    spec: FaultSpec
+    num_clients: int
+    round_masks: Any
+
+
+def make_faults(spec: FaultSpec | None, num_clients: int) -> Faults | None:
+    """Compile ``spec`` for ``num_clients`` clients (None passes through —
+    the no-faults fast path keeps the unguarded code exact)."""
+    if spec is None:
+        return None
+    for name in ("dropout_rate", "nan_rate", "byzantine_rate"):
+        r = getattr(spec, name)
+        if not 0.0 <= r <= 1.0:
+            raise ValueError(f"FaultSpec.{name}={r} must be in [0, 1]")
+    M = num_clients
+    key0 = jax.random.PRNGKey(spec.seed)
+
+    def round_masks(round_idx, retry=0):
+        k = jax.random.fold_in(key0, jnp.asarray(round_idx, jnp.int32))
+        k = jax.random.fold_in(k, jnp.asarray(retry, jnp.int32))
+        u = jax.random.uniform(k, (3, M))
+        active = (jnp.asarray(round_idx, jnp.int32)
+                  >= spec.start_round).astype(jnp.float32)
+        drop = (u[0] < spec.dropout_rate).astype(jnp.float32) * active
+        keep = 1.0 - drop
+        # a dropped client sends nothing, so it cannot also corrupt; a NaN
+        # client's rows are already garbage, so byzantine scaling is moot
+        nan = (u[1] < spec.nan_rate).astype(jnp.float32) * active * keep
+        byz = ((u[2] < spec.byzantine_rate).astype(jnp.float32)
+               * active * keep * (1.0 - nan))
+        return keep, nan, byz
+
+    return Faults(spec, M, round_masks)
+
+
+def expected_fault_fraction(faults: Faults | None, num_rounds: int = 64,
+                            retry: int = 0) -> dict:
+    """Measured mean fault rates over the first ``num_rounds`` rounds —
+    what the recorded fault process actually injects (benchmarks)."""
+    if faults is None:
+        return {"dropout": 0.0, "nan": 0.0, "byzantine": 0.0}
+    keep, nan, byz = jax.vmap(
+        lambda r: faults.round_masks(r, retry))(jnp.arange(num_rounds))
+    return {"dropout": round(float(jnp.mean(1.0 - keep)), 4),
+            "nan": round(float(jnp.mean(nan)), 4),
+            "byzantine": round(float(jnp.mean(byz)), 4)}
+
+
+# ---------------------------------------------------------------------------
+# Rollback: last-known-good ring + retry budget
+# ---------------------------------------------------------------------------
+
+class RollbackError(RuntimeError):
+    """The run cannot make progress: retry budget exhausted (or no good
+    state to roll back to).  The message names the offending round."""
+
+
+class RollbackGuard:
+    """Host-side rollback driver for the train loop.
+
+    At each healthy round boundary the loop calls :meth:`observe` with the
+    eval loss; the guard either snapshots (returning ``None``) or — on a
+    non-finite loss or a spike beyond ``spike_factor x`` the last good loss
+    — rolls back, returning ``(step, state, key)`` to resume from.  The
+    returned state carries the bumped retry counter (``FlatState.retry``,
+    when the fault engine is attached) and the returned key has the retry
+    folded in, so the retried rounds re-draw both their batches and their
+    fault masks.  Raises :class:`RollbackError` when the budget runs out.
+    """
+
+    def __init__(self, spec: RobustnessSpec):
+        if spec.retry_budget < 0:
+            raise ValueError(f"retry_budget={spec.retry_budget} must be >= 0")
+        self.spec = spec
+        self._good = collections.deque(maxlen=max(int(spec.ring), 1))
+        self.retries = 0            # total rollbacks taken (monotone)
+        self.rollback_steps: list = []   # steps at which we rolled back
+
+    def is_healthy(self, loss: float) -> bool:
+        if not jnp.isfinite(jnp.asarray(loss)):
+            return False
+        if not self._good:
+            return True
+        return float(loss) <= self.spec.spike_factor * self._good[-1][3]
+
+    def observe(self, step: int, state, key, loss: float):
+        """Snapshot a healthy (step, state, key, loss) and return ``None``,
+        or roll back and return the ``(step, state, key)`` to resume from."""
+        if self.is_healthy(loss):
+            self._good.append((int(step), state, key, float(loss)))
+            return None
+        return self._rollback(step, loss)
+
+    def _rollback(self, step: int, loss: float):
+        round_no = self.rollback_steps  # for the error message below
+        if not self._good:
+            raise RollbackError(
+                f"eval loss {loss} at step {step} is unhealthy and no "
+                f"known-good state exists to roll back to (the run was bad "
+                f"from the start) — fix the spec, or relax "
+                f"RobustnessSpec.spike_factor")
+        if self.retries >= self.spec.retry_budget:
+            raise RollbackError(
+                f"eval loss {loss} at step {step} after exhausting the "
+                f"retry budget ({self.spec.retry_budget}; rollbacks at "
+                f"steps {round_no}) — the fault process is overwhelming "
+                f"the guards; raise retry_budget, enable/strengthen the "
+                f"health screen, or lower the fault rate")
+        self.retries += 1
+        self.rollback_steps.append(int(step))
+        good_step, state, key, _ = self._good[-1]
+        # fresh randomness for the retried rounds: fold the retry counter
+        # into the batch key AND the fault draws (via the state's retry slot)
+        key = jax.random.fold_in(key, self.retries)
+        if hasattr(state, "retry") and not isinstance(state.retry, tuple):
+            state = state._replace(
+                retry=jnp.asarray(self.retries, jnp.int32))
+        return good_step, state, key

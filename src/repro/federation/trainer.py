@@ -49,6 +49,15 @@ calls, so registry-built runs are bit-identical to hand-built ones.
 ``comm_every=`` (a ``{section: k}`` dict) overrides per-sequence
 communication cadences on both paths (``sequences.with_comm_every``).
 
+Every factory also accepts ``faults=`` / ``robustness=`` (declarative
+``repro.federation.faults`` specs, fused path only): deterministic per-round
+client failure injection (dropout / NaN / byzantine scaling of what clients
+send) and the guard policy against it — per-client health screening and
+robust aggregation inside the masked reductions, with the rollback policy
+consumed by ``launch.train``.  Both are recorded on ``train_step.faults`` /
+``train_step.robustness``; both ``None`` (the default) leaves every
+trajectory bit-identical to the unguarded stack.
+
 Every factory also accepts ``mesh=`` (a jax ``Mesh`` with ("data", "model")
 axes, or a prebuilt ``optim.flat.ShardCtx`` for the non-default knobs —
 ``use_scatter`` picks the ``psum_scatter``+``all_gather`` all-reduce
@@ -288,6 +297,23 @@ def _aspec(name: str, comm_every: dict | None):
     return seqs.with_comm_every(aspec, comm_every) if comm_every else aspec
 
 
+def _fault_setup(cfg: FederatedConfig, faults, robustness, fuse_storm: bool):
+    """Compile the fault spec (``repro.federation.faults.make_faults``) and
+    pass the robustness policy through.  Fault injection and the robust
+    reductions live on the fused sequence-spec engine only — the unfused
+    tree paths stay byte-for-byte unguarded, so reject them loudly (the
+    same contract as ``_shard_setup``)."""
+    if faults is None and robustness is None:
+        return None, None
+    if not fuse_storm:
+        raise ValueError(
+            "faults=/robustness= require fuse_storm=True — fault injection "
+            "and the robust reductions are features of the fused "
+            "sequence-spec engine")
+    from repro.federation.faults import make_faults
+    return make_faults(faults, cfg.num_clients), robustness
+
+
 def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
     """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
     mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
@@ -310,12 +336,14 @@ def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
 def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
                     init_trees, storm_block, to_state,
                     part: Participation | None = None,
-                    shard=None, overlap: bool = False):
+                    shard=None, overlap: bool = False,
+                    fault=None, robustness=None):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
                               block=storm_block, participation=part,
-                              shard=shard, overlap=overlap)
+                              shard=shard, overlap=overlap,
+                              faults=fault, robustness=robustness)
 
     def init(key):
         return engine.init_state(init_trees(key))
@@ -333,6 +361,8 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.views = views
         fn.participation = part
         fn.shardings = engine.shardings
+        fn.faults = fault
+        fn.robustness = robustness
     return init, train_step
 
 
@@ -351,7 +381,8 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            storm_block: int | None = None,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
-                           comm_every: dict | None = None):
+                           comm_every: dict | None = None,
+                           faults=None, robustness=None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -361,13 +392,15 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
+    fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedBiOTrainState(vt["x"], vt["y"], vt["u"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part, shard, overlap)
+                               storm_block, to_state, part, shard, overlap,
+                               fault, robust)
 
     def init(key):
         tr = init_trees(key)
@@ -410,7 +443,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               storm_block: int | None = None,
                               participation: ParticipationSpec | None = None,
                               mesh=None, overlap: bool = False,
-                              comm_every: dict | None = None):
+                              comm_every: dict | None = None,
+                              faults=None, robustness=None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -423,6 +457,11 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     with real ``psum`` collectives under ``shard_map``; ``overlap`` enables
     the comm/compute overlap schedule (both need ``fuse_storm=True``).
     ``comm_every`` overrides per-section communication cadences.
+    ``faults`` (a ``federation.faults.FaultSpec``) deterministically injects
+    per-round client dropout/NaN/byzantine failures; ``robustness`` (a
+    ``federation.faults.RobustnessSpec``) health-screens senders and picks
+    the robust aggregator (both need ``fuse_storm=True``; recorded on
+    ``train_step.faults`` / ``train_step.robustness``).
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
@@ -433,6 +472,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
+    fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -440,7 +480,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                                        mt["nu"], mt["q"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part, shard, overlap)
+                               storm_block, to_state, part, shard, overlap,
+                               fault, robust)
 
     def init(key):
         tr = init_trees(key)
@@ -509,7 +550,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  storm_block: int | None = None,
                                  participation: ParticipationSpec | None = None,
                                  mesh=None, overlap: bool = False,
-                                 comm_every: dict | None = None):
+                                 comm_every: dict | None = None,
+                                 faults=None, robustness=None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -523,6 +565,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
+    fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -531,7 +574,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     tree_zeros_like(vt["y"]), step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part, shard, overlap)
+                               storm_block, to_state, part, shard, overlap,
+                               fault, robust)
 
     def init(key):
         tr = init_trees(key)
@@ -572,9 +616,11 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     storm_block: int | None = None,
                                     participation: ParticipationSpec | None = None,
                                     mesh=None, overlap: bool = False,
-                                    comm_every: dict | None = None):
+                                    comm_every: dict | None = None,
+                                    faults=None, robustness=None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
-    (the y/ω sequence is PRIVATE)."""
+    (the y/ω sequence is PRIVATE — faults/robustness touch only the sent
+    x/ν rows; private heads are never corrupted or screened)."""
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -584,6 +630,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
+    fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -591,7 +638,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                             mt["nu"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part, shard, overlap)
+                               storm_block, to_state, part, shard, overlap,
+                               fault, robust)
 
     def init(key):
         tr = init_trees(key)
@@ -646,7 +694,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            storm_block: int | None = None,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
-                           comm_every: dict | None = None):
+                           comm_every: dict | None = None,
+                           faults=None, robustness=None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -671,13 +720,15 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
+    fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
             return FedAvgTrainState(vt["params"], mt["mom"], step)
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
-                               storm_block, to_state, part, shard, overlap)
+                               storm_block, to_state, part, shard, overlap,
+                               fault, robust)
 
     def init(key):
         tr = init_trees(key)

@@ -20,18 +20,31 @@ re-specified flags.
 
 Checkpoints land in --ckpt-dir every --ckpt-every rounds (raw train state +
 ``experiment.json``).
+
+Fault tolerance (see ``repro.federation.faults``): with
+``experiment.robustness`` set, the loop snapshots last-known-good states
+and rolls back on a non-finite or spiking eval loss (re-drawing batches and
+fault masks for the retried rounds) before failing loudly; without it a
+non-finite eval loss still fails loudly — diagnostic checkpoint + non-zero
+exit naming the offending round.  ``--max-restarts N`` supervises the run
+in a subprocess and auto-resumes from the latest checkpoint after a crash
+(``--crash-at-step`` injects one for testing).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Experiment, SpecError, build
+from repro.api import Experiment, RollbackError, RollbackGuard, SpecError, \
+    build
 from repro.checkpoint import (checkpoint_metadata, load_checkpoint,
                               load_experiment, save_checkpoint)
 from repro.configs import ARCHS
@@ -156,6 +169,17 @@ def _parser() -> argparse.ArgumentParser:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise the run in a subprocess and auto-resume "
+                         "from the latest --ckpt-dir checkpoint after a "
+                         "crash, up to N times (requires --ckpt-dir)")
+    ap.add_argument("--restart-backoff", type=float, default=1.0,
+                    help="base seconds between restart attempts (doubles "
+                         "each retry)")
+    ap.add_argument("--crash-at-step", type=int, default=0,
+                    help="testing: hard-exit the process after completing "
+                         "this step (fresh runs only — inert on --resume, "
+                         "so a supervised restart runs to completion)")
     return ap
 
 
@@ -236,11 +260,74 @@ def _resolve_experiment(args, overrides: dict) -> tuple[Experiment, int]:
     return apply_overrides(base, overrides), 0
 
 
+def _strip_flag(argv: list, flag: str) -> list:
+    """``argv`` without ``flag`` and its value (``--f v`` or ``--f=v``)."""
+    out, i = [], 0
+    while i < len(argv):
+        if argv[i] == flag:
+            i += 2
+        elif argv[i].startswith(flag + "="):
+            i += 1
+        else:
+            out.append(argv[i])
+            i += 1
+    return out
+
+
+def _supervise(ns, raw_argv: list) -> list:
+    """--max-restarts: run the train loop in a child process, resuming from
+    the latest --ckpt-dir checkpoint after each crash (non-zero exit) until
+    it succeeds or the restart budget runs out."""
+    if not ns.ckpt_dir:
+        raise SystemExit("--max-restarts requires --ckpt-dir (restarts "
+                         "resume from the latest checkpoint)")
+    base = raw_argv
+    for flag in ("--max-restarts", "--restart-backoff"):
+        base = _strip_flag(base, flag)
+    for attempt in range(ns.max_restarts + 1):
+        child = list(base)
+        if attempt:
+            # the crash knob only fires on fresh runs, but strip it anyway —
+            # a retry that crashed before its first checkpoint IS fresh
+            child = _strip_flag(child, "--crash-at-step")
+            if os.path.exists(os.path.join(ns.ckpt_dir, "manifest.json")):
+                child = _strip_flag(child, "--resume")
+                child += ["--resume", ns.ckpt_dir]
+        rc = subprocess.call([sys.executable, "-m", "repro.launch.train",
+                              *child])
+        if rc == 0:
+            return []
+        if attempt < ns.max_restarts:
+            wait = ns.restart_backoff * (2 ** attempt)
+            print(f"run crashed (exit {rc}); restart "
+                  f"{attempt + 1}/{ns.max_restarts} in {wait:.1f}s",
+                  flush=True)
+            time.sleep(wait)
+    raise SystemExit(f"run still crashing after {ns.max_restarts} "
+                     f"restarts (last exit {rc}) — inspect "
+                     f"{ns.ckpt_dir}/diagnostic or the traceback above")
+
+
+def _diagnostic_checkpoint(ns, state, step: int, exp) -> None:
+    """Dump the offending state next to the regular checkpoints so a failed
+    run can be inspected (never overwrites the last good checkpoint)."""
+    if not ns.ckpt_dir:
+        return
+    d = os.path.join(ns.ckpt_dir, "diagnostic")
+    save_checkpoint(d, state, {"step": int(step), "diagnostic": True},
+                    experiment=exp)
+    print(f"diagnostic checkpoint -> {d}", flush=True)
+
+
 def main(argv=None):
     ap = _parser()
     ns = ap.parse_args(argv)
+    if ns.max_restarts > 0:
+        return _supervise(ns, list(argv) if argv is not None
+                          else sys.argv[1:])
     # SUPPRESS-defaulted flags only exist on the namespace when passed
-    driver = {"experiment", "resume", "ckpt_dir", "ckpt_every", "log_every"}
+    driver = {"experiment", "resume", "ckpt_dir", "ckpt_every", "log_every",
+              "max_restarts", "restart_backoff", "crash_at_step"}
     overrides = {k: v for k, v in vars(ns).items() if k not in driver}
     exp, start = _resolve_experiment(ns, overrides)
 
@@ -267,18 +354,28 @@ def main(argv=None):
             detail = f"m={pspec.clients_per_round or M}/{M}"
         print(f"participation: {pspec.sampler} {detail} seed={pspec.seed}")
 
+    guard = (RollbackGuard(exp.robustness) if exp.robustness is not None
+             else None)
     key = jax.random.PRNGKey(exp.schedule.seed)
     if start:
         state = load_checkpoint(ns.resume, jax.eval_shape(run.init, key))
         if run.shardings(state) is not None:
             state = jax.device_put(state, run.shardings(state))
+        md = checkpoint_metadata(ns.resume)
+        if md.get("key") is not None:
+            # the raw key was recorded: exact even after rollbacks folded
+            # retries into it (split-replay could never reconstruct that)
+            key = jnp.asarray(np.asarray(md["key"], np.uint32))
+        else:
+            # pre-fault-tolerance checkpoint: replay the batch-key sequence
+            # up to the resume point (exact for rollback-free runs)
+            for _ in range(start):
+                key, _ = jax.random.split(key)
+        if guard is not None:
+            guard.retries = int(md.get("retries", 0))
         print(f"resumed from {ns.resume} @ step {start}")
     else:
         state = run.init(key)
-    # replay the batch-key sequence up to the resume point so a resumed run
-    # continues the exact uninterrupted trajectory
-    for _ in range(start):
-        key, _ = jax.random.split(key)
 
     jstep = jax.jit(run.step, donate_argnums=(0,))
     n_params = sum(int(np.prod(s.shape)) for s in
@@ -288,21 +385,55 @@ def main(argv=None):
           f"algo={exp.algorithm.name} params={n_params:,}")
     t0 = time.time()
     history = []
-    for t in range(start, exp.schedule.steps):
+    t = start
+    while t < exp.schedule.steps:
         key, sub = jax.random.split(key)
         state, metrics = jstep(state, run.place_batch(run.batch_fn(sub)))
-        if (t + 1) % ns.log_every == 0 or t == start:
+        t += 1
+        if t % ns.log_every == 0 or t == start + 1:
             l = run.eval_fn(state)
-            history.append({"step": t + 1, "val_loss": l,
+            if guard is not None:
+                # host-copied snapshot: the live state's buffers are donated
+                # to the next jstep call, a stored alias would be invalid
+                snap = jax.tree.map(np.array, state)
+                try:
+                    rb = guard.observe(t, snap, key, l)
+                except RollbackError as e:
+                    _diagnostic_checkpoint(ns, state, t, exp)
+                    raise SystemExit(f"round {t}: {e}")
+                if rb is not None:
+                    t, snap, key = rb
+                    state = jax.tree.map(jnp.asarray, snap)
+                    if run.shardings(state) is not None:
+                        state = jax.device_put(state, run.shardings(state))
+                    print(json.dumps(
+                        {"rollback_to": t, "retry": guard.retries,
+                         "bad_loss": l}), flush=True)
+                    continue
+            elif not np.isfinite(l):
+                _diagnostic_checkpoint(ns, state, t, exp)
+                raise SystemExit(
+                    f"non-finite eval loss ({l}) at round {t}: training "
+                    f"diverged — inspect the diagnostic checkpoint, enable "
+                    f"robustness guards (experiment.robustness), or lower "
+                    f"the learning rates")
+            history.append({"step": t, "val_loss": l,
                             "wall_s": round(time.time() - t0, 1)})
             print(json.dumps(history[-1]), flush=True)
-        if ns.ckpt_dir and (t + 1) % ns.ckpt_every == 0:
+        if ns.ckpt_dir and t % ns.ckpt_every == 0:
             # the RAW state (flat buffers included) + the embedded spec:
-            # --resume rebuilds the structure from the spec alone
-            save_checkpoint(ns.ckpt_dir, state,
-                            {"step": t + 1, "arch": run.model_cfg.name},
-                            experiment=exp)
-            print(f"checkpoint @ step {t+1} -> {ns.ckpt_dir}")
+            # --resume rebuilds the structure from the spec alone.  The raw
+            # key + retry count make resume exact across rollbacks.
+            save_checkpoint(
+                ns.ckpt_dir, state,
+                {"step": t, "arch": run.model_cfg.name,
+                 "key": np.asarray(key).tolist(),
+                 "retries": guard.retries if guard is not None else 0},
+                experiment=exp)
+            print(f"checkpoint @ step {t} -> {ns.ckpt_dir}")
+        if ns.crash_at_step and start == 0 and t == ns.crash_at_step:
+            print(f"crash-at-step: hard exit after step {t}", flush=True)
+            os._exit(17)
     assert not any(jnp.isnan(jnp.asarray(h["val_loss"])) for h in history)
     return history
 

@@ -575,6 +575,158 @@ def _bcast_mean_grouped(x, num_groups: int, w=None):
     return jnp.where(col > 0, m, g).reshape(x.shape)
 
 
+class RobustCfg(NamedTuple):
+    """Robust-reduction policy of :func:`client_mean_masked` (the substrate
+    half of ``repro.federation.faults.RobustnessSpec`` — defined here so the
+    substrate stays import-free of the federation layer).
+
+    ``screen`` enables the per-client health mask: a participant is healthy
+    iff its (as-sent) row is all-finite and its update norm sits within
+    ``z_thresh`` standard deviations of the healthy participants' mean norm
+    (``z_thresh <= 0`` keeps the finite check only).  ``aggregator``:
+
+    * ``"mean"`` — participants-only weighted mean over healthy rows (the
+      same ``_weight_col`` arithmetic as the unguarded path, so an
+      all-healthy round reproduces it bit-for-bit);
+    * ``"clip"`` — per-client norm clipping to ``clip_factor`` x the healthy
+      participants' weighted mean norm before the mean (row-local scaling —
+      shard-local under ``shard_map``);
+    * ``"trim"`` — coordinate-wise ``trim_frac``-trimmed mean over healthy
+      participants (an order statistic: weight-agnostic, and gather-based on
+      the sharded path — the one robust reduction that needs whole rows).
+    """
+    aggregator: str = "mean"
+    screen: bool = True
+    z_thresh: float = 3.0
+    clip_factor: float = 2.0
+    trim_frac: float = 0.2
+
+
+def _corrupt_rows(x, corrupt):
+    """Apply the round's fault transform to what clients *send* into one
+    reduction: ``corrupt = (nan, byz, scale)`` with [M] {0,1} masks — byz
+    rows are scaled, nan rows replaced wholesale.  ``where`` selects, so
+    unfaulted rows pass through bit-identical (corrupt=None is identity)."""
+    if corrupt is None:
+        return x
+    nan, byz, scale = corrupt
+    trail = (1,) * (x.ndim - 1)
+    bc = byz.reshape(byz.shape + trail)
+    nc = nan.reshape(nan.shape + trail)
+    x = jnp.where(bc > 0, x * jnp.asarray(scale, x.dtype), x)
+    return jnp.where(nc > 0, jnp.asarray(jnp.nan, x.dtype), x)
+
+
+def _health_mask(x, p, robust: RobustCfg):
+    """Per-client health [M] f32 of one run: participant ∧ all-finite row ∧
+    update-norm z-score within ``z_thresh`` of the finite participants'
+    stats.  Excluded rows are removed with ``where`` BEFORE the norm sums —
+    never by zero weights (0 · NaN = NaN would poison the stats)."""
+    red = tuple(range(1, x.ndim))
+    h = p & jnp.all(jnp.isfinite(x), axis=red)
+    if robust.z_thresh <= 0:
+        return h.astype(jnp.float32)
+    hc = h.reshape(h.shape + (1,) * (x.ndim - 1))
+    sq = jnp.sum(jnp.square(jnp.where(hc, x, 0).astype(jnp.float32)),
+                 axis=red)
+    n = jnp.sqrt(sq)
+    hf = h.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(hf), 1.0)
+    mu = jnp.sum(n * hf) / cnt
+    sd = jnp.sqrt(jnp.sum(jnp.square(n - mu) * hf) / cnt)
+    # relative tolerance: an all-equal-norm round has sd = 0 and must not
+    # screen everyone out over float rounding in |n − mu|
+    tol = robust.z_thresh * sd + 1e-4 * mu + 1e-12
+    return (h & (jnp.abs(n - mu) <= tol)).astype(jnp.float32)
+
+
+def _clip_rows(xh, n, w_eff, clip_factor: float):
+    """Per-client norm clipping of healthy rows to ``clip_factor`` x the
+    healthy participants' weighted mean norm (row-local — no cross-client
+    mixing, so the sharded path applies it before its collective)."""
+    wsum = jnp.maximum(jnp.sum(w_eff), 1e-12)
+    tau = clip_factor * (jnp.sum(n * w_eff) / wsum)
+    scale = jnp.minimum(1.0, tau / jnp.maximum(n, 1e-12))
+    return xh * scale.reshape(scale.shape + (1,) * (xh.ndim - 1)).astype(
+        xh.dtype)
+
+
+def _trim_keep(M: int, nh, trim_frac: float, ndim: int):
+    """(keep mask over sorted positions, trim count k) for a trimmed mean
+    over ``nh`` (traced) healthy rows sorted to the front: positions
+    [k, nh − k) survive, with k clamped so at least one row always does."""
+    k = jnp.minimum(jnp.floor(trim_frac * nh),
+                    jnp.maximum(jnp.floor((nh - 1.0) / 2.0), 0.0))
+    idx = jnp.arange(M, dtype=jnp.float32).reshape((M,) + (1,) * (ndim - 1))
+    return (idx >= k) & (idx < nh - k), k
+
+
+def _trimmed_mean(xh, hf, trim_frac: float):
+    """Coordinate-wise trimmed mean over healthy rows (keepdims row [1, ...]):
+    excluded rows sort to the top as +inf and are never selected."""
+    M = xh.shape[0]
+    hc = hf.reshape(hf.shape + (1,) * (xh.ndim - 1))
+    xs = jnp.sort(jnp.where(hc > 0, xh.astype(jnp.float32), jnp.inf), axis=0)
+    nh = jnp.sum(hf)
+    keep, k = _trim_keep(M, nh, trim_frac, xh.ndim)
+    return (jnp.sum(jnp.where(keep, xs, 0.0), axis=0, keepdims=True)
+            / jnp.maximum(nh - 2.0 * k, 1.0))
+
+
+def _robust_bcast_mean(x0, w, corrupt, robust: RobustCfg | None):
+    """Fault/robustness-aware participant mean of one communicated run.
+
+    The fault transform applies to the reduction *input* — it models what a
+    client sends, so private sections, cadence-skipped rounds and the
+    client's own stored row are never corrupted.  With ``robust=None`` this
+    is the UNGUARDED faulty mean: corrupted rows enter the sum and poison
+    every participant (the failure mode the guards exist for).  With a
+    :class:`RobustCfg`, unhealthy senders are screened out of the chosen
+    aggregate and then *recovered* — they receive the aggregate instead of
+    keeping a corrupted row — while non-participants always pass through
+    their original row; if NO healthy weight remains, every row passes
+    through unchanged (the round is retried by the rollback guard, not
+    zeroed).
+    """
+    x = _corrupt_rows(x0, corrupt)
+    if w is not None:
+        # a zero-weight client SENDS nothing: its faults never reach the
+        # round (0 x NaN would otherwise poison the unguarded sum)
+        sc = (w > 0).reshape(w.shape + (1,) * (x.ndim - 1))
+        x = jnp.where(sc, x, x0)
+    if robust is None:
+        if w is None:
+            return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True),
+                                    x.shape)
+        col = _weight_col(x, w)
+        m = jnp.broadcast_to(jnp.mean(x * col, axis=0, keepdims=True),
+                             x.shape)
+        return jnp.where(col > 0, m, x0)
+    M = x.shape[0]
+    wv = jnp.ones((M,), jnp.float32) if w is None else w
+    p = wv > 0
+    hf = _health_mask(x, p, robust) if robust.screen \
+        else p.astype(jnp.float32)
+    hc = hf.reshape(hf.shape + (1,) * (x.ndim - 1))
+    xh = jnp.where(hc > 0, x, jnp.zeros((), x.dtype))
+    w_eff = wv * hf
+    if robust.aggregator == "trim":
+        m = _trimmed_mean(xh, hf, robust.trim_frac)
+    else:
+        if robust.aggregator == "clip":
+            red = tuple(range(1, x.ndim))
+            n = jnp.sqrt(jnp.sum(jnp.square(xh.astype(jnp.float32)),
+                                 axis=red))
+            xh = _clip_rows(xh, n, w_eff, robust.clip_factor)
+        # same _weight_col + jnp.mean arithmetic as the unguarded path: an
+        # all-healthy round (hf = 1, w_eff = wv bitwise) reproduces it
+        # bit-for-bit
+        m = jnp.mean(xh * _weight_col(x, w_eff), axis=0, keepdims=True)
+    m = jnp.broadcast_to(m.astype(x0.dtype), x0.shape)
+    pc = p.reshape(p.shape + (1,) * (x.ndim - 1))
+    return jnp.where(pc & (jnp.sum(w_eff) > 0), m, x0)
+
+
 def _normalize_weights(spec: FlatSpec, weights):
     n_sections = max(len(spec.sections), 1)
     if isinstance(weights, (tuple, list)):
@@ -612,17 +764,20 @@ def _chunk_len(n: int) -> int:
     return c
 
 
-def _update_run(buf, start: int, stop: int, upd):
+def _update_run(buf, start: int, stop: int, upd, *, chunk: bool = True):
     """Write ``upd(segment)`` back into ``buf`` over the element run
     [start, stop) — a ``dynamic_update_slice``, so under buffer donation the
     reduction happens in place and the tiles outside the run are never
     copied.  On CPU large runs are chunked so each reduce + broadcast stays
     cache-resident (the broadcast re-reads the mean row once per client —
     from L1/L2 instead of RAM), which is what lets the sliced reduction beat
-    the per-leaf tree-map path off-TPU."""
+    the per-leaf tree-map path off-TPU.  ``chunk=False`` forces one whole-run
+    call — required when ``upd`` computes cross-column row statistics (the
+    robust reductions' health norms would otherwise be chunk-local)."""
     nd = buf.ndim
     length = stop - start
-    c = _chunk_len(length) if jax.default_backend() == "cpu" else length
+    c = (_chunk_len(length)
+         if chunk and jax.default_backend() == "cpu" else length)
     if c == length:
         seg = buf[..., start:stop]
         return lax.dynamic_update_slice(buf, upd(seg).astype(buf.dtype),
@@ -639,7 +794,8 @@ def _update_run(buf, start: int, stop: int, upd):
 
 
 def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
-                       weights=None, shard: ShardCtx | None = None):
+                       weights=None, shard: ShardCtx | None = None,
+                       corrupt=None, robust: RobustCfg | None = None):
     """Section-masked client communication over flat [M, N] buffers.
 
     ``modes``: one entry per section (aligned with ``spec.sections``; a
@@ -663,14 +819,29 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
     its local columns with per-shard partial sums and ONE ``lax.psum`` (or
     ``psum_scatter`` + ``all_gather``) over the data axis per communicated
     run; private and non-participant tiles never enter the collective.
+
+    ``corrupt``: optional ``(nan, byz, scale)`` round fault masks ([M] {0,1}
+    arrays + scalar) applied to what clients *send* into each ``"mean"`` run
+    (:func:`_corrupt_rows`).  ``robust``: optional :class:`RobustCfg` —
+    health-screen the senders and reduce with the robust aggregator
+    (:func:`_robust_bcast_mean`).  Both compose with ``"none"`` sections
+    (private state is never corrupted or reduced) but not with ``"group"``
+    runs — the robust reductions are global (enforced upstream by
+    ``Experiment.validate`` / ``sequences.make_engine``).
     """
     n_sections = max(len(spec.sections), 1)
     assert len(modes) == n_sections, (modes, spec.sections)
     assert all(m in ("none", "mean", "group") for m in modes), modes
+    guarded = corrupt is not None or robust is not None
+    if guarded:
+        assert all(m in ("none", "mean") for m in modes), (
+            "corrupt=/robust= do not compose with grouped (hierarchical) "
+            "means", modes)
     w_of_sec = _normalize_weights(spec, weights)
     if shard is not None:
         return _client_mean_masked_sharded(spec, bufs, modes, num_groups,
-                                           w_of_sec, shard)
+                                           w_of_sec, shard,
+                                           corrupt=corrupt, robust=robust)
     out = []
     for grp, buf in zip(spec.groups, bufs):
         assert buf.ndim >= 2, "client_mean_masked needs a leading client axis"
@@ -679,11 +850,19 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
             if mode == "none":
                 continue
             if mode == "mean":
-                upd = functools.partial(lambda s, w: _bcast_mean(s, w), w=w)
+                if guarded:
+                    upd = functools.partial(
+                        lambda s, w: _robust_bcast_mean(s, w, corrupt,
+                                                        robust), w=w)
+                else:
+                    upd = functools.partial(lambda s, w: _bcast_mean(s, w),
+                                            w=w)
             else:
                 upd = functools.partial(
                     lambda s, w: _bcast_mean_grouped(s, num_groups, w), w=w)
-            buf = _update_run(buf, start, stop, upd)
+            # the guarded reduction's health norms span the whole run — the
+            # CPU cache chunking would make them chunk-local
+            buf = _update_run(buf, start, stop, upd, chunk=not guarded)
         out.append(buf)
     return tuple(out)
 
@@ -713,8 +892,83 @@ def _allreduce(x, shard: ShardCtx, groups):
     return lax.psum(x, shard.data_axis, axis_index_groups=groups)
 
 
+def _robust_mean_sharded(seg0, seg, w_l, robust: RobustCfg | None,
+                         shard: ShardCtx, M: int):
+    """The guarded participant mean of one run inside the ``shard_map`` body
+    (the sharded mirror of :func:`_robust_bcast_mean`): per-client row stats
+    (finiteness, norms) are completed with a ``psum`` over the MODEL axis —
+    each device holds a column slice of every local row — screening and
+    aggregation stats with ``psum``s over the DATA axis, clipping stays
+    row-local, and the trimmed mean ``all_gather``s rows over the data axis
+    (the documented gather-based sharding: an order statistic needs whole
+    rows).  ``seg`` is the corrupted (as-sent) local chunk, ``seg0`` the
+    original pass-through rows."""
+    da, ma = shard.data_axis, shard.model_axis
+    wv = (jnp.ones((seg.shape[0],), jnp.float32) if w_l is None else w_l)
+    p = wv > 0
+    if w_l is not None:
+        # a zero-weight client SENDS nothing: its faults never reach the
+        # round (0 x NaN would otherwise poison the unguarded sum)
+        seg = jnp.where(p[:, None], seg, seg0)
+    if robust is None:
+        # unguarded faulty mean: corrupted rows enter the sum (and poison it)
+        wsum = lax.psum(jnp.sum(wv), da)
+        scale = jnp.where(wsum > 0, M / wsum, 0.0)
+        col = (wv * scale).astype(seg.dtype)[:, None]
+        tot = _allreduce(jnp.sum(seg * col, axis=0), shard, None)
+        m = jnp.broadcast_to((tot / M)[None].astype(seg0.dtype), seg0.shape)
+        return m if w_l is None else jnp.where(col > 0, m, seg0)
+    if robust.screen:
+        nonfinite = lax.psum(
+            jnp.sum(~jnp.isfinite(seg), axis=1).astype(jnp.float32), ma)
+        h = p & (nonfinite == 0)
+    else:
+        h = p
+    sq = lax.psum(jnp.sum(jnp.square(
+        jnp.where(h[:, None], seg, 0).astype(jnp.float32)), axis=1), ma)
+    n = jnp.sqrt(sq)
+    hf = h.astype(jnp.float32)
+    if robust.screen and robust.z_thresh > 0:
+        cnt = jnp.maximum(lax.psum(jnp.sum(hf), da), 1.0)
+        mu = lax.psum(jnp.sum(n * hf), da) / cnt
+        sd = jnp.sqrt(lax.psum(jnp.sum(jnp.square(n - mu) * hf), da) / cnt)
+        tol = robust.z_thresh * sd + 1e-4 * mu + 1e-12
+        h = h & (jnp.abs(n - mu) <= tol)
+        hf = h.astype(jnp.float32)
+    w_eff = wv * hf
+    wsum_eff = lax.psum(jnp.sum(w_eff), da)
+    if robust.aggregator == "trim":
+        xs = jnp.sort(lax.all_gather(
+            jnp.where(h[:, None], seg.astype(jnp.float32), jnp.inf),
+            da, axis=0, tiled=True), axis=0)
+        nh = lax.psum(jnp.sum(hf), da)
+        keep, k = _trim_keep(M, nh, robust.trim_frac, 2)
+        m = (jnp.sum(jnp.where(keep, xs, 0.0), axis=0, keepdims=True)
+             / jnp.maximum(nh - 2.0 * k, 1.0))
+    else:
+        xh = jnp.where(h[:, None], seg, jnp.zeros((), seg.dtype))
+        if robust.aggregator == "clip":
+            tau = robust.clip_factor * (
+                lax.psum(jnp.sum(n * w_eff), da)
+                / jnp.maximum(wsum_eff, 1e-12))
+            sc = jnp.minimum(1.0, tau / jnp.maximum(n, 1e-12))
+            xh = xh * sc[:, None].astype(xh.dtype)
+        scale = jnp.where(wsum_eff > 0, M / wsum_eff, 0.0)
+        col = (w_eff * scale).astype(seg.dtype)[:, None]
+        tot = _allreduce(jnp.sum(xh * col, axis=0), shard, None)
+        m = (tot / M)[None]
+    m = jnp.broadcast_to(m.astype(seg0.dtype), seg0.shape)
+    return jnp.where(p[:, None] & (wsum_eff > 0), m, seg0)
+
+
 def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
-                                w_of_sec, shard: ShardCtx):
+                                w_of_sec, shard: ShardCtx,
+                                corrupt=None, robust: RobustCfg | None = None):
+    guarded = corrupt is not None or robust is not None
+    # the fault masks ride the shard_map as [M]-over-"data" operands, like
+    # the participation weights
+    cops = () if corrupt is None else (corrupt[0], corrupt[1])
+    cscale = None if corrupt is None else corrupt[2]
     out = []
     for grp, buf in zip(spec.groups, bufs):
         _check_shard(spec, shard, buf)
@@ -743,11 +997,21 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
                 ws.append(w)
                 w_idx.append(len(ws) - 1)
 
-        def body(b, *wloc, runs=runs, w_idx=w_idx, groups_idx=groups_idx):
+        def body(b, *ops, runs=runs, w_idx=w_idx, groups_idx=groups_idx):
+            wloc, cloc = ops[:len(ws)], ops[len(ws):]
             for (mode, _, a, stop), wi in zip(runs, w_idx):
                 if mode == "none":
                     continue        # private tiles never enter the collective
                 seg = b[:, a:stop]
+                if guarded and mode == "mean":
+                    corr = ((cloc[0], cloc[1], cscale) if cloc else None)
+                    upd = _robust_mean_sharded(
+                        seg, _corrupt_rows(seg, corr),
+                        wloc[wi] if wi is not None else None,
+                        robust, shard, M)
+                    b = lax.dynamic_update_slice(b, upd.astype(b.dtype),
+                                                 (0, a))
+                    continue
                 gidx = groups_idx if mode == "group" else None
                 denom = M // num_groups if mode == "group" else M
                 if wi is None:
@@ -768,6 +1032,6 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
         pb = shard.buffer_spec
         pw = PartitionSpec(shard.data_axis)
         out.append(shard_map(body, mesh=shard.mesh,
-                             in_specs=(pb,) + (pw,) * len(ws),
-                             out_specs=pb, check_rep=False)(buf, *ws))
+                             in_specs=(pb,) + (pw,) * (len(ws) + len(cops)),
+                             out_specs=pb, check_rep=False)(buf, *ws, *cops))
     return tuple(out)

@@ -251,7 +251,8 @@ def comm_tree(cfg, step, tree, policy: str, *, weights=None,
 
 
 def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
-                 weights=None, comm_every=None, shard=None):
+                 weights=None, comm_every=None, shard=None,
+                 corrupt=None, robust=None):
     """Apply per-section policies to flat [M, N] buffers — one masked
     (sliced) reduction per communicated section run, private sections
     bit-identical (``flat.client_mean_masked``).
@@ -262,6 +263,10 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
     k-th comm round; sections sharing a cadence share one guarded reduction.
     ``shard``: a :class:`flat.ShardCtx` — the reductions run under
     ``shard_map`` as true ``psum``/``psum_scatter`` collectives over "data".
+    ``corrupt`` / ``robust``: the round's fault transform ((nan, byz, scale)
+    masks) and the :class:`flat.RobustCfg` guard policy, forwarded into
+    every communicated reduction — faults touch only what is actually sent
+    (cadence-skipped and private sections stay clean by construction).
     """
     assert all(p in POLICIES for p in policies), policies
     n = len(policies)
@@ -289,9 +294,13 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
                 due,
                 lambda b, mc=modes_comm, wc=w_c:
                     flat.client_mean_masked(spec, b, mc, weights=wc,
-                                            shard=shard),
+                                            shard=shard, corrupt=corrupt,
+                                            robust=robust),
                 lambda b: b, bufs)
             continue
+        assert corrupt is None and robust is None, (
+            "corrupt/robust do not compose with the hierarchical grouped "
+            "mean (hierarchy_period > 0) — enforced by make_engine")
         # pod-local rounds: HIERARCHICAL sections take the grouped mean
         # while AVERAGED sections still take the full mean
         modes_local = tuple(
@@ -324,12 +333,17 @@ class FlatState(NamedTuple):
     (``mom`` is the empty tuple for momentum-less specs).  ``stale`` carries
     the per-client staleness counters [M] int32 (rounds missed since last
     participation) when a participation engine is attached — the empty tuple
-    otherwise (full participation).
+    otherwise (full participation).  ``retry`` carries the rollback retry
+    counter (scalar int32) when a fault engine is attached — folded into the
+    fault draws so a rolled-back round re-samples its failures — and the
+    empty tuple otherwise (zero pytree leaves: pre-fault checkpoints and jit
+    caches keep their exact structure).
     """
     vars: Any
     mom: Any
     step: jnp.ndarray
     stale: Any = ()
+    retry: Any = ()
 
 
 class Engine(NamedTuple):
@@ -390,7 +404,8 @@ def advance_stale(cfg, step, mask, stale):
 def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 block: int | None = None, participation=None,
                 shard: flat.ShardCtx | None = None,
-                overlap: bool = False) -> Engine:
+                overlap: bool = False, faults=None,
+                robustness=None) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -411,7 +426,34 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
 
     ``shard`` / ``overlap``: mesh partitioning of the substrate and the
     comm/compute overlap schedule — see the module docstring.
+
+    ``faults``: a compiled :class:`~repro.federation.faults.Faults` — every
+    step derives the round's (keep, nan, byz) client masks from the step
+    counter and the :class:`FlatState` retry slot (resume- and retry-exact):
+    dropped clients compose into the participation mask/weights (frozen
+    bit-exact, averaged around), and the corruption transform applies to
+    what surviving clients *send* into each reduction.  ``robustness``: any
+    object carrying the :class:`flat.RobustCfg` fields (e.g. a
+    ``federation.faults.RobustnessSpec``) — health-screens senders and
+    selects the robust aggregator inside those reductions.  Both are duck-
+    typed so this module stays import-free of the federation layer; both
+    ``None`` (the default) leaves every trajectory bit-identical.
     """
+    rcfg = None
+    if robustness is not None:
+        rcfg = flat.RobustCfg(
+            aggregator=robustness.aggregator, screen=robustness.screen,
+            z_thresh=robustness.z_thresh, clip_factor=robustness.clip_factor,
+            trim_frac=robustness.trim_frac)
+        if rcfg.aggregator not in ("mean", "clip", "trim"):
+            raise ValueError(f"unknown robust aggregator "
+                             f"{rcfg.aggregator!r} (mean|clip|trim)")
+    if (faults is not None or rcfg is not None) and cfg.hierarchy_period > 0:
+        raise ValueError(
+            "faults=/robustness= do not compose with the hierarchical "
+            "grouped mean (cfg.hierarchy_period > 0) — the robust "
+            "reductions and the fault model are global; set "
+            "hierarchy_period=0")
     sections = aspec.sections
     spec = flat.make_spec({s: templates[s] for s in sections},
                           sections=sections,
@@ -429,14 +471,26 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                  batch_dims=1, dtype=jnp.float32)
 
     def _round_ctx(state: FlatState):
-        """(mask, per-section comm weights) of the round ``state.step``
-        belongs to — pure in the step counter, so resume is bit-exact."""
+        """(mask, per-section comm weights, corrupt transform) of the round
+        ``state.step`` belongs to — pure in the step counter (and the retry
+        counter for the fault draws), so resume and rollback-retry are
+        bit-exact."""
         if part is None:
-            return None, None
-        mask, w = part.round_weights(state.step // cfg.local_steps)
-        if not discounted:
-            return mask, w          # one shared array → runs merge in comm
-        return mask, staleness_weights(w, state.stale, stale_alpha)
+            mask, w = None, None
+        else:
+            mask, w = part.round_weights(state.step // cfg.local_steps)
+        corrupt = None
+        if faults is not None:
+            keep, nan, byz = faults.round_masks(
+                state.step // cfg.local_steps, state.retry)
+            # a dropped client behaves exactly like a non-participant:
+            # frozen bit-exact in the launches, averaged around in comm
+            mask = keep if mask is None else mask * keep
+            w = keep if w is None else w * keep
+            corrupt = (nan, byz, faults.spec.byzantine_scale)
+        if w is not None and discounted:
+            w = staleness_weights(w, state.stale, stale_alpha)
+        return mask, w, corrupt
 
     def _next_stale(state: FlatState, mask):
         if part is None:
@@ -462,7 +516,8 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             return state        # abstract init (eval_shape) — caller places
         return jax.device_put(state, state_shardings(state))
 
-    def init_state(var_trees, mom_trees=None, step=None, stale=None):
+    def init_state(var_trees, mom_trees=None, step=None, stale=None,
+                   retry=None):
         vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
                                    batch_dims=1)
         if not has_mom:
@@ -484,14 +539,20 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             stale_b = jnp.zeros((part.num_clients,), jnp.int32)
         else:
             stale_b = stale
+        if faults is None:
+            retry_b = ()
+        elif retry is None:
+            retry_b = jnp.zeros((), jnp.int32)
+        else:
+            retry_b = jnp.asarray(retry, jnp.int32)
         return _placed(FlatState(
             vars_b, mom_b,
             jnp.zeros((), jnp.int32) if step is None else step,
-            stale_b))
+            stale_b, retry_b))
 
     def _storm_step(state: FlatState, batch) -> FlatState:
         t = state.step
-        mask, wts = _round_ctx(state)
+        mask, wts, corrupt = _round_ctx(state)
         a = alpha_schedule(cfg, t)
         lrs = tuple(getattr(cfg, q.lr) * a for q in aspec.sequences)
         decays = tuple(1.0 - getattr(cfg, q.decay) * a * a
@@ -509,7 +570,8 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                                 shard=shard)
         # issue the variable-section reduction ...
         vars_c = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence, shard=shard)
+                              weights=wts, comm_every=cadence, shard=shard,
+                              corrupt=corrupt, robust=rcfg)
         # 4) ... run the new-iterate oracle, same batch; the STORM correction
         #    is one add.  overlap=True evaluates the oracle at the LOCAL
         #    (pre-reduction) iterate: g_new then feeds only the correction
@@ -521,12 +583,14 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 spec, vars_b if overlap else vars_c), batch)), mask)
         mom_b = flat.buffers_add(mom_b, g_new)
         mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                             weights=wts, comm_every=cadence, shard=shard)
-        return FlatState(vars_c, mom_b, t + 1, _next_stale(state, mask))
+                             weights=wts, comm_every=cadence, shard=shard,
+                             corrupt=corrupt, robust=rcfg)
+        return state._replace(vars=vars_c, mom=mom_b, step=t + 1,
+                              stale=_next_stale(state, mask))
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
-        mask, wts = _round_ctx(state)
+        mask, wts, corrupt = _round_ctx(state)
         lrs = tuple(getattr(cfg, q.lr) for q in aspec.sequences)
         g = flat.mask_buffers(
             _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
@@ -537,15 +601,18 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                                    state.mom, g, lrs, betas,
                                                    mask=mask, shard=shard)
             mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                                 weights=wts, comm_every=cadence, shard=shard)
+                                 weights=wts, comm_every=cadence, shard=shard,
+                                 corrupt=corrupt, robust=rcfg)
         else:
             # momentum-less: the plain-SGD launch (no dead momentum stream)
             vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask,
                                    shard=shard)
             mom_b = ()
         vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence, shard=shard)
-        return FlatState(vars_b, mom_b, t + 1, _next_stale(state, mask))
+                              weights=wts, comm_every=cadence, shard=shard,
+                              corrupt=corrupt, robust=rcfg)
+        return state._replace(vars=vars_b, mom=mom_b, step=t + 1,
+                              stale=_next_stale(state, mask))
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
 

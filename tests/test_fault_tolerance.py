@@ -1,0 +1,587 @@
+"""Fault-tolerant rounds (repro.federation.faults + the guarded substrate):
+deterministic/resumable fault draws with retry re-draws, health-masked
+robust aggregation on the flat substrate, guards-off bit-identity, the
+guarded-vs-unguarded divergence claim, the rollback guard, declarative
+spec round-trips, atomic checkpoint writes, and crash auto-resume."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AlgorithmSpec, Experiment, ProblemSpec, ScheduleSpec,
+                       SpecError)
+from repro.config import FederatedConfig
+from repro.configs import ARCHS
+from repro.data import make_fed_batch_fn
+from repro.federation.faults import (FaultSpec, RobustnessSpec,
+                                     RollbackError, RollbackGuard,
+                                     expected_fault_fraction, make_faults)
+from repro.federation.trainer import make_fedbioacc_train_step
+from repro.models import build_model
+from repro.optim import flat
+
+
+# ---------------------------------------------------------------------------
+# fault draws: determinism, resume, retry re-draw
+# ---------------------------------------------------------------------------
+
+def _masks(f, r, retry=0):
+    return tuple(np.asarray(m) for m in f.round_masks(jnp.int32(r), retry))
+
+
+def test_fault_masks_deterministic_and_resumable():
+    """Same (seed, round, retry) ⇒ same masks across independent engines
+    and regardless of evaluation order (resume safety), incl. under jit."""
+    spec = FaultSpec(dropout_rate=0.3, nan_rate=0.3, byzantine_rate=0.3,
+                     seed=5)
+    f1, f2 = make_faults(spec, 8), make_faults(spec, 8)
+    seq1 = [_masks(f1, r) for r in range(10)]
+    for r in (0, 4, 9):                       # f2 jumps straight to round r
+        for a, b in zip(seq1[r], _masks(f2, r)):
+            np.testing.assert_array_equal(a, b)
+    jm = jax.jit(lambda r: f1.round_masks(r))
+    for a, b in zip(seq1[3], tuple(np.asarray(m) for m in jm(jnp.int32(3)))):
+        np.testing.assert_array_equal(a, b)
+    # different seed ⇒ different process
+    f3 = make_faults(spec._replace(seed=6), 8)
+    assert any(not np.array_equal(a, b)
+               for r in range(10) for a, b in zip(seq1[r], _masks(f3, r)))
+
+
+def test_fault_masks_retry_redraws():
+    """A retried round re-draws its faults — fold_in(round, retry) — while
+    retry=0 reproduces the original draw."""
+    f = make_faults(FaultSpec(nan_rate=0.5, seed=0), 16)
+    base = _masks(f, 2, retry=0)
+    again = _masks(f, 2, retry=0)
+    redraw = [_masks(f, 2, retry=k) for k in (1, 2)]
+    for a, b in zip(base, again):
+        np.testing.assert_array_equal(a, b)
+    assert any(not np.array_equal(base[1], rd[1]) for rd in redraw)
+
+
+def test_fault_mask_exclusivity_and_start_round():
+    """Dropped clients never also corrupt; NaN precludes byzantine; rounds
+    before start_round are clean."""
+    spec = FaultSpec(dropout_rate=0.5, nan_rate=0.9, byzantine_rate=0.9,
+                     seed=1, start_round=3)
+    f = make_faults(spec, 32)
+    for r in range(3):
+        keep, nan, byz = _masks(f, r)
+        np.testing.assert_array_equal(keep, np.ones(32))
+        assert nan.sum() == 0 and byz.sum() == 0
+    keep, nan, byz = _masks(f, 5)
+    assert (1 - keep).sum() > 0 and nan.sum() > 0 and byz.sum() > 0
+    assert np.all(nan * (1 - keep) == 0)      # dropped ⇒ sends nothing
+    assert np.all(byz * (1 - keep) == 0)
+    assert np.all(byz * nan == 0)             # NaN rows aren't also scaled
+
+
+def test_fault_spec_validation_and_fraction():
+    with pytest.raises(ValueError, match="nan_rate"):
+        make_faults(FaultSpec(nan_rate=1.5), 4)
+    with pytest.raises(ValueError, match="dropout_rate"):
+        make_faults(FaultSpec(dropout_rate=-0.1), 4)
+    assert make_faults(None, 4) is None
+    frac = expected_fault_fraction(make_faults(FaultSpec(nan_rate=0.3), 16),
+                                   num_rounds=128)
+    assert frac["nan"] == pytest.approx(0.3, abs=0.06)
+    assert frac["dropout"] == 0.0
+    assert expected_fault_fraction(None) == {"dropout": 0.0, "nan": 0.0,
+                                             "byzantine": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation on the flat substrate
+# ---------------------------------------------------------------------------
+
+def _flat_setup(M=4, dtype=jnp.float32):
+    tree = {"x": jnp.zeros((6,), dtype), "y": jnp.zeros((3,), dtype)}
+    spec = flat.make_spec(jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), tree),
+        sections=("x", "y"), block=8)
+    key = jax.random.PRNGKey(0)
+    btree = {s: jax.random.normal(jax.random.fold_in(key, i),
+                                  (M,) + tree[s].shape).astype(dtype)
+             for i, s in enumerate(tree)}
+    return spec, flat.flatten_tree(spec, btree, batch_dims=1)
+
+
+def _no_fault(M):
+    z = jnp.zeros((M,), jnp.float32)
+    return (z, z, 10.0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_all_healthy_robust_mean_bitwise_identical(dtype):
+    """With zero fault masks and the "mean" aggregator the guarded
+    reduction must reproduce the unguarded client mean BIT-for-bit — the
+    robustness layer is a strict generalisation, not a numerical fork."""
+    spec, bufs = _flat_setup(4, dtype)
+    plain = flat.client_mean_masked(spec, bufs, ("mean", "mean"))
+    rob = flat.RobustCfg(aggregator="mean", screen=True, z_thresh=3.0)
+    guard = flat.client_mean_masked(spec, bufs, ("mean", "mean"),
+                                    corrupt=_no_fault(4), robust=rob)
+    unguard = flat.client_mean_masked(spec, bufs, ("mean", "mean"),
+                                      corrupt=_no_fault(4), robust=None)
+    for a, b, c in zip(plain, guard, unguard):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(c).view(np.uint8))
+
+
+def test_nan_sender_screened_and_recovered():
+    """A NaN sender is excluded from the healthy mean, every participant
+    (including the faulty one — recovery) receives the finite aggregate,
+    and without guards the same fault poisons all participants."""
+    spec, bufs = _flat_setup(4)
+    nan = jnp.array([0.0, 1.0, 0.0, 0.0])
+    corrupt = (nan, jnp.zeros(4), 10.0)
+    rob = flat.RobustCfg(aggregator="mean")
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                  corrupt=corrupt, robust=rob)
+    want = (bufs[0][0, :8] + bufs[0][2, :8] + bufs[0][3, :8]) / 3.0
+    for m in range(4):                        # all rows get the healthy mean
+        np.testing.assert_allclose(np.asarray(out[0][m, :8]),
+                                   np.asarray(want), rtol=1e-6)
+    # private y section untouched (the fault models what is SENT)
+    np.testing.assert_array_equal(np.asarray(out[0][:, 8:]),
+                                  np.asarray(bufs[0][:, 8:]))
+    bad = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                  corrupt=corrupt, robust=None)
+    assert not bool(jnp.all(jnp.isfinite(bad[0][:, :8])))
+
+
+def test_byzantine_sender_z_screened():
+    """A wildly scaled row trips the update-norm z-score screen even though
+    it is perfectly finite."""
+    spec, bufs = _flat_setup(8)
+    byz = jnp.zeros(8).at[3].set(1.0)
+    corrupt = (jnp.zeros(8), byz, 1e4)
+    rob = flat.RobustCfg(aggregator="mean", z_thresh=2.0)
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                  corrupt=corrupt, robust=rob)
+    honest = np.asarray(jnp.mean(jnp.delete(bufs[0][:, :8], 3, axis=0),
+                                 axis=0) * 8.0 / 7.0)
+    # aggregate ≈ honest mean, nowhere near the 1e4-scaled row's pull
+    np.testing.assert_allclose(np.asarray(out[0][0, :8]),
+                               honest * 7.0 / 8.0, rtol=1e-5)
+    assert float(jnp.max(jnp.abs(out[0]))) < 100.0
+
+
+def test_clip_bounds_byzantine_pull():
+    """Norm clipping bounds every row's contribution to clip_factor x the
+    mean update norm.  With the screen OFF the outlier inflates the
+    reference norm itself (tau ≈ clip_factor x scale/M here), so clipping
+    alone shrinks but cannot remove the pull; composed with the screen the
+    outlier is excluded from tau and the aggregate matches the honest mean."""
+    spec, bufs = _flat_setup(8)
+    byz = jnp.zeros(8).at[1].set(1.0)
+    corrupt = (jnp.zeros(8), byz, 1e4)
+    unclipped = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                        corrupt=corrupt, robust=None)
+    rob = flat.RobustCfg(aggregator="clip", screen=False, clip_factor=2.0)
+    clipped = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                      corrupt=corrupt, robust=rob)
+    assert (float(jnp.max(jnp.abs(clipped[0][:, :8])))
+            < 0.6 * float(jnp.max(jnp.abs(unclipped[0][:, :8]))))
+    screened = flat.client_mean_masked(
+        spec, bufs, ("mean", "none"), corrupt=corrupt,
+        robust=rob._replace(screen=True, z_thresh=2.0))
+    honest = np.asarray(jnp.mean(jnp.delete(bufs[0][:, :8], 1, axis=0),
+                                 axis=0))
+    np.testing.assert_allclose(np.asarray(screened[0][0, :8]), honest,
+                               rtol=1e-4)
+
+
+def test_trimmed_mean_drops_outlier_coordinates():
+    """The coordinate-wise trimmed mean excludes the extreme row outright
+    (screen off — trimming alone must cope)."""
+    M = 5
+    spec, bufs = _flat_setup(M)
+    byz = jnp.zeros(M).at[2].set(1.0)
+    corrupt = (jnp.zeros(M), byz, 1e4)
+    rob = flat.RobustCfg(aggregator="trim", screen=False, trim_frac=0.2)
+    out = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                  corrupt=corrupt, robust=rob)
+    assert float(jnp.max(jnp.abs(out[0][:, :8]))) < 100.0
+    # all-healthy trim on symmetric data stays near the plain mean
+    plain = flat.client_mean_masked(spec, bufs, ("mean", "none"))
+    out2 = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                   corrupt=_no_fault(M), robust=rob)
+    assert (float(jnp.max(jnp.abs(out2[0] - plain[0])))
+            < float(jnp.max(jnp.abs(plain[0]))))
+
+
+def test_all_unhealthy_round_passes_through():
+    """If every participant is screened out the round aggregates nothing:
+    all rows pass through bit-identically (the rollback guard owns
+    recovery, not the reduction)."""
+    spec, bufs = _flat_setup(4)
+    corrupt = (jnp.ones(4), jnp.zeros(4), 10.0)   # every sender NaN
+    rob = flat.RobustCfg(aggregator="mean")
+    out = flat.client_mean_masked(spec, bufs, ("mean", "mean"),
+                                  corrupt=corrupt, robust=rob)
+    for a, b in zip(out, bufs):
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                      np.asarray(b).view(np.uint8))
+
+
+def test_nonparticipants_never_touched_by_faults():
+    """A faulty NON-participant (zero weight) cannot poison the round and
+    keeps its own row bit-identically."""
+    spec, bufs = _flat_setup(4)
+    w = jnp.array([1.0, 0.0, 1.0, 1.0])
+    nan = jnp.array([0.0, 1.0, 0.0, 0.0])     # the absent client is faulty
+    corrupt = (nan, jnp.zeros(4), 10.0)
+    for rob in (None, flat.RobustCfg(aggregator="mean")):
+        out = flat.client_mean_masked(spec, bufs, ("mean", "none"),
+                                      weights=w, corrupt=corrupt, robust=rob)
+        assert bool(jnp.all(jnp.isfinite(out[0])))
+        np.testing.assert_array_equal(np.asarray(out[0][1]).view(np.uint8),
+                                      np.asarray(bufs[0][1]).view(np.uint8))
+
+
+def test_guarded_rejects_grouped_means():
+    spec, bufs = _flat_setup(4)
+    with pytest.raises(AssertionError):
+        flat.client_mean_masked(spec, bufs, ("group", "none"), num_groups=2,
+                                corrupt=_no_fault(4),
+                                robust=flat.RobustCfg())
+
+
+# ---------------------------------------------------------------------------
+# model-scale: guards-off bit-identity, divergence, rollback machinery
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["granite-8b"].reduced()
+    model = build_model(cfg, dtype=jnp.float32)
+    fed = FederatedConfig(num_clients=4, local_steps=2, lr_x=0.05,
+                          lr_y=0.05, lr_u=0.05)
+    batch_fn = make_fed_batch_fn(cfg, num_clients=4, per_client=1,
+                                 seq_len=16)
+    return cfg, model, fed, batch_fn
+
+
+def _run(model, fed, batch_fn, steps=8, **kw):
+    init, step = make_fedbioacc_train_step(model, fed, n_micro=1,
+                                           remat=False, fuse_storm=True,
+                                           storm_block=128, **kw)
+    state = init(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    key = jax.random.PRNGKey(1)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        state, _ = jstep(state, batch_fn(sub))
+    return state, step
+
+
+def _val_loss(model, batch_fn, step, state):
+    s = step.views(state)
+    p = {"body": jax.tree.map(lambda v: v[0], s.x),
+         "head": jax.tree.map(lambda v: v[0], s.y)}
+    b = jax.tree.map(lambda v: v[0], batch_fn(jax.random.PRNGKey(99)))
+    return float(model.loss(p, b["val"])[0])
+
+
+def test_guards_off_bit_identity_and_divergence_claim(setup):
+    """The PR's acceptance claim, end to end on a real model: (a) attaching
+    a zero-rate fault process and/or the "mean" robust aggregator leaves
+    the fused trajectory BIT-identical; (b) under NaN injection the
+    unguarded run demonstrably diverges while the guarded run stays finite
+    and lands within 2x of the clean run's final loss."""
+    cfg, model, fed, batch_fn = setup
+    clean, cstep = _run(model, fed, batch_fn)
+    for kw in ({"faults": FaultSpec()},
+               {"robustness": RobustnessSpec(aggregator="mean")},
+               {"faults": FaultSpec(),
+                "robustness": RobustnessSpec(aggregator="mean")}):
+        got, _ = _run(model, fed, batch_fn, **kw)
+        for a, b in zip(clean.vars, got.vars):
+            np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                          np.asarray(b).view(np.uint8))
+        for a, b in zip(clean.mom, got.mom):
+            np.testing.assert_array_equal(np.asarray(a).view(np.uint8),
+                                          np.asarray(b).view(np.uint8))
+    faulty = FaultSpec(nan_rate=0.4, seed=2)
+    bad, _ = _run(model, fed, batch_fn, faults=faulty)
+    assert not all(bool(jnp.all(jnp.isfinite(b))) for b in bad.vars), \
+        "unguarded NaN injection must poison the trajectory"
+    good, gstep = _run(model, fed, batch_fn, faults=faulty,
+                       robustness=RobustnessSpec(aggregator="clip"))
+    assert all(bool(jnp.all(jnp.isfinite(b))) for b in good.vars)
+    l_clean = _val_loss(model, batch_fn, cstep, clean)
+    l_good = _val_loss(model, batch_fn, gstep, good)
+    assert np.isfinite(l_good) and l_good <= 2.0 * l_clean, (l_good, l_clean)
+
+
+def test_faults_require_fused_engine(setup):
+    cfg, model, fed, batch_fn = setup
+    with pytest.raises(ValueError, match="fuse_storm"):
+        make_fedbioacc_train_step(model, fed, n_micro=1, remat=False,
+                                  faults=FaultSpec(nan_rate=0.1))
+    with pytest.raises(ValueError, match="hierarch"):
+        make_fedbioacc_train_step(
+            model, dataclasses.replace(fed, hierarchy_period=2),
+            n_micro=1, remat=False,
+            fuse_storm=True, storm_block=128,
+            robustness=RobustnessSpec(aggregator="clip"))
+
+
+def test_rollback_guard_exhausts_budget_on_persistent_faults(setup):
+    """Full rollback machinery on a real engine: nan_rate=1.0 from round 1
+    — the guard snapshots the clean round, rolls back on the NaN loss
+    (bumping the retry slot so fault masks re-draw), and fails loudly with
+    RollbackError once the budget is spent."""
+    cfg, model, fed, batch_fn = setup
+    init, step = make_fedbioacc_train_step(
+        model, fed, n_micro=1, remat=False, fuse_storm=True, storm_block=128,
+        faults=FaultSpec(nan_rate=1.0, seed=0, start_round=1),
+        robustness=RobustnessSpec(aggregator="mean", screen=False,
+                                  retry_budget=2, ring=2))
+    # screen=False: the engine aggregates the NaNs (the guard must catch it)
+    guard = RollbackGuard(RobustnessSpec(retry_budget=2, ring=2))
+    state = init(jax.random.PRNGKey(0))
+    jstep = jax.jit(step)
+    key = jax.random.PRNGKey(1)
+    t = 0
+    with pytest.raises(RollbackError, match="retry budget"):
+        while t < 8:
+            key, sub = jax.random.split(key)
+            state, _ = jstep(state, batch_fn(sub))
+            t += 1
+            loss = _val_loss(model, batch_fn, step, state)
+            rb = guard.observe(t, state, key, loss)
+            if rb is not None:
+                t, state, key = rb
+    assert guard.retries == 2
+    assert len(guard.rollback_steps) == 2
+    assert int(state.retry) >= 1              # fault draws were re-keyed
+
+
+# ---------------------------------------------------------------------------
+# RollbackGuard unit semantics (no model)
+# ---------------------------------------------------------------------------
+
+class _Toy:
+    def __init__(self, v, retry=jnp.zeros((), jnp.int32)):
+        self.v, self.retry = v, retry
+
+    def _replace(self, retry):
+        return _Toy(self.v, retry)
+
+
+def test_rollback_guard_snapshot_and_rollback():
+    g = RollbackGuard(RobustnessSpec(spike_factor=10.0, retry_budget=3,
+                                     ring=2))
+    k0 = jax.random.PRNGKey(0)
+    assert g.observe(1, _Toy(1), k0, 5.0) is None
+    assert g.observe(2, _Toy(2), k0, 6.0) is None
+    step, state, key = g.observe(3, _Toy(3), k0, float("nan"))
+    assert step == 2 and state.v == 2 and g.retries == 1
+    assert int(state.retry) == 1              # fault re-draw keyed
+    assert not np.array_equal(np.asarray(key), np.asarray(k0))
+    # a spike (not just NaN) also rolls back; within-factor losses don't
+    assert g.observe(3, _Toy(3), k0, 6.5) is None
+    step, _, _ = g.observe(4, _Toy(4), k0, 100.0)
+    assert step == 3 and g.retries == 2
+    # states without a retry slot (tuple sentinel) pass through untouched
+    class _Plain:
+        retry = ()
+    g2 = RollbackGuard(RobustnessSpec())
+    g2.observe(1, _Plain(), k0, 1.0)
+    _, s, _ = g2.observe(2, _Plain(), k0, float("inf"))
+    assert s.retry == ()
+
+
+def test_rollback_guard_failure_modes():
+    g = RollbackGuard(RobustnessSpec(retry_budget=1))
+    with pytest.raises(RollbackError, match="no .*good"):
+        g.observe(1, _Toy(1), jax.random.PRNGKey(0), float("nan"))
+    g.observe(1, _Toy(1), jax.random.PRNGKey(0), 1.0)
+    g.observe(2, _Toy(1), jax.random.PRNGKey(0), float("nan"))
+    with pytest.raises(RollbackError, match="retry budget"):
+        g.observe(2, _Toy(1), jax.random.PRNGKey(0), float("nan"))
+    with pytest.raises(ValueError):
+        RollbackGuard(RobustnessSpec(retry_budget=-1))
+
+
+# ---------------------------------------------------------------------------
+# declarative surface: Experiment round-trip, validation, edit sweeps
+# ---------------------------------------------------------------------------
+
+def _exp(**edits):
+    base = Experiment(
+        algorithm=AlgorithmSpec("fedbioacc"),
+        problem=ProblemSpec(arch="mamba2-130m", reduced=True, num_clients=4,
+                            per_client=1, seq_len=16),
+        schedule=ScheduleSpec(steps=4, local_steps=2, lr_x=0.05, lr_y=0.05,
+                              lr_u=0.05, neumann_q=2, neumann_tau=0.3))
+    base = base.edit(**{"execution.fuse_storm": True,
+                        "execution.storm_block": 128})
+    return base.edit(**edits) if edits else base
+
+
+def test_spec_roundtrip_and_edit_promotion():
+    exp = _exp(**{"faults.nan_rate": 0.2, "faults.byzantine_rate": 0.1,
+                  "robustness.aggregator": "trim",
+                  "robustness.retry_budget": 5})
+    assert exp.faults == FaultSpec(nan_rate=0.2, byzantine_rate=0.1)
+    assert exp.robustness.aggregator == "trim"
+    exp.validate()
+    back = Experiment.from_json(exp.to_json())
+    assert back == exp
+    # absent guards serialize as null and stay absent
+    plain = Experiment.from_json(_exp().to_json())
+    assert plain.faults is None and plain.robustness is None
+    d = json.loads(exp.to_json())
+    assert d["faults"]["nan_rate"] == 0.2
+    assert d["robustness"]["aggregator"] == "trim"
+
+
+def test_spec_validation_errors():
+    with pytest.raises(SpecError, match="fuse_storm"):
+        _exp(**{"execution.fuse_storm": False,
+                "faults.nan_rate": 0.1}).validate()
+    with pytest.raises(SpecError, match="hierarchy"):
+        _exp(**{"schedule.hierarchy_period": 2,
+                "robustness.aggregator": "clip"}).validate()
+    with pytest.raises(SpecError, match="nan_rate"):
+        _exp(**{"faults.nan_rate": 1.5}).validate()
+    with pytest.raises(SpecError, match="aggregator"):
+        _exp(**{"robustness.aggregator": "median"}).validate()
+    with pytest.raises(SpecError, match="trim_frac"):
+        _exp(**{"robustness.aggregator": "trim",
+                "robustness.trim_frac": 0.5}).validate()
+    with pytest.raises(SpecError, match="spike_factor"):
+        _exp(**{"robustness.spike_factor": 0.5}).validate()
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoints
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"a": jnp.full((3,), float(v)),
+            "b": jnp.full((2, 2), float(v), jnp.bfloat16)}
+
+
+def test_checkpoint_atomic_and_pruned(tmp_path):
+    from repro.checkpoint import (checkpoint_metadata, load_checkpoint,
+                                  save_checkpoint)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, _tree(1), {"step": 2})
+    save_checkpoint(d, _tree(2), {"step": 4})
+    got = load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 2.0))
+    assert checkpoint_metadata(d)["step"] == 4
+    names = sorted(os.listdir(d))
+    assert "arrays-00000004.npz" in names       # stale step-2 file pruned
+    assert "arrays-00000002.npz" not in names
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+def test_checkpoint_survives_partial_write(tmp_path):
+    """A crash mid-write (torn temp files, a half-written next arrays file)
+    must leave the previous checkpoint loadable — the manifest swap is the
+    only commit point."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, _tree(7), {"step": 2})
+    # simulate dying at every stage of the NEXT save
+    open(os.path.join(d, "arrays-00000004.npz.tmp"), "wb").write(b"\x00" * 9)
+    open(os.path.join(d, "arrays-00000004.npz"), "wb").write(b"garbage")
+    open(os.path.join(d, "manifest.json.tmp"), "wb").write(b"{ tru")
+    got = load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 7.0))
+    # and the recovered run's next save cleans the debris up
+    save_checkpoint(d, _tree(8), {"step": 4})
+    names = sorted(os.listdir(d))
+    assert not any(n.endswith(".tmp") for n in names)
+    assert "arrays-00000004.npz" in names
+    got = load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 8.0))
+
+
+def test_checkpoint_legacy_layout_fallback(tmp_path):
+    """Old checkpoints (manifest without an ``arrays`` pointer + arrays.npz)
+    still load."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, _tree(3), {"step": 1})
+    with open(os.path.join(d, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    os.rename(os.path.join(d, manifest.pop("arrays")),
+              os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    got = load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 3.0))
+
+
+# ---------------------------------------------------------------------------
+# launch.train: fail-loudly + crash auto-resume (subprocess)
+# ---------------------------------------------------------------------------
+
+def _train_env():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return env
+
+
+@pytest.mark.timeout(900)
+def test_crash_auto_resume_supervisor(tmp_path):
+    """--max-restarts: a hard mid-run crash (injected after the step-2
+    checkpoint) is survived — the supervisor relaunches with --resume and
+    the run completes, its checkpoint landing at the final step."""
+    exp = _exp(**{"algorithm.name": "fedavg", "algorithm.params": {},
+                  "schedule.steps": 4})
+    path = str(tmp_path / "exp.json")
+    exp.save(path)
+    ckpt = str(tmp_path / "ckpt")
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--experiment", path,
+         "--ckpt-dir", ckpt, "--ckpt-every", "2", "--log-every", "2",
+         "--max-restarts", "2", "--restart-backoff", "0.1",
+         "--crash-at-step", "3"],
+        env=_train_env(), capture_output=True, text=True, timeout=850)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "crash-at-step" in res.stdout
+    assert "resumed from" in res.stdout
+    from repro.checkpoint import checkpoint_metadata
+    assert checkpoint_metadata(ckpt)["step"] == 4
+    assert checkpoint_metadata(ckpt).get("key") is not None
+
+
+def test_nonfinite_loss_fails_loudly(tmp_path, monkeypatch):
+    """Without robustness guards a non-finite eval loss exits non-zero,
+    names the offending round, and drops a diagnostic checkpoint."""
+    from repro.launch import train as train_mod
+    exp = _exp(**{"algorithm.name": "fedavg", "algorithm.params": {},
+                  "schedule.steps": 2})
+    path = str(tmp_path / "exp.json")
+    exp.save(path)
+    monkeypatch.setattr(train_mod, "build", lambda e: _nan_run(e))
+    with pytest.raises(SystemExit, match="round 1"):
+        train_mod.main(["--experiment", path, "--log-every", "1",
+                        "--ckpt-dir", str(tmp_path / "ck")])
+    assert os.path.isdir(str(tmp_path / "ck" / "diagnostic"))
+
+
+def _nan_run(exp):
+    """A stub Run whose eval loss is NaN from the first round."""
+    from repro.api.build import Run, build as real_build
+    run = real_build(exp)
+    return Run(**{**run._asdict(), "eval_fn": lambda s: float("nan")})

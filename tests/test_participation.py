@@ -118,6 +118,32 @@ def test_weighted_sampler_prefers_heavy_clients():
     assert masks[:, :2].mean() > masks[:, 2:].mean()
 
 
+def test_trace_min_clients_floor_under_total_outage():
+    """availability_rate=0 makes EVERY round an all-zero availability draw:
+    the min_clients floor must still keep exactly that many clients (the
+    most-available by the same draws), deterministically across engine
+    instances and resume points."""
+    spec = ParticipationSpec(sampler="trace", availability_rate=0.0,
+                             min_clients=2, seed=11)
+    p1 = make_participation(spec, 6)
+    p2 = make_participation(spec, 6)       # a resumed run, fresh instance
+    masks = []
+    for r in range(8):
+        m = np.asarray(p1.mask_fn(jnp.int32(r)))
+        assert m.sum() == 2, (r, m)
+        np.testing.assert_array_equal(
+            m, np.asarray(p2.mask_fn(jnp.int32(r))))
+        np.testing.assert_array_equal(
+            m, np.asarray(jax.jit(p2.mask_fn)(jnp.int32(r))))
+        masks.append(m)
+    # the floor promotes by the per-round draws, not a fixed client subset
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+    # rate=1.0 keeps everyone — the floor never *removes* availability
+    full = make_participation(spec._replace(availability_rate=1.0), 6)
+    np.testing.assert_array_equal(np.asarray(full.mask_fn(jnp.int32(0))),
+                                  np.ones(6))
+
+
 def test_spec_validation():
     with pytest.raises(ValueError):
         make_participation(ParticipationSpec("uniform", 9), 4)
