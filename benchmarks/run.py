@@ -308,6 +308,7 @@ def bench_kernels(fast: bool):
     bench_storm_local(fast)
     bench_participation(fast)
     bench_sharded_comm(fast)
+    bench_compressed_comm(fast)
 
 
 def bench_storm_triple(fast: bool):
@@ -763,6 +764,229 @@ def bench_fault_tolerance(fast: bool):
                          "(finite=False, the divergence the guards catch); "
                          "fault_fraction = measured injection rates over "
                          "the run's rounds",
+        "backend": jax.default_backend(),
+    }
+
+
+_COMPRESSED_WIRE_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.launch.hlo_stats import collective_bytes
+from repro.optim import flat
+
+key = jax.random.PRNGKey(5)
+leaf = 1 << 12
+counts = {"x": 24, "y": 8}          # body communicated, heads private
+MODEL = 2
+mesh = Mesh(np.asarray(jax.devices()[: 4 * MODEL]).reshape(4, MODEL),
+            ("data", "model"))
+ctx = flat.make_shard_ctx(mesh)
+M = 8
+vt = {s: {f"l{i}": jax.random.normal(
+    jax.random.fold_in(key, 100 * j + i), (M, leaf)) for i in range(n)}
+    for j, (s, n) in enumerate(counts.items())}
+tmpl = jax.tree.map(lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), vt)
+BLOCK = 1 << 10
+spec = flat.make_spec(tmpl, sections=("x", "y"), block=BLOCK, shards=MODEL)
+v_b = flat.flatten_tree(spec, vt, batch_dims=1)
+# per-device psum payload: the model-shard chunk of the communicated x run
+elems = counts["x"] * leaf // MODEL
+out = {"comm_elems_per_chunk": elems, "block": BLOCK, "wire": {}}
+for name, ccfg in (("exact", None),
+                   ("int8", flat.CompressCfg(quant="int8")),
+                   ("int8_topk10",
+                    flat.CompressCfg(quant="int8", topk_frac=0.1))):
+    if ccfg is None:
+        fn = jax.jit(lambda b: flat.client_mean_masked(
+            spec, b, ("mean", "none"), shard=ctx))
+        hlo = fn.lower(v_b).compile().as_text()
+    else:
+        ef = (tuple(jnp.zeros_like(b) for b in v_b)
+              if ccfg.has_ef else None)
+        fn = jax.jit(lambda b, e, c=ccfg: flat.client_mean_masked(
+            spec, b, ("mean", "none"), shard=ctx, compress=c, ef=e))
+        hlo = fn.lower(v_b, ef).compile().as_text()
+    out["wire"][name] = collective_bytes(hlo)["bytes_by_dtype"]
+print("COMPRESSED_WIRE_JSON " + json.dumps(out))
+'''
+
+
+def _compressed_wire_hlo(fast: bool):
+    """Compile the masked reduction exact vs int8(+topk) on an 8-host-device
+    mesh in a subprocess and return the collective ``bytes_by_dtype``
+    breakdowns — the HLO half of the wire-bytes agreement record."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    try:
+        res = subprocess.run([sys.executable, "-c", _COMPRESSED_WIRE_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             timeout=1200)
+        line = next((l for l in res.stdout.splitlines()
+                     if l.startswith("COMPRESSED_WIRE_JSON ")), None)
+        if res.returncode != 0 or line is None:
+            return {"failure": f"rc={res.returncode}: {res.stderr[-300:]}"}
+    except subprocess.TimeoutExpired:
+        return {"failure": "timeout after 1200s"}
+    return json.loads(line[len("COMPRESSED_WIRE_JSON "):])
+
+
+def bench_compressed_comm(fast: bool):
+    """Compressed-communication bench as declarative Experiment edits
+    (repro.api): bytes and wall-clock vs comm policy (exact / bf16 / int8 /
+    top-k x {1%, 10%} / int8+top-k) and the compressed-vs-exact convergence
+    curves, every row replayable as base spec + its recorded edits.  The
+    bytes trade-off is recorded twice — the analytic uplink/wire models
+    (``repro.federation.compression``) and the compiled-HLO collective
+    dtype breakdown from an 8-host-device subprocess — and the acceptance
+    row (int8 + top-k 10%: >= 4x fewer uplink bytes, final loss within 5%
+    of exact) is checked in-band.  One top-k row runs with error feedback
+    OFF — the documented divergence row the EF buffers exist for."""
+    from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
+                           ProblemSpec, ScheduleSpec, build)
+    from repro.federation.compression import (CompressionSpec,
+                                              uplink_bytes_per_elem,
+                                              wire_bytes_per_elem)
+
+    steps = 8 if fast else 24
+    block = 256
+    base = Experiment(
+        algorithm=AlgorithmSpec("fedbioacc"),
+        problem=ProblemSpec(arch="mamba2-130m", reduced=True, num_clients=8,
+                            per_client=1, seq_len=32),
+        execution=ExecutionSpec(fuse_storm=True, fuse_oracles=True,
+                                storm_block=block),
+        schedule=ScheduleSpec(steps=steps, local_steps=2, lr_x=0.05,
+                              lr_y=0.05, lr_u=0.05, neumann_q=2))
+
+    def run_edit(edit: dict):
+        exp = base.edit(**edit)
+        run = build(exp)
+        eval_batch = jax.tree.map(lambda v: v[0],
+                                  run.batch_fn(jax.random.PRNGKey(123)))
+
+        def mean_loss(state):
+            v = run.views(state)
+            p = jax.tree.map(lambda t: jnp.mean(t, axis=0),
+                             {"body": v.x, "head": v.y})
+            return float(run.model.loss(p, eval_batch["val"])[0])
+
+        key = jax.random.PRNGKey(exp.schedule.seed)
+        state = run.init(key)
+        jstep = jax.jit(run.step, donate_argnums=(0,))
+        key, sub = jax.random.split(key)
+        state, _ = jstep(state, run.batch_fn(sub))       # compile + step 1
+        curve = [round(mean_loss(state), 5)]
+        t0 = time.perf_counter()
+        wall = 0.0
+        for _ in range(exp.schedule.steps - 1):
+            key, sub = jax.random.split(key)
+            state, _ = jstep(state, run.batch_fn(sub))
+            jax.block_until_ready(state)
+            wall += time.perf_counter() - t0
+            curve.append(round(mean_loss(state), 5))   # eval off the clock
+            t0 = time.perf_counter()
+        us = wall / max(exp.schedule.steps - 1, 1) * 1e6
+        cp = exp.compression or CompressionSpec()
+        return {"edit": edit,
+                "uplink_bytes_per_elem":
+                    round(uplink_bytes_per_elem(cp, block), 4),
+                "wire_bytes_per_elem":
+                    round(wire_bytes_per_elem(cp, block), 4),
+                "val_loss_curve": curve,
+                "val_loss_step1": curve[0],
+                "val_loss_final": curve[-1],
+                "us_per_step": round(us, 1)}
+
+    policies = [
+        ("exact", {}),
+        ("bf16", {"compression.quant": "bf16"}),
+        ("int8", {"compression.quant": "int8"}),
+        ("topk1", {"compression.topk_frac": 0.01}),
+        ("topk10", {"compression.topk_frac": 0.10}),
+        ("int8_topk10", {"compression.quant": "int8",
+                         "compression.topk_frac": 0.10}),
+        ("topk10_no_ef", {"compression.topk_frac": 0.10,
+                          "compression.error_feedback": False}),
+    ]
+    if fast:
+        policies = [p for p in policies if p[0] != "topk1"]
+    rows = []
+    exact_loss = None
+    for name, edit in policies:
+        row = run_edit(edit)
+        row["policy"] = name
+        if name == "exact":
+            exact_loss = row["val_loss_final"]
+        row["uplink_ratio_vs_exact"] = round(
+            4.0 / row["uplink_bytes_per_elem"], 2)
+        row["loss_delta_vs_exact"] = (
+            None if exact_loss is None
+            else round(row["val_loss_final"] - exact_loss, 5))
+        rows.append(row)
+        emit(f"compressed_comm/{name}", row["us_per_step"],
+             f"uplink_B_per_elem={row['uplink_bytes_per_elem']};"
+             f"uplink_ratio={row['uplink_ratio_vs_exact']}x;"
+             f"val_final={row['val_loss_final']}")
+
+    # in-band acceptance: int8 + top-k(10%) moves >= 4x fewer uplink bytes
+    # with final loss within 5% of the exact-comm run
+    acc = next(r for r in rows if r["policy"] == "int8_topk10")
+    rel = abs(acc["loss_delta_vs_exact"]) / abs(exact_loss)
+    acceptance = {"uplink_ratio_vs_exact": acc["uplink_ratio_vs_exact"],
+                  "uplink_ratio_ok": acc["uplink_ratio_vs_exact"] >= 4.0,
+                  "loss_rel_delta": round(rel, 5),
+                  "loss_within_5pct": bool(rel <= 0.05)}
+    emit("compressed_comm/acceptance_int8_topk10",
+         acc["us_per_step"],
+         f"uplink_ratio={acc['uplink_ratio_vs_exact']}x(>=4:"
+         f"{acceptance['uplink_ratio_ok']});"
+         f"loss_rel_delta={acceptance['loss_rel_delta']}"
+         f"(<=0.05:{acceptance['loss_within_5pct']})")
+
+    wire = _compressed_wire_hlo(fast)
+    if "failure" not in wire:
+        elems = wire["comm_elems_per_chunk"]
+        s8 = wire["wire"]["int8"].get("s8", 0)
+        f32_exact = wire["wire"]["exact"].get("f32", 0)
+        wire["hlo_agrees_with_model"] = bool(s8 == elems)  # 1 B/elem dense
+        wire["wire_ratio_exact_over_int8"] = round(
+            f32_exact / max(sum(wire["wire"]["int8"].values()), 1), 2)
+        emit("compressed_comm/wire_hlo", 0.0,
+             f"s8_bytes={s8};expected={elems};"
+             f"agrees={wire['hlo_agrees_with_model']};"
+             f"ratio_vs_exact={wire['wire_ratio_exact_over_int8']}x")
+    else:
+        emit("compressed_comm/wire_hlo", 0.0, f"FAILED {wire['failure']}")
+
+    KERNEL_JSON["compressed_comm"] = {
+        "experiment_base": json.loads(base.to_json()),
+        "policy_sweep": rows,
+        "acceptance_int8_topk10": acceptance,
+        "wire_hlo": wire,
+        "scenario_note": "each row is base experiment + the recorded edits "
+                         "(repro.api.Experiment.edit) — comm-policy sweep "
+                         "over exact / bf16 / int8 / top-k x {1%,10%} / "
+                         "int8+top-k(10%); uplink/wire bytes are the "
+                         "analytic models of repro.federation.compression "
+                         "at the run's storm_block; topk10_no_ef is the "
+                         "error-feedback-OFF divergence row on record (the "
+                         "dropped mass is never re-sent, so its trajectory "
+                         "drifts from every EF run); wire_hlo compiles the "
+                         "sharded masked reduction exact vs int8 on an "
+                         "8-host-device mesh and records the collective "
+                         "bytes-by-dtype — s8 bytes must equal the dense "
+                         "per-chunk element count (1 B/elem), the analytic "
+                         "wire model",
         "backend": jax.default_backend(),
     }
 

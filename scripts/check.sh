@@ -55,6 +55,15 @@ if [[ "${1:-}" != "--bench" ]]; then
     python -m repro.launch.train \
         --experiment experiments/fedbioacc_faulty.json --log-every 1
 
+    # compressed communication: per-tile-scaled int8 quantization + 10%
+    # top-k sparsified sends with error feedback, from the committed
+    # compressed spec — the dryrun HLO audit for the same policy lives in
+    # tests/test_compressed_comm.py and the bytes/convergence trade-off in
+    # BENCH_kernels.json:compressed_comm
+    echo "smoke-train: fedbioacc_int8_topk (int8 + top-k 10% + EF)"
+    python -m repro.launch.train \
+        --experiment experiments/fedbioacc_int8_topk.json --log-every 1
+
     # crash auto-resume: hard-kill the run mid-way (after the step-2
     # checkpoint), then the --max-restarts supervisor resumes it from the
     # atomic checkpoint and completes — the kill-mid-run drill end-to-end

@@ -12,7 +12,8 @@ under which schedule — is a frozen dataclass tree:
     ├── ExecutionSpec      fusion, mesh axes, overlap, scatter-comm
     ├── ScheduleSpec       steps, lrs, cadences, hierarchy, Neumann terms
     ├── FaultSpec?         client failure injection (repro.federation.faults)
-    └── RobustnessSpec?    health screen / robust aggregator / rollback
+    ├── RobustnessSpec?    health screen / robust aggregator / rollback
+    └── CompressionSpec?   quantized / top-k compressed reductions (+EF)
 
 ``Experiment`` round-trips to/from JSON (:meth:`Experiment.to_json` /
 :meth:`Experiment.from_json`, versioned via ``version``), validates with
@@ -68,7 +69,11 @@ JSON schema (version 1)
                         "screen": bool, "z_thresh": num,
                         "clip_factor": num, "trim_frac": num,
                         "spike_factor": num, "retry_budget": int,
-                        "ring": int}
+                        "ring": int},
+      "compression":   {"quant": "bf16"|"int8"|null,        # | null
+                        "topk_frac": num,       # 0 disables sparsification
+                        "error_feedback": bool,
+                        "sections": [str]|null} # null = every comm'd section
     }
 
 ``faults``/``robustness`` (both optional, default null — the bit-identical
@@ -77,6 +82,15 @@ client failure injection and the guard policy against it (health-masked
 robust aggregation + the train loop's rollback/retry) — see
 ``repro.federation.faults``.  Both require ``execution.fuse_storm`` and a
 flat (non-hierarchical) schedule.
+
+``compression`` (optional, default null — exact f32 reductions,
+bit-identical) declares the compressed-communication policy: quantized
+(bf16 / per-tile-scaled int8) and/or top-k sparsified client sends with
+per-client error-feedback buffers — see ``repro.federation.compression``.
+Requires ``execution.fuse_storm``; top-k additionally requires a flat
+(non-hierarchical) schedule and ``error_feedback`` unless explicitly
+disabled is the documented divergence row; private sections are never
+compressible.
 
 Unknown keys, wrong versions, unknown algorithms/hyperparams and
 inconsistent combinations (``mesh`` without ``fuse_storm``, ``overlap``
@@ -90,6 +104,7 @@ import json
 from dataclasses import dataclass, field, fields
 from typing import Any, Optional, Tuple
 
+from repro.federation.compression import QUANTS, CompressionSpec
 from repro.federation.faults import AGGREGATORS, FaultSpec, RobustnessSpec
 from repro.federation.participation import SAMPLERS, ParticipationSpec
 
@@ -218,6 +233,7 @@ class Experiment:
     schedule: ScheduleSpec = field(default_factory=ScheduleSpec)
     faults: Optional[FaultSpec] = None
     robustness: Optional[RobustnessSpec] = None
+    compression: Optional[CompressionSpec] = None
     version: int = SPEC_VERSION
 
     # -- validation ---------------------------------------------------------
@@ -367,6 +383,57 @@ class Experiment:
             if rb.retry_budget < 0 or rb.ring < 1:
                 _err("robustness",
                      "retry_budget must be >= 0 and ring >= 1")
+
+        cp = self.compression
+        if cp is not None:
+            if not ex.fuse_storm:
+                _err("compression",
+                     "needs execution.fuse_storm=true — the compressed "
+                     "reductions are a feature of the fused sequence-spec "
+                     "engine")
+            if fl is not None or rb is not None:
+                _err("compression",
+                     "does not compose with faults/robustness — the robust "
+                     "aggregators and health screens are calibrated on "
+                     "exact sends (drop one layer)")
+            if cp.quant not in QUANTS:
+                _err("compression.quant",
+                     f"unknown quant {cp.quant!r}; choose from {QUANTS}")
+            if not 0.0 <= float(cp.topk_frac) < 1.0:
+                _err("compression.topk_frac",
+                     f"{cp.topk_frac} is not in [0, 1) — 1.0 means 'keep "
+                     f"everything'; unset topk_frac instead")
+            if cp.quant is None and not float(cp.topk_frac) > 0.0:
+                _err("compression",
+                     "no compressor selected — set quant ('bf16'|'int8') "
+                     "and/or topk_frac > 0, or drop the compression block")
+            if float(cp.topk_frac) > 0.0 and sch.hierarchy_period > 0:
+                _err("compression.topk_frac",
+                     "top-k sparsification does not compose with the "
+                     "hierarchical grouped mean "
+                     "(schedule.hierarchy_period > 0) — error feedback "
+                     "against two different means is ill-defined; use "
+                     "quant-only compression or a flat schedule")
+            if cp.sections is not None:
+                if len(cp.sections) == 0:
+                    _err("compression.sections",
+                         "[] compresses nothing — use null for every "
+                         "communicated section, or drop the block")
+                from repro.optim.sequences import PRIVATE, SPECS
+                aspec = SPECS[self.algorithm.name]
+                private = tuple(q.section for q in aspec.sequences
+                                if q.comm == PRIVATE)
+                unknown = [s for s in cp.sections if s not in sections]
+                if unknown:
+                    _err("compression.sections",
+                         f"{unknown} are not sections of "
+                         f"{self.algorithm.name!r} (sections: {sections})")
+                bad = [s for s in cp.sections if s in private]
+                if bad:
+                    _err("compression.sections",
+                         f"{bad} are PRIVATE sections of "
+                         f"{self.algorithm.name!r} — private state never "
+                         f"enters a reduction, so it cannot be compressed")
         return self
 
     # -- JSON ---------------------------------------------------------------
@@ -380,6 +447,10 @@ class Experiment:
         d["faults"] = self.faults._asdict() if self.faults else None
         d["robustness"] = (self.robustness._asdict()
                            if self.robustness else None)
+        d["compression"] = (self.compression._asdict()
+                            if self.compression else None)
+        if self.compression and self.compression.sections is not None:
+            d["compression"]["sections"] = list(self.compression.sections)
         d["schedule"]["comm_every"] = self.schedule.comm_every_dict
         # version first — the one key a reader must dispatch on
         d = {"version": d.pop("version"), **d}
@@ -420,7 +491,8 @@ class Experiment:
             sub["client_weights"] = tuple(sub["client_weights"])
         parts["participation"] = ParticipationSpec(**sub)
         for key, klass in (("faults", FaultSpec),
-                           ("robustness", RobustnessSpec)):
+                           ("robustness", RobustnessSpec),
+                           ("compression", CompressionSpec)):
             sub = d.pop(key, None)
             if sub is None:
                 parts[key] = None
@@ -433,6 +505,8 @@ class Experiment:
             if unknown:
                 raise SpecError(f"Experiment.{key}: unknown keys "
                                 f"{sorted(unknown)} (knows {sorted(known)})")
+            if sub.get("sections") is not None:
+                sub["sections"] = tuple(sub["sections"])
             parts[key] = klass(**sub)
         if d:
             raise SpecError(f"Experiment: unknown top-level keys {sorted(d)}")
@@ -466,12 +540,14 @@ class Experiment:
                 out = dataclasses.replace(out, **{head: value})
                 continue
             sub = getattr(out, head)
-            if sub is None and head in ("faults", "robustness"):
+            if sub is None and head in ("faults", "robustness",
+                                        "compression"):
                 # sweeping a guard knob on an unguarded base spec enables
                 # the layer with defaults — `edit(**{"faults.nan_rate": .1})`
-                sub = FaultSpec() if head == "faults" else RobustnessSpec()
+                sub = {"faults": FaultSpec, "robustness": RobustnessSpec,
+                       "compression": CompressionSpec}[head]()
             if isinstance(sub, (ParticipationSpec, FaultSpec,
-                                RobustnessSpec)):
+                                RobustnessSpec, CompressionSpec)):
                 if rest not in type(sub)._fields:
                     _err(path, "no such field")
                 # NamedTuple _replace skips the dataclasses' __post_init__

@@ -37,6 +37,13 @@ def main(argv=None) -> int:
             guards += (f", robust[{rb.aggregator}"
                        f"{' screened' if rb.screen else ''} "
                        f"retries={rb.retry_budget}]")
+        if exp.compression is not None:
+            cp = exp.compression
+            parts = ([cp.quant] if cp.quant else []) \
+                + ([f"topk={cp.topk_frac}"
+                    f"{'' if cp.error_feedback else ' no-ef'}"]
+                   if cp.topk_frac else [])
+            guards += f", compress[{' '.join(parts)}]"
         print(f"OK   {path}: {exp.algorithm.name} on {exp.problem.arch}"
               f"{' (reduced)' if exp.problem.reduced else ''}, "
               f"M={exp.problem.num_clients}, steps={exp.schedule.steps}"

@@ -58,6 +58,13 @@ consumed by ``launch.train``.  Both are recorded on ``train_step.faults`` /
 ``train_step.robustness``; both ``None`` (the default) leaves every
 trajectory bit-identical to the unguarded stack.
 
+Every factory also accepts ``compression=`` (a declarative
+``repro.federation.compression.CompressionSpec``, fused path only): the
+masked reductions move quantized (bf16 / per-tile-scaled int8) and/or
+top-k sparsified client sends, with per-client error-feedback buffers
+carried on ``FlatState.ef`` — recorded on ``train_step.compression``;
+``None`` (the default) leaves every trajectory bit-identical.
+
 Every factory also accepts ``mesh=`` (a jax ``Mesh`` with ("data", "model")
 axes, or a prebuilt ``optim.flat.ShardCtx`` for the non-default knobs —
 ``use_scatter`` picks the ``psum_scatter``+``all_gather`` all-reduce
@@ -314,6 +321,20 @@ def _fault_setup(cfg: FederatedConfig, faults, robustness, fuse_storm: bool):
     return make_faults(faults, cfg.num_clients), robustness
 
 
+def _compress_setup(compression, fuse_storm: bool):
+    """Pass the compression spec through to the engine.  The compressed
+    reductions live on the fused sequence-spec engine only — the unfused
+    tree paths communicate exact f32 — so reject them loudly (the same
+    contract as ``_fault_setup`` / ``_shard_setup``)."""
+    if compression is None:
+        return None
+    if not fuse_storm:
+        raise ValueError(
+            "compression= requires fuse_storm=True — the compressed "
+            "reductions are a feature of the fused sequence-spec engine")
+    return compression
+
+
 def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
     """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
     mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
@@ -337,13 +358,14 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
                     init_trees, storm_block, to_state,
                     part: Participation | None = None,
                     shard=None, overlap: bool = False,
-                    fault=None, robustness=None):
+                    fault=None, robustness=None, compression=None):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
                               block=storm_block, participation=part,
                               shard=shard, overlap=overlap,
-                              faults=fault, robustness=robustness)
+                              faults=fault, robustness=robustness,
+                              compression=compression)
 
     def init(key):
         return engine.init_state(init_trees(key))
@@ -363,6 +385,7 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.shardings = engine.shardings
         fn.faults = fault
         fn.robustness = robustness
+        fn.compression = compression
     return init, train_step
 
 
@@ -382,7 +405,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
-                           faults=None, robustness=None):
+                           faults=None, robustness=None, compression=None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -393,6 +416,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
+    comp = _compress_setup(compression, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -400,7 +424,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust)
+                               fault, robust, comp)
 
     def init(key):
         tr = init_trees(key)
@@ -444,7 +468,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               participation: ParticipationSpec | None = None,
                               mesh=None, overlap: bool = False,
                               comm_every: dict | None = None,
-                              faults=None, robustness=None):
+                              faults=None, robustness=None, compression=None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -462,6 +486,10 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     ``federation.faults.RobustnessSpec``) health-screens senders and picks
     the robust aggregator (both need ``fuse_storm=True``; recorded on
     ``train_step.faults`` / ``train_step.robustness``).
+    ``compression`` (a ``federation.compression.CompressionSpec``) moves the
+    reductions quantized (bf16 / per-tile int8) and/or top-k sparsified with
+    error feedback (needs ``fuse_storm=True``; recorded on
+    ``train_step.compression``).
     """
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
@@ -473,6 +501,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
+    comp = _compress_setup(compression, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -481,7 +510,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust)
+                               fault, robust, comp)
 
     def init(key):
         tr = init_trees(key)
@@ -551,7 +580,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  participation: ParticipationSpec | None = None,
                                  mesh=None, overlap: bool = False,
                                  comm_every: dict | None = None,
-                                 faults=None, robustness=None):
+                                 faults=None, robustness=None, compression=None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -566,6 +595,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
+    comp = _compress_setup(compression, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -575,7 +605,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust)
+                               fault, robust, comp)
 
     def init(key):
         tr = init_trees(key)
@@ -617,7 +647,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     participation: ParticipationSpec | None = None,
                                     mesh=None, overlap: bool = False,
                                     comm_every: dict | None = None,
-                                    faults=None, robustness=None):
+                                    faults=None, robustness=None, compression=None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE — faults/robustness touch only the sent
     x/ν rows; private heads are never corrupted or screened)."""
@@ -631,6 +661,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
+    comp = _compress_setup(compression, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -639,7 +670,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust)
+                               fault, robust, comp)
 
     def init(key):
         tr = init_trees(key)
@@ -695,7 +726,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
-                           faults=None, robustness=None):
+                           faults=None, robustness=None, compression=None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -721,6 +752,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
+    comp = _compress_setup(compression, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -728,7 +760,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust)
+                               fault, robust, comp)
 
     def init(key):
         tr = init_trees(key)

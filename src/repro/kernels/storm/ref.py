@@ -64,3 +64,27 @@ def storm3_step_ref(p, m, g_old, lrs, decays, block):
     p_new = (p.astype(jnp.float32) - lr * m32).astype(p.dtype)
     m_part = (decay * (m32 - g_old.astype(jnp.float32))).astype(m.dtype)
     return p_new, m_part
+
+
+def quantpack_ref(x, block):
+    """Per-tile symmetric int8 quantization of a flat [N] buffer
+    (N a multiple of ``block``): each tile is scaled by its own
+    absmax/127 and rounded (half-to-even, ``jnp.round`` — the kernel uses
+    the same rounding so pack results are bit-identical).  A zero tile
+    stores scale 0 and quantizes to zeros (the divisor is ``where``-guarded).
+
+    Returns ``(q int8 [N], scales f32 [N // block])``.
+    """
+    t = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(t), axis=-1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(t / safe[:, None]), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def quantunpack_ref(q, scales, block):
+    """Dequantize :func:`quantpack_ref` output back to f32 [N]:
+    ``q · scale_tile`` (exact — each step is one f32 multiply)."""
+    t = q.astype(jnp.float32).reshape(-1, block)
+    return (t * scales.astype(jnp.float32)[:, None]).reshape(q.shape)

@@ -173,9 +173,9 @@ def build_train_experiment(exp_path: str):
     batch_shapes = jax.eval_shape(run.batch_fn, jax.random.PRNGKey(0))
     if run.mesh is None:
         jitted = jax.jit(run.step, donate_argnums=(0,))
-        return jitted, (state_shapes, batch_shapes), None
+        return jitted, (state_shapes, batch_shapes), run
     return (_jit_sharded_run(run, state_shapes, batch_shapes),
-            (state_shapes, batch_shapes), run.mesh)
+            (state_shapes, batch_shapes), run)
 
 
 def build_prefill(arch: str, shape_name: str, mesh, mesh_cfg: MeshConfig):
@@ -266,11 +266,58 @@ def _compiled_stats(compiled, rec: Dict[str, Any], keep_hlo: bool) -> None:
         rec["hlo"] = hlo
 
 
+def _check_compressed_collectives(exp, flat_spec,
+                                  coll: Dict[str, Any]) -> Dict[str, Any]:
+    """Audit a compressed spec's compiled collectives against the analytic
+    wire model: a quantized policy must move the reduction bytes in the
+    narrow dtype.  Raises ``RuntimeError`` if it lowered to f32 collectives
+    instead (fail LOUDLY — that is a silent 4x comm regression).
+
+    The comparison is per-dtype, not total: the model-parallel compute
+    collectives (activation all-reduces, all-to-alls, permutes) legitimately
+    stay f32, so the criterion is that the narrow-dtype bytes cover what the
+    compressed reductions analytically move — the per-shard-chunk extents of
+    every compressed section (``flat_spec`` is the engine's
+    :class:`~repro.optim.flat.FlatSpec`) at the quant's value width, for
+    BOTH the variables and the momentum reduction of each comm event."""
+    from repro.optim.sequences import PRIVATE, SPECS
+    cp = exp.compression
+    narrow = {"bf16": ("bf16",), "int8": ("s8", "u8")}[cp.quant]
+    aspec = SPECS[exp.algorithm.name]
+    comm = tuple(q.section for q in aspec.sequences if q.comm != PRIVATE)
+    csecs = cp.sections or comm
+    # extents carry section INDICES into flat_spec.sections
+    cids = {i for i, n in enumerate(flat_spec.sections) if n in csecs}
+    elems = sum(b - a for grp in flat_spec.groups
+                for s, a, b in grp.extents if s in cids)
+    vbytes = {"bf16": 2, "int8": 1}[cp.quant]
+    expected = 2 * elems * vbytes       # vars + mom reductions, one chunk
+    by_dtype = coll.get("bytes_by_dtype", {})
+    narrow_b = sum(by_dtype.get(d, 0) for d in narrow)
+    if narrow_b < 0.9 * expected:
+        hint = ""
+        if cp.quant == "bf16":
+            hint = (" (note: the host CPU backend has no native bf16 "
+                    "reduce and re-widens bf16 all-reduces to f32 — the "
+                    "bf16 wire guarantee holds on TPU only; int8 moves "
+                    "integer collectives, which no backend promotes)")
+        raise RuntimeError(
+            f"compressed spec (quant={cp.quant!r}) lowered to f32 "
+            f"collectives: the narrow-dtype collective bytes "
+            f"({narrow_b} B in {narrow}) do not cover the analytic wire "
+            f"model of the compressed reductions ({expected} B = 2 "
+            f"reductions x {elems} elems x {vbytes} B) — dtype breakdown: "
+            f"{by_dtype}{hint}")
+    return {"ok": True, "narrow_bytes": narrow_b,
+            "expected_bytes": expected, "bytes_by_dtype": by_dtype}
+
+
 def run_experiment(exp_path: str, *, keep_hlo: bool = False) -> Dict[str, Any]:
     """Lower + compile one declarative Experiment spec (``--experiment``)."""
     rec: Dict[str, Any] = {"experiment": exp_path, "kind": "train"}
     t0 = time.time()
-    jitted, args, mesh = build_train_experiment(exp_path)
+    jitted, args, run = build_train_experiment(exp_path)
+    mesh = run.mesh
     if mesh is not None:
         rec["mesh"] = dict(mesh.shape)
         with mesh:
@@ -285,6 +332,13 @@ def run_experiment(exp_path: str, *, keep_hlo: bool = False) -> Dict[str, Any]:
     rec.update(status="OK", lower_s=round(t_lower, 1),
                compile_s=round(t_compile, 1))
     _compiled_stats(compiled, rec, keep_hlo)
+    exp = run.spec
+    if exp.compression is not None and exp.compression.quant is not None:
+        if mesh is None:
+            rec["compression_check"] = "unsharded: no collectives to audit"
+        else:
+            rec["compression_check"] = _check_compressed_collectives(
+                exp, run.step.spec, rec["collectives"])
     return rec
 
 

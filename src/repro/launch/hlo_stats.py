@@ -24,9 +24,17 @@ _SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
 
 
 def collective_bytes(hlo: str) -> Dict[str, int]:
-    """Sum result bytes of every collective op in the compiled HLO."""
+    """Sum result bytes of every collective op in the compiled HLO.
+
+    Besides per-op ``bytes``/``counts`` the record carries
+    ``bytes_by_dtype`` — collective bytes keyed by element dtype (f32,
+    bf16, s8, ...).  That is the split the compressed-comm policies are
+    audited on: a quantized spec must move its bytes in the narrow dtype,
+    and an f32-dominated breakdown means the compression silently fell
+    back (``launch.dryrun`` fails loudly on it)."""
     out = {c: 0 for c in _COLLECTIVES}
     counts = {c: 0 for c in _COLLECTIVES}
+    by_dtype: Dict[str, int] = {}
     for line in hlo.splitlines():
         line = line.strip()
         if " = " not in line:
@@ -51,7 +59,8 @@ def collective_bytes(hlo: str) -> Dict[str, int]:
                 if d:
                     n *= int(d)
             total += n * _DTYPE_BYTES[dt]
+            by_dtype[dt] = by_dtype.get(dt, 0) + n * _DTYPE_BYTES[dt]
         out[op] += total
         counts[op] += 1
-    return {"bytes": out, "counts": counts,
+    return {"bytes": out, "counts": counts, "bytes_by_dtype": by_dtype,
             "total_bytes": sum(out.values())}

@@ -17,9 +17,9 @@
 #                through the gated launches and participants-only
 #                reductions.
 from repro.optim.optimizers import adam, momentum, sgd  # noqa: F401
-from repro.optim.flat import (FlatSpec, buffers_add, client_mean_masked,  # noqa: F401
-                              flatten_tree, make_spec, momentum_sgd_step,
-                              sgd_step, storm_full_update,
+from repro.optim.flat import (CompressCfg, FlatSpec, buffers_add,  # noqa: F401
+                              client_mean_masked, flatten_tree, make_spec,
+                              momentum_sgd_step, sgd_step, storm_full_update,
                               storm_partial_step, unflatten_tree,
                               zeros_buffers)
 from repro.optim.sequences import (AVERAGED, HIERARCHICAL, PRIVATE,  # noqa: F401

@@ -94,6 +94,9 @@ from repro.kernels.storm.kernel import (BLOCK, momsgd3_step_flat,
                                         storm3_step_flat_jnp,
                                         storm3_update_flat,
                                         storm3_update_flat_jnp)
+from repro.kernels.storm.quantpack import (quantpack_flat, quantpack_flat_jnp,
+                                           quantunpack_flat,
+                                           quantunpack_flat_jnp)
 
 
 class _Leaf(NamedTuple):
@@ -602,6 +605,134 @@ class RobustCfg(NamedTuple):
     trim_frac: float = 0.2
 
 
+class CompressCfg(NamedTuple):
+    """Compressed-reduction policy of :func:`client_mean_masked` (the
+    substrate half of ``repro.federation.compression.CompressionSpec`` —
+    defined here, like :class:`RobustCfg`, so the substrate stays
+    import-free of the federation layer).
+
+    ``quant``: ``None`` | ``"bf16"`` | ``"int8"`` — the dtype the reduction
+    moves.  bf16 is a cast; int8 is symmetric per-TILE quantization (one f32
+    scale per ``block`` elements, the ``quantpack_flat`` kernel).  On the
+    sharded path the per-device partial sums enter the collective in this
+    dtype (int8 with a psum-shared per-tile scale), so the ``psum`` /
+    ``psum_scatter`` wire itself narrows.
+
+    ``topk_frac``: per-tile top-k sparsification of what each client sends —
+    every client keeps the ``ceil(topk_frac · block)`` largest-magnitude
+    entries of each tile of (row + error feedback).  Per-tile selection is
+    identical on the unsharded buffer and on every ``shard_map`` chunk
+    (tiles are the shard quantum), which is what keeps the two paths'
+    compression decisions aligned.
+
+    ``error_feedback``: carry the dropped mass per client (f32 buffers
+    shaped like the communicated buffers — ``FlatState.ef``) and add it back
+    into the next send.  Active only with ``topk_frac > 0``.
+
+    ``sections``: section names to compress; () compresses every
+    communicated run.  Composition limits (enforced upstream by
+    ``sequences.make_engine`` / ``Experiment.validate``, asserted here):
+    no ``corrupt=``/``robust=``, and ``topk_frac > 0`` excludes ``"group"``
+    runs — error feedback against two different means is ill-defined, while
+    plain quantization composes with the grouped mean.
+    """
+    quant: str | None = None
+    topk_frac: float = 0.0
+    error_feedback: bool = True
+    sections: tuple = ()
+
+    @property
+    def has_ef(self) -> bool:
+        return self.topk_frac > 0 and self.error_feedback
+
+
+def _topk_tiles(x, block: int, frac: float):
+    """Per-tile top-k sparsification (in f32): keep the k =
+    ceil(frac · block) largest-magnitude entries of every ``block``-sized
+    tile, zero the rest.  Threshold-based (``lax.top_k`` on |tile| gives the
+    k-th magnitude): ties keep >= k entries — deterministic, and a zero tile
+    "keeps" everything (all zeros — nothing is actually sent)."""
+    t = x.reshape(x.shape[:-1] + (-1, block))
+    k = max(1, int(np.ceil(frac * block)))
+    thr = lax.top_k(jnp.abs(t), k)[0][..., -1:]
+    return jnp.where(jnp.abs(t) >= thr, t, 0.0).reshape(x.shape)
+
+
+def _quant_dequant(x, block: int, quant, mode, flag):
+    """Round-trip ``x`` (f32) through the reduction dtype: the value error
+    every client's send incurs.  int8 dispatches the ``quantpack_flat``
+    pack/unpack kernel pair (bit-identical jnp lowering off-TPU)."""
+    if quant is None:
+        return x
+    if quant == "bf16":
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    assert quant == "int8", quant
+    shape = x.shape
+    v = x.reshape(-1)
+    if mode == "pallas":
+        q, s = quantpack_flat(v, block=block, interpret=flag)
+        return quantunpack_flat(q, s, block=block, interpret=flag).reshape(shape)
+    q, s = quantpack_flat_jnp(v, block=block)
+    return quantunpack_flat_jnp(q, s, block=block).reshape(shape)
+
+
+def _compress_sent(x, block: int, ccfg: CompressCfg, mode, flag):
+    """What a client sends into one compressed reduction: per-tile top-k of
+    (row + error feedback), then the quantization round-trip — all in f32."""
+    if ccfg.topk_frac > 0:
+        x = _topk_tiles(x, block, ccfg.topk_frac)
+    return _quant_dequant(x, block, ccfg.quant, mode, flag)
+
+
+def _compressed_mean(seg, eseg, w, ccfg: CompressCfg, block: int, mode, flag):
+    """Compressed participant mean of one run (f32): every client sends
+    ``_compress_sent(row + EF)``, the server broadcasts the participants'
+    weighted mean of the sends, and the residual ``(row + EF) − sent`` goes
+    back into the client's EF buffer.  Non-participants (w = 0) pass their
+    row through bit-identical AND their EF rows freeze bit-exact — the
+    residual is a property of a send, and they sent nothing."""
+    acc = seg.astype(jnp.float32)
+    if eseg is not None:
+        acc = acc + eseg
+    sent = _compress_sent(acc, block, ccfg, mode, flag)
+    if w is None:
+        out = jnp.broadcast_to(jnp.mean(sent, axis=0, keepdims=True),
+                               seg.shape)
+    else:
+        col = _weight_col(sent, w)
+        m = jnp.broadcast_to(jnp.mean(sent * col, axis=0, keepdims=True),
+                             seg.shape)
+        out = jnp.where(col > 0, m, seg.astype(jnp.float32))
+    new_e = None
+    if eseg is not None:
+        new_e = acc - sent
+        if w is not None:
+            pc = (w > 0).reshape(w.shape + (1,) * (seg.ndim - 1))
+            new_e = jnp.where(pc, new_e, eseg)
+    return out, new_e
+
+
+def _compressed_mean_grouped(seg, w, ccfg: CompressCfg, block: int,
+                             num_groups: int, mode, flag):
+    """Grouped (hierarchical) mean over quantized sends — quantization
+    COMPOSES with the pod-local mean (each client's send is quantized once;
+    the group mean over the sends is exact), the satellite fix for
+    ``_bcast_mean_grouped``.  Top-k/EF is rejected upstream."""
+    assert ccfg.topk_frac == 0, \
+        "top-k compression does not compose with grouped means"
+    sent = _quant_dequant(seg.astype(jnp.float32), block, ccfg.quant,
+                          mode, flag)
+    M = seg.shape[0]
+    g = sent.reshape((num_groups, M // num_groups) + seg.shape[1:])
+    if w is None:
+        return jnp.broadcast_to(jnp.mean(g, axis=1, keepdims=True),
+                                g.shape).reshape(seg.shape)
+    col = _weight_col(g, w.reshape(num_groups, M // num_groups))
+    m = jnp.broadcast_to(jnp.mean(g * col, axis=1, keepdims=True), g.shape)
+    g0 = seg.astype(jnp.float32).reshape(g.shape)
+    return jnp.where(col > 0, m, g0).reshape(seg.shape)
+
+
 def _corrupt_rows(x, corrupt):
     """Apply the round's fault transform to what clients *send* into one
     reduction: ``corrupt = (nan, byz, scale)`` with [M] {0,1} masks — byz
@@ -735,22 +866,27 @@ def _normalize_weights(spec: FlatSpec, weights):
     return (weights,) * n_sections
 
 
-def _section_runs(grp: _Group, shards: int, modes, w_of_sec):
-    """Static (mode, weight, start, stop) element runs covering the whole
-    buffer, built from the spec-time section extents; adjacent runs merge
-    when both the mode and the weight array coincide (``"none"`` runs merge
-    unconditionally), including across shard-chunk boundaries."""
+def _section_runs(grp: _Group, shards: int, modes, w_of_sec,
+                  comp_of_sec=None):
+    """Static (mode, weight, start, stop, compressed) element runs covering
+    the whole buffer, built from the spec-time section extents; adjacent
+    runs merge when the mode, the weight array AND the compression flag all
+    coincide (``"none"`` runs merge unconditionally — private tiles are
+    never reduced, so neither weight nor compression applies to them),
+    including across shard-chunk boundaries."""
     S = grp.padded // shards
     runs: list = []
     for j in range(shards):
         for s, a, b in grp.extents:
             mode, w = modes[int(s)], w_of_sec[int(s)]
+            comp = bool(comp_of_sec[int(s)]) if comp_of_sec else False
             start, stop = j * S + a, j * S + b
             if runs and runs[-1][0] == mode and runs[-1][3] == start and (
-                    runs[-1][1] is w or mode == "none"):
+                    mode == "none" or (runs[-1][1] is w
+                                       and runs[-1][4] == comp)):
                 runs[-1][3] = stop
             else:
-                runs.append([mode, w, start, stop])
+                runs.append([mode, w, start, stop, comp])
     return runs
 
 
@@ -795,7 +931,8 @@ def _update_run(buf, start: int, stop: int, upd, *, chunk: bool = True):
 
 def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
                        weights=None, shard: ShardCtx | None = None,
-                       corrupt=None, robust: RobustCfg | None = None):
+                       corrupt=None, robust: RobustCfg | None = None,
+                       compress: CompressCfg | None = None, ef=None):
     """Section-masked client communication over flat [M, N] buffers.
 
     ``modes``: one entry per section (aligned with ``spec.sections``; a
@@ -828,6 +965,17 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
     (private state is never corrupted or reduced) but not with ``"group"``
     runs — the robust reductions are global (enforced upstream by
     ``Experiment.validate`` / ``sequences.make_engine``).
+
+    ``compress``: optional :class:`CompressCfg` — the named sections'
+    reductions move quantized and/or top-k-sparsified sends
+    (:func:`_compressed_mean`; on the sharded path the collective itself
+    moves the narrow dtype).  With ``compress`` set the call returns
+    ``(bufs, ef)`` — ``ef`` being the updated per-client error-feedback
+    buffers (pass the current ones via ``ef=``; the empty tuple when
+    ``compress.has_ef`` is false).  ``compress=None`` (the default) keeps
+    the original signature and a bit-identical trajectory.  Compression
+    does not compose with ``corrupt=``/``robust=`` (the guarded reductions
+    consume raw client rows — enforced upstream, asserted here).
     """
     n_sections = max(len(spec.sections), 1)
     assert len(modes) == n_sections, (modes, spec.sections)
@@ -837,17 +985,63 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
         assert all(m in ("none", "mean") for m in modes), (
             "corrupt=/robust= do not compose with grouped (hierarchical) "
             "means", modes)
+    comp_of_sec = None
+    if compress is not None:
+        assert not guarded, (
+            "compress= does not compose with corrupt=/robust= — enforced "
+            "upstream by sequences.make_engine / Experiment.validate")
+        if compress.topk_frac > 0:
+            assert all(m in ("none", "mean") for m in modes), (
+                "top-k compression does not compose with grouped "
+                "(hierarchical) means — enforced upstream", modes)
+        names = spec.sections if spec.sections else ("",)
+        comp_of_sec = tuple(
+            (not compress.sections) or (nm in compress.sections)
+            for nm in names)
     w_of_sec = _normalize_weights(spec, weights)
     if shard is not None:
         return _client_mean_masked_sharded(spec, bufs, modes, num_groups,
                                            w_of_sec, shard,
-                                           corrupt=corrupt, robust=robust)
-    out = []
-    for grp, buf in zip(spec.groups, bufs):
+                                           corrupt=corrupt, robust=robust,
+                                           compress=compress,
+                                           comp_of_sec=comp_of_sec, ef=ef)
+    has_ef = compress is not None and compress.has_ef
+    ebufs = tuple(ef) if ef else (None,) * len(spec.groups)
+    if has_ef:
+        assert len(ebufs) == len(spec.groups), (
+            "compress with error feedback needs one f32 EF buffer per "
+            "dtype group (pass ef=)", len(ebufs), len(spec.groups))
+    kmode, kflag = _dispatch(None)
+    out, ef_out = [], []
+    for gi, (grp, buf) in enumerate(zip(spec.groups, bufs)):
         assert buf.ndim >= 2, "client_mean_masked needs a leading client axis"
-        for mode, w, start, stop in _section_runs(grp, spec.shards, modes,
-                                                  w_of_sec):
+        ebuf = ebufs[gi] if has_ef else None
+        for mode, w, start, stop, comp in _section_runs(
+                grp, spec.shards, modes, w_of_sec, comp_of_sec):
             if mode == "none":
+                continue
+            nd = buf.ndim
+            if comp:
+                # compressed runs are whole-run and pair the buffer write
+                # with the EF write (the top-k/quant tiles are block-local;
+                # the CPU cache chunking could split a tile)
+                seg = buf[..., start:stop]
+                eseg = (ebuf[..., start:stop]
+                        if (ebuf is not None and mode == "mean") else None)
+                if mode == "mean":
+                    upd, new_e = _compressed_mean(seg, eseg, w, compress,
+                                                  grp.block, kmode, kflag)
+                else:
+                    upd = _compressed_mean_grouped(seg, w, compress,
+                                                   grp.block, num_groups,
+                                                   kmode, kflag)
+                    new_e = None
+                buf = lax.dynamic_update_slice(
+                    buf, upd.astype(buf.dtype), (0,) * (nd - 1) + (start,))
+                if new_e is not None:
+                    ebuf = lax.dynamic_update_slice(
+                        ebuf, new_e.astype(ebuf.dtype),
+                        (0,) * (nd - 1) + (start,))
                 continue
             if mode == "mean":
                 if guarded:
@@ -864,7 +1058,10 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
             # CPU cache chunking would make them chunk-local
             buf = _update_run(buf, start, stop, upd, chunk=not guarded)
         out.append(buf)
-    return tuple(out)
+        ef_out.append(ebuf)
+    if compress is None:
+        return tuple(out)
+    return tuple(out), (tuple(ef_out) if has_ef else ())
 
 
 def _group_index_sets(shard: ShardCtx, num_groups: int):
@@ -890,6 +1087,38 @@ def _allreduce(x, shard: ShardCtx, groups):
         return lax.all_gather(piece, shard.data_axis, axis=x.ndim - 1,
                               tiled=True)
     return lax.psum(x, shard.data_axis, axis_index_groups=groups)
+
+
+def _wire_allreduce(partial, quant, block: int, shard: ShardCtx, gidx,
+                    nsum: int):
+    """All-reduce of per-device f32 partial sums [L] in the WIRE dtype —
+    what makes the collective itself cheap, not just the sends.
+
+    * bf16 — cast, reduce, cast back (the collective moves 2 B/elem).
+    * int8 — symmetric per-tile quantization on a scale SHARED by the
+      ``nsum`` devices being summed: ``s = psum(per-tile absmax) /
+      (127 − nsum/2)``.  The headroom term bounds the reduced value away
+      from wraparound — each device's |q| <= absmax/s + 1/2 from rounding,
+      so Σ|q| <= (127 − nsum/2) + nsum/2 = 127 exactly (XLA integer adds
+      WRAP, they do not saturate).  The scale exchange is one tiny f32 psum
+      of [L/block] — the 4/block bytes/elem overhead of the bytes model.
+    * None (top-k only) — dense f32: sparsity does not shrink a psum.
+    """
+    if quant is None:
+        return _allreduce(partial, shard, gidx)
+    if quant == "bf16":
+        return _allreduce(partial.astype(jnp.bfloat16), shard,
+                          gidx).astype(jnp.float32)
+    assert quant == "int8", quant
+    t = partial.reshape(-1, block)
+    amax = jnp.max(jnp.abs(t), axis=-1)
+    gmax = lax.psum(amax, shard.data_axis, axis_index_groups=gidx)
+    s = gmax / (127.0 - 0.5 * nsum)
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(t / safe[:, None]), -127.0, 127.0).astype(jnp.int8)
+    totq = _allreduce(q.reshape(partial.shape), shard, gidx)
+    return (totq.reshape(t.shape).astype(jnp.float32)
+            * s[:, None]).reshape(partial.shape)
 
 
 def _robust_mean_sharded(seg0, seg, w_l, robust: RobustCfg | None,
@@ -963,29 +1192,37 @@ def _robust_mean_sharded(seg0, seg, w_l, robust: RobustCfg | None,
 
 def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
                                 w_of_sec, shard: ShardCtx,
-                                corrupt=None, robust: RobustCfg | None = None):
+                                corrupt=None, robust: RobustCfg | None = None,
+                                compress: CompressCfg | None = None,
+                                comp_of_sec=None, ef=None):
     guarded = corrupt is not None or robust is not None
+    assert compress is None or not guarded
+    has_ef = compress is not None and compress.has_ef
+    ebufs = tuple(ef) if ef else (None,) * len(spec.groups)
+    kmode, kflag = _dispatch(None)
     # the fault masks ride the shard_map as [M]-over-"data" operands, like
     # the participation weights
     cops = () if corrupt is None else (corrupt[0], corrupt[1])
     cscale = None if corrupt is None else corrupt[2]
-    out = []
-    for grp, buf in zip(spec.groups, bufs):
+    out, ef_out = [], []
+    for gi, (grp, buf) in enumerate(zip(spec.groups, bufs)):
         _check_shard(spec, shard, buf)
         M = buf.shape[0]
+        nds = shard.data_size
         # one run list per SHARD CHUNK (the extents are per-chunk already) —
         # identical on every model shard, so the SPMD program's static
         # slices line up on all devices
-        runs = _section_runs(grp, 1, modes, w_of_sec)
+        runs = _section_runs(grp, 1, modes, w_of_sec, comp_of_sec)
         if all(r[0] == "none" for r in runs):
             out.append(buf)
+            ef_out.append(ebufs[gi] if has_ef else None)
             continue
         groups_idx = (_group_index_sets(shard, num_groups)
                       if any(r[0] == "group" for r in runs) else None)
         # distinct weight arrays become shard_map operands ([M] over "data")
         ws: list = []
         w_idx: list = []
-        for mode, w, _, _ in runs:
+        for mode, w, _, _, _ in runs:
             if w is None or mode == "none":
                 w_idx.append(None)
                 continue
@@ -996,10 +1233,13 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
             else:
                 ws.append(w)
                 w_idx.append(len(ws) - 1)
+        ebuf = ebufs[gi] if has_ef else None
 
         def body(b, *ops, runs=runs, w_idx=w_idx, groups_idx=groups_idx):
-            wloc, cloc = ops[:len(ws)], ops[len(ws):]
-            for (mode, _, a, stop), wi in zip(runs, w_idx):
+            e = ops[0] if has_ef else None
+            off = 1 if has_ef else 0
+            wloc, cloc = ops[off:off + len(ws)], ops[off + len(ws):]
+            for (mode, _, a, stop, comp), wi in zip(runs, w_idx):
                 if mode == "none":
                     continue        # private tiles never enter the collective
                 seg = b[:, a:stop]
@@ -1014,6 +1254,46 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
                     continue
                 gidx = groups_idx if mode == "group" else None
                 denom = M // num_groups if mode == "group" else M
+                if comp:
+                    # compressed run: per-client sends are sparsified +
+                    # quantized exactly as on the unsharded path (per-tile —
+                    # the shard-major layout keeps tile boundaries aligned),
+                    # then the per-device partial sums cross the wire in the
+                    # narrow dtype (_wire_allreduce)
+                    nsum = nds // num_groups if mode == "group" else nds
+                    eseg = (e[:, a:stop]
+                            if (e is not None and mode == "mean") else None)
+                    acc = seg.astype(jnp.float32)
+                    if eseg is not None:
+                        acc = acc + eseg
+                    sent = _compress_sent(acc, grp.block, compress,
+                                          kmode, kflag)
+                    if wi is None:
+                        col = None
+                        partial = jnp.sum(sent, axis=0)
+                    else:
+                        w_l = wloc[wi]
+                        wsum = lax.psum(jnp.sum(w_l), shard.data_axis,
+                                        axis_index_groups=gidx)
+                        scale = jnp.where(wsum > 0, denom / wsum, 0.0)
+                        col = (w_l * scale).astype(jnp.float32)[:, None]
+                        partial = jnp.sum(sent * col, axis=0)
+                    tot = _wire_allreduce(partial, compress.quant, grp.block,
+                                          shard, gidx, nsum)
+                    m = (tot / denom)[None]
+                    upd = (jnp.broadcast_to(m, seg.shape) if col is None
+                           else jnp.where(col > 0, m,
+                                          seg.astype(jnp.float32)))
+                    b = lax.dynamic_update_slice(b, upd.astype(b.dtype),
+                                                 (0, a))
+                    if eseg is not None:
+                        new_e = acc - sent
+                        if wi is not None:
+                            new_e = jnp.where((wloc[wi] > 0)[:, None],
+                                              new_e, eseg)
+                        e = lax.dynamic_update_slice(
+                            e, new_e.astype(e.dtype), (0, a))
+                    continue
                 if wi is None:
                     tot = _allreduce(jnp.sum(seg, axis=0), shard, gidx)
                     upd = jnp.broadcast_to((tot / denom)[None].astype(b.dtype),
@@ -1027,11 +1307,22 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
                     tot = _allreduce(jnp.sum(seg * col, axis=0), shard, gidx)
                     upd = jnp.where(col > 0, (tot / denom)[None], seg)
                 b = lax.dynamic_update_slice(b, upd.astype(b.dtype), (0, a))
-            return b
+            return (b, e) if has_ef else b
 
         pb = shard.buffer_spec
         pw = PartitionSpec(shard.data_axis)
-        out.append(shard_map(body, mesh=shard.mesh,
-                             in_specs=(pb,) + (pw,) * (len(ws) + len(cops)),
-                             out_specs=pb, check_rep=False)(buf, *ws, *cops))
-    return tuple(out)
+        ins = ((pb,) + ((pb,) if has_ef else ())
+               + (pw,) * (len(ws) + len(cops)))
+        res = shard_map(body, mesh=shard.mesh, in_specs=ins,
+                        out_specs=((pb, pb) if has_ef else pb),
+                        check_rep=False)(
+            buf, *((ebuf,) if has_ef else ()), *ws, *cops)
+        if has_ef:
+            out.append(res[0])
+            ef_out.append(res[1])
+        else:
+            out.append(res)
+            ef_out.append(None)
+    if compress is None:
+        return tuple(out)
+    return tuple(out), (tuple(ef_out) if has_ef else ())

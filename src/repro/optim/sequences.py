@@ -252,7 +252,7 @@ def comm_tree(cfg, step, tree, policy: str, *, weights=None,
 
 def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
                  weights=None, comm_every=None, shard=None,
-                 corrupt=None, robust=None):
+                 corrupt=None, robust=None, compress=None, ef=()):
     """Apply per-section policies to flat [M, N] buffers — one masked
     (sliced) reduction per communicated section run, private sections
     bit-identical (``flat.client_mean_masked``).
@@ -267,11 +267,20 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
     masks) and the :class:`flat.RobustCfg` guard policy, forwarded into
     every communicated reduction — faults touch only what is actually sent
     (cadence-skipped and private sections stay clean by construction).
+    ``compress`` / ``ef``: a :class:`flat.CompressCfg` and the current
+    error-feedback buffers — with ``compress`` set the reductions move
+    quantized/top-k sends and the call returns ``(bufs, ef)`` (the pair is
+    threaded through every cadence cond); ``compress=None`` keeps the
+    original single-value return and a bit-identical trajectory.
     """
     assert all(p in POLICIES for p in policies), policies
     n = len(policies)
     ce = tuple(comm_every) if comm_every is not None else (1,) * n
     assert len(ce) == n and all(c >= 1 for c in ce), ce
+    if compress is not None:
+        assert corrupt is None and robust is None, (
+            "compress does not compose with corrupt/robust — enforced by "
+            "make_engine")
     if isinstance(weights, (tuple, list)):
         assert len(weights) == n, (len(weights), n)
         w_of_sec = tuple(weights)
@@ -280,6 +289,52 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
     is_comm, is_global = _round_preds(cfg, step)
     round_idx = (step + 1) // cfg.local_steps
     groups = cfg.hierarchy_groups
+    if compress is None:
+        for c in sorted(set(ce)):
+            live = tuple(i for i in range(n)
+                         if ce[i] == c and policies[i] != PRIVATE)
+            if not live:
+                continue
+            due = is_comm if c == 1 else is_comm & (round_idx % c == 0)
+            modes_comm = tuple("mean" if i in live else "none"
+                               for i in range(n))
+            w_c = tuple(w_of_sec[i] if i in live else None for i in range(n))
+            if cfg.hierarchy_period <= 0 or not any(
+                    policies[i] == HIERARCHICAL for i in live):
+                bufs = lax.cond(
+                    due,
+                    lambda b, mc=modes_comm, wc=w_c:
+                        flat.client_mean_masked(spec, b, mc, weights=wc,
+                                                shard=shard, corrupt=corrupt,
+                                                robust=robust),
+                    lambda b: b, bufs)
+                continue
+            assert corrupt is None and robust is None, (
+                "corrupt/robust do not compose with the hierarchical grouped "
+                "mean (hierarchy_period > 0) — enforced by make_engine")
+            # pod-local rounds: HIERARCHICAL sections take the grouped mean
+            # while AVERAGED sections still take the full mean
+            modes_local = tuple(
+                ("group" if policies[i] == HIERARCHICAL else "mean")
+                if i in live else "none" for i in range(n))
+
+            def do_comm(b, mc=modes_comm, ml=modes_local, wc=w_c):
+                return lax.cond(
+                    is_global,
+                    lambda bb: flat.client_mean_masked(spec, bb, mc,
+                                                       weights=wc,
+                                                       shard=shard),
+                    lambda bb: flat.client_mean_masked(spec, bb, ml,
+                                                       num_groups=groups,
+                                                       weights=wc,
+                                                       shard=shard),
+                    b)
+
+            bufs = lax.cond(due, do_comm, lambda b: b, bufs)
+        return bufs
+    # compressed variant: the (buffers, error-feedback) pair rides every
+    # cadence cond together, so skipped rounds leave EF bit-identical too
+    carry = (tuple(bufs), tuple(ef))
     for c in sorted(set(ce)):
         live = tuple(i for i in range(n)
                      if ce[i] == c and policies[i] != PRIVATE)
@@ -290,35 +345,34 @@ def comm_buffers(spec: flat.FlatSpec, cfg, step, bufs, policies, *,
         w_c = tuple(w_of_sec[i] if i in live else None for i in range(n))
         if cfg.hierarchy_period <= 0 or not any(
                 policies[i] == HIERARCHICAL for i in live):
-            bufs = lax.cond(
+            carry = lax.cond(
                 due,
-                lambda b, mc=modes_comm, wc=w_c:
-                    flat.client_mean_masked(spec, b, mc, weights=wc,
-                                            shard=shard, corrupt=corrupt,
-                                            robust=robust),
-                lambda b: b, bufs)
+                lambda be, mc=modes_comm, wc=w_c:
+                    flat.client_mean_masked(spec, be[0], mc, weights=wc,
+                                            shard=shard, compress=compress,
+                                            ef=be[1]),
+                lambda be: be, carry)
             continue
-        assert corrupt is None and robust is None, (
-            "corrupt/robust do not compose with the hierarchical grouped "
-            "mean (hierarchy_period > 0) — enforced by make_engine")
-        # pod-local rounds: HIERARCHICAL sections take the grouped mean
-        # while AVERAGED sections still take the full mean
         modes_local = tuple(
             ("group" if policies[i] == HIERARCHICAL else "mean")
             if i in live else "none" for i in range(n))
 
-        def do_comm(b, mc=modes_comm, ml=modes_local, wc=w_c):
+        def do_comm_c(be, mc=modes_comm, ml=modes_local, wc=w_c):
             return lax.cond(
                 is_global,
-                lambda bb: flat.client_mean_masked(spec, bb, mc, weights=wc,
-                                                   shard=shard),
-                lambda bb: flat.client_mean_masked(spec, bb, ml,
+                lambda bb: flat.client_mean_masked(spec, bb[0], mc,
+                                                   weights=wc, shard=shard,
+                                                   compress=compress,
+                                                   ef=bb[1]),
+                lambda bb: flat.client_mean_masked(spec, bb[0], ml,
                                                    num_groups=groups,
-                                                   weights=wc, shard=shard),
-                b)
+                                                   weights=wc, shard=shard,
+                                                   compress=compress,
+                                                   ef=bb[1]),
+                be)
 
-        bufs = lax.cond(due, do_comm, lambda b: b, bufs)
-    return bufs
+        carry = lax.cond(due, do_comm_c, lambda be: be, carry)
+    return carry
 
 
 # ---------------------------------------------------------------------------
@@ -337,13 +391,20 @@ class FlatState(NamedTuple):
     counter (scalar int32) when a fault engine is attached — folded into the
     fault draws so a rolled-back round re-samples its failures — and the
     empty tuple otherwise (zero pytree leaves: pre-fault checkpoints and jit
-    caches keep their exact structure).
+    caches keep their exact structure).  ``ef`` carries the per-client
+    error-feedback buffers of top-k compressed communication — a
+    ``(vars_ef, mom_ef)`` pair of f32 buffer tuples shaped exactly like
+    ``vars``/``mom`` (so sharding rules, masking and checkpointing inherit
+    it, and compressed runs stay resume-bit-exact) — and the empty tuple
+    whenever compression is off or feedback-free (same zero-leaf
+    convention as ``stale``/``retry``).
     """
     vars: Any
     mom: Any
     step: jnp.ndarray
     stale: Any = ()
     retry: Any = ()
+    ef: Any = ()
 
 
 class Engine(NamedTuple):
@@ -405,7 +466,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 block: int | None = None, participation=None,
                 shard: flat.ShardCtx | None = None,
                 overlap: bool = False, faults=None,
-                robustness=None) -> Engine:
+                robustness=None, compression=None) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -438,6 +499,17 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     selects the robust aggregator inside those reductions.  Both are duck-
     typed so this module stays import-free of the federation layer; both
     ``None`` (the default) leaves every trajectory bit-identical.
+
+    ``compression``: any object carrying the :class:`flat.CompressCfg`
+    fields (e.g. a ``federation.compression.CompressionSpec``) — the named
+    sections' reductions move quantized and/or top-k-sparsified sends
+    (``sections=None`` compresses every communicated section).  Top-k
+    carries per-client error-feedback buffers on ``FlatState.ef``.
+    Duck-typed like ``faults``/``robustness``; ``None`` (the default)
+    leaves every trajectory bit-identical.  Rejected combinations (clear
+    errors, no silent fallback): compression with faults/robustness, and
+    top-k with the hierarchical grouped mean (``cfg.hierarchy_period > 0``)
+    — plain quantization DOES compose with the grouped mean.
     """
     rcfg = None
     if robustness is not None:
@@ -454,6 +526,53 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             "grouped mean (cfg.hierarchy_period > 0) — the robust "
             "reductions and the fault model are global; set "
             "hierarchy_period=0")
+    ccfg = None
+    if compression is not None:
+        if faults is not None or rcfg is not None:
+            raise ValueError(
+                "compression= does not compose with faults=/robustness= — "
+                "the guarded reductions consume raw client rows; drop one "
+                "layer")
+        quant = compression.quant
+        if quant not in (None, "bf16", "int8"):
+            raise ValueError(f"unknown compression quant {quant!r} "
+                             f"(None | 'bf16' | 'int8')")
+        frac = float(compression.topk_frac)
+        if not 0.0 <= frac < 1.0:
+            raise ValueError(
+                f"compression topk_frac={frac} must be in [0, 1)")
+        if quant is None and frac == 0.0:
+            raise ValueError(
+                "compression enabled but no compressor selected — set "
+                "quant ('bf16' | 'int8') and/or topk_frac > 0")
+        comm_secs = tuple(q.section for q in aspec.sequences
+                          if q.comm != PRIVATE)
+        csecs = (tuple(compression.sections) if compression.sections
+                 else comm_secs)
+        unknown = set(csecs) - set(aspec.sections)
+        if unknown:
+            raise ValueError(
+                f"compression.sections names unknown sections "
+                f"{sorted(unknown)} (spec {aspec.name!r} has "
+                f"{aspec.sections})")
+        private = [s for s in csecs if s not in comm_secs]
+        if private:
+            raise ValueError(
+                f"compression.sections names private sections {private} — "
+                f"private state is never communicated, so it cannot be "
+                f"compressed")
+        if frac > 0 and cfg.hierarchy_period > 0:
+            raise ValueError(
+                "top-k compression (topk_frac > 0) does not compose with "
+                "the hierarchical grouped mean (cfg.hierarchy_period > 0) "
+                "— error feedback against two different means is "
+                "ill-defined; use quant-only compression or set "
+                "hierarchy_period=0")
+        ccfg = flat.CompressCfg(
+            quant=quant, topk_frac=frac,
+            error_feedback=bool(compression.error_feedback),
+            sections=csecs)
+    has_ef = ccfg is not None and ccfg.has_ef
     sections = aspec.sections
     spec = flat.make_spec({s: templates[s] for s in sections},
                           sections=sections,
@@ -517,7 +636,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         return jax.device_put(state, state_shardings(state))
 
     def init_state(var_trees, mom_trees=None, step=None, stale=None,
-                   retry=None):
+                   retry=None, ef=None):
         vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
                                    batch_dims=1)
         if not has_mom:
@@ -545,10 +664,19 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             retry_b = jnp.zeros((), jnp.int32)
         else:
             retry_b = jnp.asarray(retry, jnp.int32)
+        if not has_ef:
+            ef_b = ()
+        elif ef is None:
+            # one f32 zero buffer per communicated buffer — the dropped
+            # top-k mass accumulates here between rounds
+            ef_b = (tuple(jnp.zeros(b.shape, jnp.float32) for b in vars_b),
+                    tuple(jnp.zeros(b.shape, jnp.float32) for b in mom_b))
+        else:
+            ef_b = ef
         return _placed(FlatState(
             vars_b, mom_b,
             jnp.zeros((), jnp.int32) if step is None else step,
-            stale_b, retry_b))
+            stale_b, retry_b, ef_b))
 
     def _storm_step(state: FlatState, batch) -> FlatState:
         t = state.step
@@ -568,10 +696,16 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         vars_b, mom_b = flat.storm_partial_step(spec, state.vars, state.mom,
                                                 g_old, lrs, decays, mask=mask,
                                                 shard=shard)
+        efv, efm = state.ef if state.ef else ((), ())
         # issue the variable-section reduction ...
-        vars_c = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence, shard=shard,
-                              corrupt=corrupt, robust=rcfg)
+        if ccfg is None:
+            vars_c = comm_buffers(spec, cfg, t, vars_b, policies,
+                                  weights=wts, comm_every=cadence,
+                                  shard=shard, corrupt=corrupt, robust=rcfg)
+        else:
+            vars_c, efv = comm_buffers(spec, cfg, t, vars_b, policies,
+                                       weights=wts, comm_every=cadence,
+                                       shard=shard, compress=ccfg, ef=efv)
         # 4) ... run the new-iterate oracle, same batch; the STORM correction
         #    is one add.  overlap=True evaluates the oracle at the LOCAL
         #    (pre-reduction) iterate: g_new then feeds only the correction
@@ -582,11 +716,17 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             _flatten_grads(oracle(flat.unflatten_tree(
                 spec, vars_b if overlap else vars_c), batch)), mask)
         mom_b = flat.buffers_add(mom_b, g_new)
-        mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                             weights=wts, comm_every=cadence, shard=shard,
-                             corrupt=corrupt, robust=rcfg)
+        if ccfg is None:
+            mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
+                                 weights=wts, comm_every=cadence, shard=shard,
+                                 corrupt=corrupt, robust=rcfg)
+        else:
+            mom_b, efm = comm_buffers(spec, cfg, t, mom_b, policies,
+                                      weights=wts, comm_every=cadence,
+                                      shard=shard, compress=ccfg, ef=efm)
         return state._replace(vars=vars_c, mom=mom_b, step=t + 1,
-                              stale=_next_stale(state, mask))
+                              stale=_next_stale(state, mask),
+                              ef=(efv, efm) if state.ef else ())
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
@@ -595,24 +735,37 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         g = flat.mask_buffers(
             _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
                                   batch)), mask)
+        efv, efm = state.ef if state.ef else ((), ())
         if has_mom:
             betas = (aspec.beta,) * len(aspec.sequences)
             vars_b, mom_b = flat.momentum_sgd_step(spec, state.vars,
                                                    state.mom, g, lrs, betas,
                                                    mask=mask, shard=shard)
-            mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
-                                 weights=wts, comm_every=cadence, shard=shard,
-                                 corrupt=corrupt, robust=rcfg)
+            if ccfg is None:
+                mom_b = comm_buffers(spec, cfg, t, mom_b, policies,
+                                     weights=wts, comm_every=cadence,
+                                     shard=shard, corrupt=corrupt,
+                                     robust=rcfg)
+            else:
+                mom_b, efm = comm_buffers(spec, cfg, t, mom_b, policies,
+                                          weights=wts, comm_every=cadence,
+                                          shard=shard, compress=ccfg, ef=efm)
         else:
             # momentum-less: the plain-SGD launch (no dead momentum stream)
             vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask,
                                    shard=shard)
             mom_b = ()
-        vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
-                              weights=wts, comm_every=cadence, shard=shard,
-                              corrupt=corrupt, robust=rcfg)
+        if ccfg is None:
+            vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
+                                  weights=wts, comm_every=cadence,
+                                  shard=shard, corrupt=corrupt, robust=rcfg)
+        else:
+            vars_b, efv = comm_buffers(spec, cfg, t, vars_b, policies,
+                                       weights=wts, comm_every=cadence,
+                                       shard=shard, compress=ccfg, ef=efv)
         return state._replace(vars=vars_b, mom=mom_b, step=t + 1,
-                              stale=_next_stale(state, mask))
+                              stale=_next_stale(state, mask),
+                              ef=(efv, efm) if state.ef else ())
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
 
