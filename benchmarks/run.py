@@ -1,6 +1,6 @@
 """Benchmark harness — one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--json]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json] [--events P]
 
 Benchmarks (paper artifact → benchmark):
   * Table 1 (communication / oracle complexities)    → bench_table1_complexity
@@ -14,7 +14,12 @@ Output: ``name,us_per_call,derived`` CSV rows (derived = the benchmark's
 headline metric). ``--json`` additionally writes ``BENCH_kernels.json`` at
 the repo root — the machine-readable kernel perf trajectory (fused
 triple-sequence STORM vs the 9-pass tree-map chain, with the bytes-moved
-model behind each number).
+model behind each number).  ``--events PATH`` mirrors every result row
+(and the measured-run spans) into a ``repro.telemetry`` event stream.
+
+The Experiment-sweep benches (participation, fault tolerance, compressed
+comm) all measure through :func:`repro.telemetry.measure_run` — the one
+warmed, donation-aware timing path shared with the event stream.
 """
 from __future__ import annotations
 
@@ -34,11 +39,15 @@ from repro.core.problems import fair_federated_problem
 
 ROWS = []
 KERNEL_JSON = {}          # machine-readable kernel results (--json)
+EVENTS_LOG = None         # repro.telemetry EventLog mirror (--events)
 
 
 def emit(name: str, us_per_call: float, derived: str):
     ROWS.append(f"{name},{us_per_call:.1f},{derived}")
     print(ROWS[-1], flush=True)
+    if EVENTS_LOG is not None:
+        EVENTS_LOG.emit("bench", name=name,
+                        us_per_step=round(us_per_call, 1), derived=derived)
 
 
 def _run_rounds(prob, algo, rounds, *, local_steps=4, lr_x=0.03, lr_y=0.1,
@@ -208,13 +217,16 @@ def _timeit_us(fn, n):
     """Warmed, device-synchronized mean wall time per call in µs — shared by
     the substrate benches so their recorded numbers stay methodologically
     comparable."""
+    from repro.telemetry import phase
     r = fn()
     jax.block_until_ready(r)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        r = fn()
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / n * 1e6
+    with phase("bench/timeit", EVENTS_LOG, calls=n):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            r = fn()
+        jax.block_until_ready(r)
+        us = (time.perf_counter() - t0) / n * 1e6
+    return us
 
 
 def _timeit_us_donated(jitted, make_args, n, *, warm=True):
@@ -225,16 +237,19 @@ def _timeit_us_donated(jitted, make_args, n, *, warm=True):
     region (each call consumes its donated buffers).  ``warm=False`` skips
     the compile/warm-up execution (callers that already warmed, e.g. the
     interleaved rounds of :func:`_timeit_us_ab`)."""
+    from repro.telemetry import phase
     if warm:
         r = jitted(*make_args())
         jax.block_until_ready(r)
     arg_sets = [make_args() for _ in range(n)]
     jax.block_until_ready(arg_sets)
-    t0 = time.perf_counter()
-    for a in arg_sets:
-        r = jitted(*a)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / n * 1e6
+    with phase("bench/timeit_donated", EVENTS_LOG, calls=n):
+        t0 = time.perf_counter()
+        for a in arg_sets:
+            r = jitted(*a)
+        jax.block_until_ready(r)
+        us = (time.perf_counter() - t0) / n * 1e6
+    return us
 
 
 def _timeit_us_ab(pairs, n, rounds=4):
@@ -574,9 +589,10 @@ def bench_participation_experiments(fast: bool):
     spec — recorded verbatim next to its result so every row is exactly
     reproducible with ``launch.train --experiment``."""
     from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
-                           ProblemSpec, ScheduleSpec, build)
+                           ProblemSpec, ScheduleSpec)
     from repro.federation.participation import (expected_comm_fraction,
                                                 make_participation)
+    from repro.telemetry import measure_run
 
     steps = 8 if fast else 24
     base = Experiment(
@@ -589,41 +605,19 @@ def bench_participation_experiments(fast: bool):
                               lr_y=0.05, lr_u=0.05, neumann_q=2))
 
     def run_edit(edit: dict):
+        # measure_run evaluates at the CLIENT-MEAN iterate (run.eval_fn
+        # reads client 0 only, which under m < M sampling may be frozen all
+        # run and show no signal)
         exp = base.edit(**edit)
-        run = build(exp)
-
-        # participation-insensitive convergence metric: val loss at the
-        # CLIENT-MEAN iterate (run.eval_fn reads client 0 only, which under
-        # m < M sampling may be frozen all run and show no signal)
-        eval_batch = jax.tree.map(lambda v: v[0],
-                                  run.batch_fn(jax.random.PRNGKey(123)))
-
-        def mean_loss(state):
-            v = run.views(state)
-            p = jax.tree.map(lambda t: jnp.mean(t, axis=0),
-                             {"body": v.x, "head": v.y})
-            return float(run.model.loss(p, eval_batch["val"])[0])
-
-        key = jax.random.PRNGKey(exp.schedule.seed)
-        state = run.init(key)
-        jstep = jax.jit(run.step, donate_argnums=(0,))
-        key, sub = jax.random.split(key)
-        state, _ = jstep(state, run.batch_fn(sub))       # compile + step 1
-        loss0 = mean_loss(state)
-        t0 = time.perf_counter()
-        for _ in range(exp.schedule.steps - 1):
-            key, sub = jax.random.split(key)
-            state, _ = jstep(state, run.batch_fn(sub))
-        us = ((time.perf_counter() - t0) / max(exp.schedule.steps - 1, 1)
-              * 1e6)
-        part = make_participation(run.participation,
+        m = measure_run(exp, log=EVENTS_LOG, label="participation")
+        part = make_participation(m["run"].participation,
                                   exp.problem.num_clients)
         rounds = max(exp.schedule.steps // exp.schedule.local_steps, 1)
         return {"edit": edit, "comm_fraction":
                 round(expected_comm_fraction(part, rounds), 4),
-                "val_loss_step1": round(loss0, 5),
-                "val_loss_final": round(mean_loss(state), 5),
-                "us_per_step": round(us, 1)}
+                "val_loss_step1": m["val_loss_step1"],
+                "val_loss_final": m["val_loss_final"],
+                "us_per_step": m["us_per_step"]}
 
     M = base.problem.num_clients
     ms = (2, 8) if fast else (1, 2, 4, 8)
@@ -670,9 +664,10 @@ def bench_fault_tolerance(fast: bool):
     is the base spec + its edits, reproducible with ``launch.train
     --experiment``."""
     from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
-                           ProblemSpec, ScheduleSpec, build)
+                           ProblemSpec, ScheduleSpec)
     from repro.federation.faults import (expected_fault_fraction,
                                          make_faults)
+    from repro.telemetry import measure_run
 
     steps = 8 if fast else 24
     base = Experiment(
@@ -686,35 +681,15 @@ def bench_fault_tolerance(fast: bool):
 
     def run_edit(edit: dict):
         exp = base.edit(**edit)
-        run = build(exp)
-        eval_batch = jax.tree.map(lambda v: v[0],
-                                  run.batch_fn(jax.random.PRNGKey(123)))
-
-        def mean_loss(state):
-            v = run.views(state)
-            p = jax.tree.map(lambda t: jnp.mean(t, axis=0),
-                             {"body": v.x, "head": v.y})
-            return float(run.model.loss(p, eval_batch["val"])[0])
-
-        key = jax.random.PRNGKey(exp.schedule.seed)
-        state = run.init(key)
-        jstep = jax.jit(run.step, donate_argnums=(0,))
-        key, sub = jax.random.split(key)
-        state, _ = jstep(state, run.batch_fn(sub))       # compile + step 1
-        t0 = time.perf_counter()
-        for _ in range(exp.schedule.steps - 1):
-            key, sub = jax.random.split(key)
-            state, _ = jstep(state, run.batch_fn(sub))
-        us = ((time.perf_counter() - t0) / max(exp.schedule.steps - 1, 1)
-              * 1e6)
-        l = mean_loss(state)
+        m = measure_run(exp, log=EVENTS_LOG, label="fault_tolerance")
+        l = m["val_loss_final"]
         rounds = max(exp.schedule.steps // exp.schedule.local_steps, 1)
         frac = expected_fault_fraction(
             make_faults(exp.faults, exp.problem.num_clients), rounds)
         return {"edit": edit, "fault_fraction": frac,
                 "finite": bool(np.isfinite(l)),
-                "val_loss_final": round(l, 5) if np.isfinite(l) else None,
-                "us_per_step": round(us, 1)}
+                "val_loss_final": l if np.isfinite(l) else None,
+                "us_per_step": m["us_per_step"]}
 
     # guard overhead: zero-rate faults keep the trajectory bit-identical,
     # so the step-time delta IS the price of the guarded reduction
@@ -852,10 +827,11 @@ def bench_compressed_comm(fast: bool):
     of exact) is checked in-band.  One top-k row runs with error feedback
     OFF — the documented divergence row the EF buffers exist for."""
     from repro.api import (AlgorithmSpec, ExecutionSpec, Experiment,
-                           ProblemSpec, ScheduleSpec, build)
+                           ProblemSpec, ScheduleSpec)
     from repro.federation.compression import (CompressionSpec,
                                               uplink_bytes_per_elem,
                                               wire_bytes_per_elem)
+    from repro.telemetry import measure_run
 
     steps = 8 if fast else 24
     block = 256
@@ -870,42 +846,18 @@ def bench_compressed_comm(fast: bool):
 
     def run_edit(edit: dict):
         exp = base.edit(**edit)
-        run = build(exp)
-        eval_batch = jax.tree.map(lambda v: v[0],
-                                  run.batch_fn(jax.random.PRNGKey(123)))
-
-        def mean_loss(state):
-            v = run.views(state)
-            p = jax.tree.map(lambda t: jnp.mean(t, axis=0),
-                             {"body": v.x, "head": v.y})
-            return float(run.model.loss(p, eval_batch["val"])[0])
-
-        key = jax.random.PRNGKey(exp.schedule.seed)
-        state = run.init(key)
-        jstep = jax.jit(run.step, donate_argnums=(0,))
-        key, sub = jax.random.split(key)
-        state, _ = jstep(state, run.batch_fn(sub))       # compile + step 1
-        curve = [round(mean_loss(state), 5)]
-        t0 = time.perf_counter()
-        wall = 0.0
-        for _ in range(exp.schedule.steps - 1):
-            key, sub = jax.random.split(key)
-            state, _ = jstep(state, run.batch_fn(sub))
-            jax.block_until_ready(state)
-            wall += time.perf_counter() - t0
-            curve.append(round(mean_loss(state), 5))   # eval off the clock
-            t0 = time.perf_counter()
-        us = wall / max(exp.schedule.steps - 1, 1) * 1e6
+        m = measure_run(exp, curve=True, log=EVENTS_LOG,
+                        label="compressed_comm")
         cp = exp.compression or CompressionSpec()
         return {"edit": edit,
                 "uplink_bytes_per_elem":
                     round(uplink_bytes_per_elem(cp, block), 4),
                 "wire_bytes_per_elem":
                     round(wire_bytes_per_elem(cp, block), 4),
-                "val_loss_curve": curve,
-                "val_loss_step1": curve[0],
-                "val_loss_final": curve[-1],
-                "us_per_step": round(us, 1)}
+                "val_loss_curve": m["val_loss_curve"],
+                "val_loss_step1": m["val_loss_step1"],
+                "val_loss_final": m["val_loss_final"],
+                "us_per_step": m["us_per_step"]}
 
     policies = [
         ("exact", {}),
@@ -1185,12 +1137,27 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_kernels.json (machine-readable kernel "
                          "perf trajectory) at the repo root")
+    ap.add_argument("--events", default=None, metavar="PATH",
+                    help="mirror every result row (plus the measured-run "
+                         "build/step spans) into a repro.telemetry JSONL "
+                         "event stream at PATH")
     args = ap.parse_args()
+    global EVENTS_LOG
+    if args.events:
+        from repro.telemetry import EventLog
+        EVENTS_LOG = EventLog(args.events, kind="bench", fast=args.fast)
     print("name,us_per_call,derived")
-    for b in BENCHES:
-        if args.only and args.only not in b.__name__:
-            continue
-        b(args.fast)
+    try:
+        for b in BENCHES:
+            if args.only and args.only not in b.__name__:
+                continue
+            b(args.fast)
+        if EVENTS_LOG is not None:
+            EVENTS_LOG.emit("run_end", step=0, status="ok")
+    finally:
+        # no run_end on a crash — the summarizer reports the stream as such
+        if EVENTS_LOG is not None:
+            EVENTS_LOG.close()
     if args.json:
         if not KERNEL_JSON:    # e.g. --only excluded bench_kernels
             print("BENCH_kernels.json NOT written: bench_kernels did not "

@@ -64,6 +64,49 @@ if [[ "${1:-}" != "--bench" ]]; then
     python -m repro.launch.train \
         --experiment experiments/fedbioacc_int8_topk.json --log-every 1
 
+    # telemetry: train the committed telemetry spec with an event-stream
+    # sink, then the stream must parse, be schema-valid, carry the expected
+    # event types, reconcile every comm event's wire bytes against the
+    # analytic model rebuilt from its embedded spec, and show the STORM
+    # momentum norm trending down (the hypergradient-estimation proxy)
+    tdir="$(mktemp -d)"
+    echo "smoke-train: fedbioacc_telemetry (event stream -> validate)"
+    python -m repro.launch.train \
+        --experiment experiments/fedbioacc_telemetry.json --log-every 2 \
+        --telemetry-sink "$tdir/events.jsonl"
+    python -m repro.telemetry.validate "$tdir/events.jsonl" \
+        --expect run_start,metrics,comm,span,run_end \
+        --trend-decreasing mom_norm/u
+    python -m repro.launch.metrics "$tdir/events.jsonl" --table
+    # compressed run: ef_norm/quant_err metrics in-band, comm events billed
+    # at the compressed wire rate — reconciled against the same model
+    echo "smoke-train: fedbioacc_int8_topk + telemetry sink -> validate"
+    python -m repro.launch.train \
+        --experiment experiments/fedbioacc_int8_topk.json --log-every 2 \
+        --telemetry-sink "$tdir/events_topk.jsonl"
+    python -m repro.telemetry.validate "$tdir/events_topk.jsonl" \
+        --expect run_start,metrics,comm,run_end
+    # rollback audit trail: all-NaN senders reaching an UNSCREENED mean must
+    # roll back, exhaust the retry budget (non-zero exit), and leave
+    # rollback + retry_budget_exhausted events on the stream
+    python - "$tdir/faulty_noscreen.json" <<'PY'
+import sys
+from repro.api import Experiment
+exp = Experiment.load("experiments/fedbioacc_faulty.json").edit(**{
+    "faults.nan_rate": 1.0, "schedule.steps": 6,
+    "robustness.screen": False, "robustness.aggregator": "mean"})
+open(sys.argv[1], "w").write(exp.to_json())
+PY
+    echo "smoke-train: faulty no-screen -> rollback events (expected fail)"
+    if python -m repro.launch.train \
+        --experiment "$tdir/faulty_noscreen.json" --log-every 2 \
+        --telemetry-sink "$tdir/events_rollback.jsonl"; then
+        echo "ERROR: retry-budget run exited 0"; exit 1
+    fi
+    python -m repro.telemetry.validate "$tdir/events_rollback.jsonl" \
+        --expect rollback,retry_budget_exhausted,run_end
+    rm -rf "$tdir"
+
     # crash auto-resume: hard-kill the run mid-way (after the step-2
     # checkpoint), then the --max-restarts supervisor resumes it from the
     # atomic checkpoint and completes — the kill-mid-run drill end-to-end

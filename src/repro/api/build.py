@@ -136,7 +136,7 @@ def build(experiment: Experiment) -> Run:
         mesh=mesh_arg, overlap=ex.overlap,
         comm_every=exp.schedule.comm_every_dict or None,
         faults=exp.faults, robustness=exp.robustness,
-        compression=exp.compression,
+        compression=exp.compression, telemetry=exp.telemetry,
         **factory_kw)
 
     views = step.views if hasattr(step, "views") else (lambda s: s)

@@ -13,7 +13,8 @@ under which schedule — is a frozen dataclass tree:
     ├── ScheduleSpec       steps, lrs, cadences, hierarchy, Neumann terms
     ├── FaultSpec?         client failure injection (repro.federation.faults)
     ├── RobustnessSpec?    health screen / robust aggregator / rollback
-    └── CompressionSpec?   quantized / top-k compressed reductions (+EF)
+    ├── CompressionSpec?   quantized / top-k compressed reductions (+EF)
+    └── TelemetrySpec?     in-band metrics + structured event stream
 
 ``Experiment`` round-trips to/from JSON (:meth:`Experiment.to_json` /
 :meth:`Experiment.from_json`, versioned via ``version``), validates with
@@ -73,7 +74,10 @@ JSON schema (version 1)
       "compression":   {"quant": "bf16"|"int8"|null,        # | null
                         "topk_frac": num,       # 0 disables sparsification
                         "error_feedback": bool,
-                        "sections": [str]|null} # null = every comm'd section
+                        "sections": [str]|null},# null = every comm'd section
+      "telemetry":     {"sink": str|null,      # | null; null = driver picks
+                        "metrics": [str]|null, # null = every applicable group
+                        "trace": bool}         # wall-clock span events
     }
 
 ``faults``/``robustness`` (both optional, default null — the bit-identical
@@ -92,6 +96,16 @@ Requires ``execution.fuse_storm``; top-k additionally requires a flat
 disabled is the documented divergence row; private sections are never
 compressible.
 
+``telemetry`` (optional, default null — no event stream, no in-band
+metrics, bit-identical trajectories and unchanged jit cache keys) declares
+the observability layer: the drivers write a schema-versioned JSONL event
+stream to ``sink`` and the fused engine computes the ``metrics`` groups
+(subset of ``repro.telemetry.METRIC_GROUPS``; null = every group the other
+layers make applicable) as a side output of every step.  Explicit non-empty
+``metrics`` require ``execution.fuse_storm``; the ``"compression"`` group
+needs a compression block, the ``"health"`` group needs faults, robustness
+or a non-full sampler.
+
 Unknown keys, wrong versions, unknown algorithms/hyperparams and
 inconsistent combinations (``mesh`` without ``fuse_storm``, ``overlap``
 without ``mesh``, ``weighted`` without weights, ...) all fail with errors
@@ -107,6 +121,7 @@ from typing import Any, Optional, Tuple
 from repro.federation.compression import QUANTS, CompressionSpec
 from repro.federation.faults import AGGREGATORS, FaultSpec, RobustnessSpec
 from repro.federation.participation import SAMPLERS, ParticipationSpec
+from repro.telemetry.spec import METRIC_GROUPS, TelemetrySpec
 
 SPEC_VERSION = 1
 
@@ -234,6 +249,7 @@ class Experiment:
     faults: Optional[FaultSpec] = None
     robustness: Optional[RobustnessSpec] = None
     compression: Optional[CompressionSpec] = None
+    telemetry: Optional[TelemetrySpec] = None
     version: int = SPEC_VERSION
 
     # -- validation ---------------------------------------------------------
@@ -434,6 +450,35 @@ class Experiment:
                          f"{bad} are PRIVATE sections of "
                          f"{self.algorithm.name!r} — private state never "
                          f"enters a reduction, so it cannot be compressed")
+
+        tl = self.telemetry
+        if tl is not None:
+            if tl.sink is not None and not isinstance(tl.sink, str):
+                _err("telemetry.sink",
+                     f"{tl.sink!r} is not a path (string) or null")
+            if tl.metrics is not None:
+                unknown = [g for g in tl.metrics if g not in METRIC_GROUPS]
+                if unknown:
+                    _err("telemetry.metrics",
+                         f"unknown metric groups {unknown}; choose from "
+                         f"{METRIC_GROUPS}")
+                if tl.metrics and not ex.fuse_storm:
+                    _err("telemetry.metrics",
+                         "in-band metrics need execution.fuse_storm=true — "
+                         "they are a side output of the fused sequence-spec "
+                         "engine; use metrics=[] for an events-only stream")
+                if "compression" in tl.metrics and cp is None:
+                    _err("telemetry.metrics",
+                         "the 'compression' group needs a compression block "
+                         "— there is no EF residual or quantization error "
+                         "to report")
+                if "health" in tl.metrics and (fl is None and rb is None
+                        and self.normalize().participation.sampler
+                        == "full"):
+                    _err("telemetry.metrics",
+                         "the 'health' group needs faults, robustness or a "
+                         "non-full participation sampler — there is nothing "
+                         "to screen")
         return self
 
     # -- JSON ---------------------------------------------------------------
@@ -451,6 +496,9 @@ class Experiment:
                             if self.compression else None)
         if self.compression and self.compression.sections is not None:
             d["compression"]["sections"] = list(self.compression.sections)
+        d["telemetry"] = self.telemetry._asdict() if self.telemetry else None
+        if self.telemetry and self.telemetry.metrics is not None:
+            d["telemetry"]["metrics"] = list(self.telemetry.metrics)
         d["schedule"]["comm_every"] = self.schedule.comm_every_dict
         # version first — the one key a reader must dispatch on
         d = {"version": d.pop("version"), **d}
@@ -492,7 +540,8 @@ class Experiment:
         parts["participation"] = ParticipationSpec(**sub)
         for key, klass in (("faults", FaultSpec),
                            ("robustness", RobustnessSpec),
-                           ("compression", CompressionSpec)):
+                           ("compression", CompressionSpec),
+                           ("telemetry", TelemetrySpec)):
             sub = d.pop(key, None)
             if sub is None:
                 parts[key] = None
@@ -507,6 +556,8 @@ class Experiment:
                                 f"{sorted(unknown)} (knows {sorted(known)})")
             if sub.get("sections") is not None:
                 sub["sections"] = tuple(sub["sections"])
+            if sub.get("metrics") is not None:
+                sub["metrics"] = tuple(sub["metrics"])
             parts[key] = klass(**sub)
         if d:
             raise SpecError(f"Experiment: unknown top-level keys {sorted(d)}")
@@ -541,13 +592,15 @@ class Experiment:
                 continue
             sub = getattr(out, head)
             if sub is None and head in ("faults", "robustness",
-                                        "compression"):
+                                        "compression", "telemetry"):
                 # sweeping a guard knob on an unguarded base spec enables
                 # the layer with defaults — `edit(**{"faults.nan_rate": .1})`
                 sub = {"faults": FaultSpec, "robustness": RobustnessSpec,
-                       "compression": CompressionSpec}[head]()
+                       "compression": CompressionSpec,
+                       "telemetry": TelemetrySpec}[head]()
             if isinstance(sub, (ParticipationSpec, FaultSpec,
-                                RobustnessSpec, CompressionSpec)):
+                                RobustnessSpec, CompressionSpec,
+                                TelemetrySpec)):
                 if rest not in type(sub)._fields:
                     _err(path, "no such field")
                 # NamedTuple _replace skips the dataclasses' __post_init__

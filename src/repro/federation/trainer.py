@@ -335,6 +335,25 @@ def _compress_setup(compression, fuse_storm: bool):
     return compression
 
 
+def _telemetry_setup(telemetry, fuse_storm: bool):
+    """Pass the telemetry spec through to the engine.  The in-band metrics
+    side output reads the fused engine's flat buffers, so explicit metric
+    groups on the unfused path are rejected loudly (the same contract as
+    ``_compress_setup``); a metrics-free spec (``metrics=()``) degrades to
+    events-only on either path and costs the step nothing."""
+    if telemetry is None:
+        return None
+    metrics = getattr(telemetry, "metrics", None)
+    if not fuse_storm:
+        if metrics:
+            raise ValueError(
+                "in-band telemetry metrics require fuse_storm=True — they "
+                "are a side output of the fused sequence-spec engine; use "
+                "metrics=() for an events-only stream")
+        return None     # events-only: nothing for the engine to compute
+    return telemetry
+
+
 def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
     """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
     mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
@@ -358,21 +377,29 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
                     init_trees, storm_block, to_state,
                     part: Participation | None = None,
                     shard=None, overlap: bool = False,
-                    fault=None, robustness=None, compression=None):
+                    fault=None, robustness=None, compression=None,
+                    telemetry=None):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
                               block=storm_block, participation=part,
                               shard=shard, overlap=overlap,
                               faults=fault, robustness=robustness,
-                              compression=compression)
+                              compression=compression, telemetry=telemetry)
+    tel_on = bool(getattr(engine.step, "telemetry_groups", ()))
 
     def init(key):
         return engine.init_state(init_trees(key))
 
-    def train_step(state: FlatState, batch):
-        new = engine.step(state, batch)
-        return new, {"step": new.step}
+    if tel_on:
+        def train_step(state: FlatState, batch):
+            new, met = engine.step(state, batch)
+            met["step"] = new.step
+            return new, met
+    else:
+        def train_step(state: FlatState, batch):
+            new = engine.step(state, batch)
+            return new, {"step": new.step}
 
     def views(state: FlatState):
         vt, mt = engine.views(state)
@@ -386,6 +413,8 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.faults = fault
         fn.robustness = robustness
         fn.compression = compression
+        fn.telemetry = telemetry
+        fn.aspec = engine.aspec
     return init, train_step
 
 
@@ -405,7 +434,8 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
-                           faults=None, robustness=None, compression=None):
+                           faults=None, robustness=None, compression=None,
+                           telemetry=None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
@@ -417,6 +447,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
     comp = _compress_setup(compression, fuse_storm)
+    tel = _telemetry_setup(telemetry, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -424,7 +455,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp)
+                               fault, robust, comp, tel)
 
     def init(key):
         tr = init_trees(key)
@@ -468,7 +499,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               participation: ParticipationSpec | None = None,
                               mesh=None, overlap: bool = False,
                               comm_every: dict | None = None,
-                              faults=None, robustness=None, compression=None):
+                              faults=None, robustness=None, compression=None,
+                              telemetry=None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -502,6 +534,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
     comp = _compress_setup(compression, fuse_storm)
+    tel = _telemetry_setup(telemetry, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -510,7 +543,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp)
+                               fault, robust, comp, tel)
 
     def init(key):
         tr = init_trees(key)
@@ -580,7 +613,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  participation: ParticipationSpec | None = None,
                                  mesh=None, overlap: bool = False,
                                  comm_every: dict | None = None,
-                                 faults=None, robustness=None, compression=None):
+                                 faults=None, robustness=None, compression=None,
+                                 telemetry=None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -596,6 +630,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
     comp = _compress_setup(compression, fuse_storm)
+    tel = _telemetry_setup(telemetry, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -605,7 +640,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp)
+                               fault, robust, comp, tel)
 
     def init(key):
         tr = init_trees(key)
@@ -647,7 +682,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     participation: ParticipationSpec | None = None,
                                     mesh=None, overlap: bool = False,
                                     comm_every: dict | None = None,
-                                    faults=None, robustness=None, compression=None):
+                                    faults=None, robustness=None, compression=None,
+                                    telemetry=None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE — faults/robustness touch only the sent
     x/ν rows; private heads are never corrupted or screened)."""
@@ -662,6 +698,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
     comp = _compress_setup(compression, fuse_storm)
+    tel = _telemetry_setup(telemetry, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -670,7 +707,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp)
+                               fault, robust, comp, tel)
 
     def init(key):
         tr = init_trees(key)
@@ -726,7 +763,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            participation: ParticipationSpec | None = None,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
-                           faults=None, robustness=None, compression=None):
+                           faults=None, robustness=None, compression=None,
+                           telemetry=None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -753,6 +791,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     shard = _shard_setup(mesh, overlap, fuse_storm)
     fault, robust = _fault_setup(cfg, faults, robustness, fuse_storm)
     comp = _compress_setup(compression, fuse_storm)
+    tel = _telemetry_setup(telemetry, fuse_storm)
 
     if fuse_storm:
         def to_state(vt, mt, step):
@@ -760,7 +799,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp)
+                               fault, robust, comp, tel)
 
     def init(key):
         tr = init_trees(key)

@@ -339,6 +339,27 @@ def run_experiment(exp_path: str, *, keep_hlo: bool = False) -> Dict[str, Any]:
         else:
             rec["compression_check"] = _check_compressed_collectives(
                 exp, run.step.spec, rec["collectives"])
+    if exp.telemetry is not None:
+        # the dryrun's side of the bytes reconciliation: the MEASURED
+        # per-dtype collective bytes of the compiled step next to the
+        # analytic per-round model the train driver's `comm` events carry
+        from repro.telemetry import EventLog, comm_plan, round_bytes
+        sink = exp.telemetry.sink or "dryrun_events.jsonl"
+        with EventLog(sink, experiment=json.loads(exp.to_json()),
+                      kind="dryrun") as log:
+            log.emit("hlo_collectives",
+                     bytes_by_dtype=rec["collectives"]["bytes_by_dtype"],
+                     counts=rec["collectives"].get("counts"),
+                     sharded=mesh is not None)
+            flat_spec = getattr(run.step, "spec", None)
+            aspec = getattr(run.step, "aspec", None)
+            if flat_spec is not None and aspec is not None:
+                plan = comm_plan(flat_spec, aspec, exp.compression)
+                rb = round_bytes(plan, 1) if plan is not None else None
+                if rb is not None:
+                    log.emit("comm", step=exp.schedule.local_steps,
+                             retry=0, **rb)
+        rec["telemetry_sink"] = sink
     return rec
 
 

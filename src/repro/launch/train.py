@@ -77,6 +77,7 @@ _FLAG_PATHS = {
     "availability_rate": "participation.availability_rate",
     "availability_trace": "participation.trace_path",
     "stale_discount": "participation.stale_discount",
+    "telemetry_sink": "telemetry.sink",
 }
 
 
@@ -165,6 +166,10 @@ def _parser() -> argparse.ArgumentParser:
                          "psum_scatter + all_gather all-reduce decomposition "
                          "instead of one psum (the form XLA can software-"
                          "pipeline with compute)")
+    ap.add_argument("--telemetry-sink", default=S, metavar="EVENTS.jsonl",
+                    help="write the structured event stream here (a spec "
+                         "edit: enables experiment.telemetry when absent; "
+                         "see repro.telemetry)")
     # driver-only knobs (never part of the spec / trajectory)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -337,12 +342,35 @@ def main(argv=None):
         raise SystemExit(str(e))
     exp = run.spec
 
+    # one code path for everything the driver reports: every line goes
+    # through the event stream (when experiment.telemetry is set) and
+    # stdout stays a thin render of the same records
+    log = None
+    if exp.telemetry is not None:
+        from repro.telemetry import EventLog
+        # a resumed run appends its segment to the checkpoint dir's stream
+        ckdir = ns.ckpt_dir or ns.resume
+        sink = exp.telemetry.sink or (
+            os.path.join(ckdir, "events.jsonl") if ckdir
+            else "events.jsonl")
+        log = EventLog(sink, experiment=json.loads(exp.to_json()),
+                       start_step=start)
+    tracing = log is not None and exp.telemetry.trace
+
+    def emit(event, render=None, **fields):
+        if log is not None:
+            log.emit(event, **fields)
+        if render is not None:
+            print(render, flush=True)
+
     if run.mesh is not None:
         axes = dict(run.mesh.shape)
-        print(f"mesh: data={axes['data']} model={axes['model']} "
-              f"({len(run.mesh.devices.flat)} devices)"
-              + (" overlap=on" if exp.execution.overlap else "")
-              + (" comm=psum_scatter" if exp.execution.scatter_comm else ""))
+        banner = (f"mesh: data={axes['data']} model={axes['model']} "
+                  f"({len(run.mesh.devices.flat)} devices)"
+                  + (" overlap=on" if exp.execution.overlap else "")
+                  + (" comm=psum_scatter" if exp.execution.scatter_comm
+                     else ""))
+        emit("note", render=banner, text=banner)
     pspec = run.participation
     if pspec is not None:
         M = exp.problem.num_clients
@@ -352,7 +380,9 @@ def main(argv=None):
             detail = f"rate={pspec.availability_rate}"
         else:
             detail = f"m={pspec.clients_per_round or M}/{M}"
-        print(f"participation: {pspec.sampler} {detail} seed={pspec.seed}")
+        banner = (f"participation: {pspec.sampler} {detail} "
+                  f"seed={pspec.seed}")
+        emit("note", render=banner, text=banner)
 
     guard = (RollbackGuard(exp.robustness) if exp.robustness is not None
              else None)
@@ -373,7 +403,8 @@ def main(argv=None):
                 key, _ = jax.random.split(key)
         if guard is not None:
             guard.retries = int(md.get("retries", 0))
-        print(f"resumed from {ns.resume} @ step {start}")
+        banner = f"resumed from {ns.resume} @ step {start}"
+        emit("note", render=banner, text=banner)
     else:
         state = run.init(key)
 
@@ -381,8 +412,36 @@ def main(argv=None):
     n_params = sum(int(np.prod(s.shape)) for s in
                    jax.tree.leaves(jax.eval_shape(run.model.init,
                                                   jax.random.PRNGKey(0))))
-    print(f"arch={run.model_cfg.name} family={run.model_cfg.family} "
-          f"algo={exp.algorithm.name} params={n_params:,}")
+    banner = (f"arch={run.model_cfg.name} family={run.model_cfg.family} "
+              f"algo={exp.algorithm.name} params={n_params:,}")
+    emit("note", render=banner, text=banner)
+
+    # analytic per-round comm-bytes plan (fused engine only): every comm
+    # round emits one reconcilable `comm` event — `python -m
+    # repro.telemetry.validate` rebuilds the byte model from the stream's
+    # embedded experiment and checks bytes_wire against it
+    plan = None
+    if log is not None:
+        flat_spec = getattr(run.step, "spec", None)
+        aspec = getattr(run.step, "aspec", None)
+        if flat_spec is not None and aspec is not None:
+            from repro.telemetry import comm_plan
+            plan = comm_plan(flat_spec, aspec, exp.compression)
+
+    def _host_metrics(metrics) -> dict:
+        """The step's in-band metrics side output as JSON scalars/lists
+        (the `screened` verdict vector is consumed separately)."""
+        out = {}
+        for k, v in metrics.items():
+            if k in ("step", "screened"):
+                continue
+            a = np.asarray(v)
+            out[k] = (round(float(a), 8) if a.ndim == 0
+                      else [round(float(x), 8) for x in a.reshape(-1)])
+        return out
+
+    local_steps = exp.schedule.local_steps
+    retry = lambda: guard.retries if guard is not None else 0
     t0 = time.time()
     history = []
     t = start
@@ -390,8 +449,32 @@ def main(argv=None):
         key, sub = jax.random.split(key)
         state, metrics = jstep(state, run.place_batch(run.batch_fn(sub)))
         t += 1
-        if t % ns.log_every == 0 or t == start + 1:
-            l = run.eval_fn(state)
+        is_comm = t % local_steps == 0
+        is_log = t % ns.log_every == 0 or t == start + 1
+        if log is not None and (is_comm or is_log) and len(metrics) > 1:
+            # in-band metrics: host-converted at comm/log steps only, so
+            # the dispatch stream stays as deep as the telemetry-free loop
+            emit("metrics", step=t, retry=retry(), **_host_metrics(metrics))
+            screened = metrics.get("screened")
+            if (is_comm and screened is not None
+                    and exp.robustness is not None
+                    and exp.robustness.screen):
+                idx = np.flatnonzero(np.asarray(screened) > 0)
+                if idx.size:
+                    emit("clients_screened", step=t, round=t // local_steps,
+                         retry=retry(), clients=[int(i) for i in idx])
+        if plan is not None and is_comm:
+            from repro.telemetry import round_bytes
+            rb_ev = round_bytes(plan, t // local_steps)
+            if rb_ev is not None:
+                emit("comm", step=t, retry=retry(), **rb_ev)
+        if is_log:
+            if tracing:
+                from repro.telemetry import phase
+                with phase("eval", log, step=t):
+                    l = run.eval_fn(state)
+            else:
+                l = run.eval_fn(state)
             if guard is not None:
                 # host-copied snapshot: the live state's buffers are donated
                 # to the next jstep call, a stored alias would be invalid
@@ -399,18 +482,30 @@ def main(argv=None):
                 try:
                     rb = guard.observe(t, snap, key, l)
                 except RollbackError as e:
+                    emit("retry_budget_exhausted", step=t, retry=retry(),
+                         bad_loss=float(l))
+                    if log is not None:
+                        log.emit("run_end", step=t,
+                                 status="retry_budget_exhausted")
+                        log.close()
                     _diagnostic_checkpoint(ns, state, t, exp)
                     raise SystemExit(f"round {t}: {e}")
                 if rb is not None:
+                    bad = l
                     t, snap, key = rb
                     state = jax.tree.map(jnp.asarray, snap)
                     if run.shardings(state) is not None:
                         state = jax.device_put(state, run.shardings(state))
-                    print(json.dumps(
-                        {"rollback_to": t, "retry": guard.retries,
-                         "bad_loss": l}), flush=True)
+                    emit("rollback",
+                         render=json.dumps(
+                             {"rollback_to": t, "retry": guard.retries,
+                              "bad_loss": bad}),
+                         step=t, retry=guard.retries, bad_loss=float(bad))
                     continue
             elif not np.isfinite(l):
+                if log is not None:
+                    log.emit("run_end", step=t, status="diverged")
+                    log.close()
                 _diagnostic_checkpoint(ns, state, t, exp)
                 raise SystemExit(
                     f"non-finite eval loss ({l}) at round {t}: training "
@@ -419,7 +514,7 @@ def main(argv=None):
                     f"the learning rates")
             history.append({"step": t, "val_loss": l,
                             "wall_s": round(time.time() - t0, 1)})
-            print(json.dumps(history[-1]), flush=True)
+            emit("metrics", render=json.dumps(history[-1]), **history[-1])
         if ns.ckpt_dir and t % ns.ckpt_every == 0:
             # the RAW state (flat buffers included) + the embedded spec:
             # --resume rebuilds the structure from the spec alone.  The raw
@@ -428,12 +523,17 @@ def main(argv=None):
                 ns.ckpt_dir, state,
                 {"step": t, "arch": run.model_cfg.name,
                  "key": np.asarray(key).tolist(),
-                 "retries": guard.retries if guard is not None else 0},
+                 "retries": retry()},
                 experiment=exp)
-            print(f"checkpoint @ step {t} -> {ns.ckpt_dir}")
+            emit("checkpoint", render=f"checkpoint @ step {t} -> "
+                                      f"{ns.ckpt_dir}",
+                 step=t, path=ns.ckpt_dir)
         if ns.crash_at_step and start == 0 and t == ns.crash_at_step:
             print(f"crash-at-step: hard exit after step {t}", flush=True)
             os._exit(17)
+    if log is not None:
+        log.emit("run_end", step=t, status="ok")
+        log.close()
     assert not any(jnp.isnan(jnp.asarray(h["val_loss"])) for h in history)
     return history
 

@@ -1326,3 +1326,92 @@ def _client_mean_masked_sharded(spec: FlatSpec, bufs, modes, num_groups,
     if compress is None:
         return tuple(out)
     return tuple(out), (tuple(ef_out) if has_ef else ())
+
+
+# ---------------------------------------------------------------------------
+# Telemetry metrics (read-only side outputs — never touch a trajectory)
+# ---------------------------------------------------------------------------
+
+def _section_cols(spec: FlatSpec, grp: _Group) -> dict:
+    """Absolute column ranges of every section in one (possibly shard-major)
+    buffer: ``{section_index: [(start, stop), ...]}``.  Extents cover one
+    shard chunk, so a sharded layout repeats them at every chunk offset."""
+    chunk = grp.padded // spec.shards
+    out: dict = {}
+    for s, a, b in grp.extents:
+        for j in range(spec.shards):
+            out.setdefault(s, []).append((j * chunk + a, j * chunk + b))
+    return out
+
+
+def section_norms(spec: FlatSpec, bufs, *, mask=None, prefix="norm") -> dict:
+    """Per-section l2 norms of flat [M, N] buffers (telemetry side output):
+    ``{"<prefix>/<section>": scalar}``.  ``mask`` [M] restricts the sum to
+    participant rows (selected with ``where`` — a zero row never multiplies
+    a NaN).  Section padding is zero by construction and contributes
+    nothing; runs at the jit level outside ``shard_map``, so sharded
+    buffers reduce through XLA's own partitioning."""
+    names = spec.sections or ("all",)
+    sq: dict = {}
+    for grp, buf in zip(spec.groups, bufs):
+        x = buf.astype(jnp.float32)
+        if mask is not None:
+            mcol = (mask > 0).reshape(mask.shape + (1,) * (x.ndim - 1))
+            x = jnp.where(mcol, x, 0.0)
+        for s, runs in _section_cols(spec, grp).items():
+            for a, b in runs:
+                sq[s] = sq.get(s, 0.0) + jnp.sum(jnp.square(x[..., a:b]))
+    return {f"{prefix}/{names[s]}": jnp.sqrt(v) for s, v in sorted(sq.items())}
+
+
+def section_drift(spec: FlatSpec, bufs, *, mask=None,
+                  prefix="drift") -> dict:
+    """Per-section client-drift dispersion (telemetry side output): the rms
+    distance of participant rows to the participants' mean row — the
+    non-IID heterogeneity term, measured on the LOCAL iterates before
+    averaging.  Same masking/sharding posture as :func:`section_norms`."""
+    names = spec.sections or ("all",)
+    M = bufs[0].shape[0]
+    w = (jnp.ones((M,), jnp.float32) if mask is None
+         else (mask > 0).astype(jnp.float32))
+    cnt = jnp.maximum(jnp.sum(w), 1.0)
+    wcol = w[:, None]
+    sq: dict = {}
+    for grp, buf in zip(spec.groups, bufs):
+        x = jnp.where(wcol > 0, buf.astype(jnp.float32), 0.0)
+        for s, runs in _section_cols(spec, grp).items():
+            for a, b in runs:
+                seg = x[..., a:b]
+                m = jnp.sum(seg * wcol, axis=0, keepdims=True) / cnt
+                sq[s] = sq.get(s, 0.0) + jnp.sum(
+                    jnp.square(seg - m) * wcol)
+    return {f"{prefix}/{names[s]}": jnp.sqrt(v / cnt)
+            for s, v in sorted(sq.items())}
+
+
+def quant_roundtrip_err(bufs, block: int, quant) -> jnp.ndarray:
+    """l2 norm of the quantization round-trip error over ``bufs`` — the
+    value error the next compressed send of these buffers would incur
+    (telemetry side output; always the jnp lowering, which is bit-identical
+    to the Pallas pack/unpack kernels)."""
+    sq = 0.0
+    for b in bufs:
+        x = b.astype(jnp.float32)
+        d = _quant_dequant(x, block, quant, "jnp", False) - x
+        sq = sq + jnp.sum(jnp.square(d))
+    return jnp.sqrt(sq)
+
+
+def health_screen(spec: FlatSpec, bufs, mask, corrupt,
+                  robust: RobustCfg) -> jnp.ndarray:
+    """Recomputed health-screen verdicts for telemetry: [M] f32, 1 where a
+    participant would FAIL the screen on what it sends this round.  The
+    non-finite component reproduces the reduction's screen exactly; the
+    z-score is taken over whole-row norms rather than per section run (an
+    audit approximation — the guarded reduction itself is untouched)."""
+    x = jnp.concatenate([b.astype(jnp.float32) for b in bufs], axis=-1)
+    x = _corrupt_rows(x, corrupt)
+    M = x.shape[0]
+    p = jnp.ones((M,), bool) if mask is None else mask > 0
+    h = _health_mask(x, p, robust)
+    return p.astype(jnp.float32) * (1.0 - h)

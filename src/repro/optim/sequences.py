@@ -466,7 +466,8 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 block: int | None = None, participation=None,
                 shard: flat.ShardCtx | None = None,
                 overlap: bool = False, faults=None,
-                robustness=None, compression=None) -> Engine:
+                robustness=None, compression=None,
+                telemetry=None) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -510,6 +511,15 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     errors, no silent fallback): compression with faults/robustness, and
     top-k with the hierarchical grouped mean (``cfg.hierarchy_period > 0``)
     — plain quantization DOES compose with the grouped mean.
+
+    ``telemetry``: any object carrying a ``.metrics`` field (e.g. a
+    ``telemetry.TelemetrySpec``) — the step additionally returns an
+    in-band metrics dict computed from the already-materialized flat
+    buffers (per-section update/momentum norms, client-drift dispersion,
+    compression error, health verdicts — see ``repro.telemetry.spec``).
+    ``None`` (the default) keeps ``step(state, batch) -> state`` with the
+    LITERAL pre-telemetry code path: trajectories, jit cache keys and
+    state structures are bit-identical to a telemetry-free build.
     """
     rcfg = None
     if robustness is not None:
@@ -585,6 +595,25 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     stale_alpha = effective_staleness(aspec, part)
     discounted = any(a != 1.0 for a in stale_alpha)
 
+    tel_groups = ()
+    if telemetry is not None:
+        from repro.telemetry.spec import resolve_metric_groups
+        tel_groups = resolve_metric_groups(
+            getattr(telemetry, "metrics", None),
+            compressed=ccfg is not None,
+            guarded=faults is not None or rcfg is not None,
+            sampled=part is not None)
+        if "compression" in tel_groups and ccfg is None:
+            raise ValueError(
+                "telemetry metrics group 'compression' needs compression= "
+                "— there is no EF residual or quantization error to report")
+        if "health" in tel_groups and (part is None and faults is None
+                                       and rcfg is None):
+            raise ValueError(
+                "telemetry metrics group 'health' needs participation "
+                "sampling, faults= or robustness= — there is nothing to "
+                "screen")
+
     def _flatten_grads(gdict):
         return flat.flatten_tree(spec, {s: gdict[s] for s in sections},
                                  batch_dims=1, dtype=jnp.float32)
@@ -615,6 +644,47 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         if part is None:
             return state.stale
         return advance_stale(cfg, state.step, mask, state.stale)
+
+    def _tel_metrics(state: FlatState, new: FlatState, mask, corrupt,
+                     local_vars) -> dict:
+        """In-band metrics of one step, read off the already-materialized
+        flat buffers (``tel_groups`` is a static Python value, so with
+        telemetry off this is never traced and the step's jaxpr is the
+        pre-telemetry one).  ``local_vars`` are the round's LOCAL
+        (pre-reduction) iterates — what drift measures."""
+        m = {}
+        if "norms" in tel_groups:
+            diff = tuple(n - o for n, o in zip(new.vars, state.vars))
+            m.update(flat.section_norms(spec, diff, mask=mask,
+                                        prefix="upd_norm"))
+            if new.mom:
+                m.update(flat.section_norms(spec, new.mom, mask=mask,
+                                            prefix="mom_norm"))
+        if "drift" in tel_groups:
+            m.update(flat.section_drift(spec, local_vars, mask=mask))
+        if "compression" in tel_groups:
+            if new.ef:
+                efv, _ = new.ef
+                m.update(flat.section_norms(spec, efv, prefix="ef_norm"))
+            if ccfg.quant is not None:
+                m["quant_err"] = flat.quant_roundtrip_err(
+                    local_vars, spec.groups[0].block, ccfg.quant)
+        if "health" in tel_groups:
+            if mask is not None:
+                m["participants"] = jnp.sum((mask > 0).astype(jnp.float32))
+            if part is not None:
+                m["stale_hist"] = jnp.sum(
+                    jax.nn.one_hot(jnp.clip(new.stale, 0, 7), 8), axis=0)
+            if corrupt is not None:
+                nan, byz, _ = corrupt
+                m["injected_nan"] = jnp.sum(
+                    jnp.asarray(nan, jnp.float32))
+                m["injected_byz"] = jnp.sum(
+                    jnp.asarray(byz, jnp.float32))
+            if rcfg is not None:
+                m["screened"] = flat.health_screen(spec, local_vars, mask,
+                                                   corrupt, rcfg)
+        return m
 
     def state_shardings(state: FlatState):
         """NamedSharding pytree for ``state`` (None without a mesh): [M, N]
@@ -724,9 +794,12 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             mom_b, efm = comm_buffers(spec, cfg, t, mom_b, policies,
                                       weights=wts, comm_every=cadence,
                                       shard=shard, compress=ccfg, ef=efm)
-        return state._replace(vars=vars_c, mom=mom_b, step=t + 1,
-                              stale=_next_stale(state, mask),
-                              ef=(efv, efm) if state.ef else ())
+        new = state._replace(vars=vars_c, mom=mom_b, step=t + 1,
+                             stale=_next_stale(state, mask),
+                             ef=(efv, efm) if state.ef else ())
+        if not tel_groups:
+            return new
+        return new, _tel_metrics(state, new, mask, corrupt, vars_b)
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
@@ -755,6 +828,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             vars_b = flat.sgd_step(spec, state.vars, g, lrs, mask=mask,
                                    shard=shard)
             mom_b = ()
+        vars_local = vars_b         # pre-reduction local iterates (drift)
         if ccfg is None:
             vars_b = comm_buffers(spec, cfg, t, vars_b, policies,
                                   weights=wts, comm_every=cadence,
@@ -763,11 +837,17 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             vars_b, efv = comm_buffers(spec, cfg, t, vars_b, policies,
                                        weights=wts, comm_every=cadence,
                                        shard=shard, compress=ccfg, ef=efv)
-        return state._replace(vars=vars_b, mom=mom_b, step=t + 1,
-                              stale=_next_stale(state, mask),
-                              ef=(efv, efm) if state.ef else ())
+        new = state._replace(vars=vars_b, mom=mom_b, step=t + 1,
+                             stale=_next_stale(state, mask),
+                             ef=(efv, efm) if state.ef else ())
+        if not tel_groups:
+            return new
+        return new, _tel_metrics(state, new, mask, corrupt, vars_local)
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
+    # what the step actually computes in-band (() = bare-state contract) —
+    # the trainer wrapper branches on this, not on telemetry's presence
+    step.telemetry_groups = tel_groups
 
     def views(state: FlatState):
         vt = flat.unflatten_tree(spec, state.vars)
