@@ -105,6 +105,16 @@ PY
     fi
     python -m repro.telemetry.validate "$tdir/events_rollback.jsonl" \
         --expect rollback,retry_budget_exhausted,run_end
+    # stragglers: elastic rounds (deadline + quorum + over-provisioned
+    # uniform sampling) from the committed straggler spec — the stream must
+    # carry deadline events and pass the straggler invariants (arrivals >=
+    # quorum on every accepted round, per-segment rounds increasing)
+    echo "smoke-train: fedbioacc_straggler (elastic rounds -> validate)"
+    python -m repro.launch.train \
+        --experiment experiments/fedbioacc_straggler.json --log-every 2 \
+        --telemetry-sink "$tdir/events_straggler.jsonl"
+    python -m repro.telemetry.validate "$tdir/events_straggler.jsonl" \
+        --expect run_start,metrics,deadline,run_end
     rm -rf "$tdir"
 
     # crash auto-resume: hard-kill the run mid-way (after the step-2

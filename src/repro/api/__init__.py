@@ -25,4 +25,5 @@ from repro.api.spec import (SPEC_VERSION, AlgorithmSpec,  # noqa: F401
 from repro.federation.faults import (FaultSpec, RobustnessSpec,  # noqa: F401
                                      RollbackError, RollbackGuard)
 from repro.federation.participation import ParticipationSpec  # noqa: F401
+from repro.federation.stragglers import StragglerSpec  # noqa: F401
 from repro.telemetry.spec import TelemetrySpec  # noqa: F401

@@ -137,6 +137,7 @@ def build(experiment: Experiment) -> Run:
         comm_every=exp.schedule.comm_every_dict or None,
         faults=exp.faults, robustness=exp.robustness,
         compression=exp.compression, telemetry=exp.telemetry,
+        stragglers=exp.stragglers,
         **factory_kw)
 
     views = step.views if hasattr(step, "views") else (lambda s: s)

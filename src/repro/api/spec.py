@@ -14,7 +14,8 @@ under which schedule — is a frozen dataclass tree:
     ├── FaultSpec?         client failure injection (repro.federation.faults)
     ├── RobustnessSpec?    health screen / robust aggregator / rollback
     ├── CompressionSpec?   quantized / top-k compressed reductions (+EF)
-    └── TelemetrySpec?     in-band metrics + structured event stream
+    ├── TelemetrySpec?     in-band metrics + structured event stream
+    └── StragglerSpec?     deadline-driven elastic rounds (stragglers)
 
 ``Experiment`` round-trips to/from JSON (:meth:`Experiment.to_json` /
 :meth:`Experiment.from_json`, versioned via ``version``), validates with
@@ -77,7 +78,14 @@ JSON schema (version 1)
                         "sections": [str]|null},# null = every comm'd section
       "telemetry":     {"sink": str|null,      # | null; null = driver picks
                         "metrics": [str]|null, # null = every applicable group
-                        "trace": bool}         # wall-clock span events
+                        "trace": bool},        # wall-clock span events
+      "stragglers":    {"base_time": num, "tail": num,          # | null
+                        "deadline": num, "over_provision": int,
+                        "quorum": num,          # fraction of sampled clients
+                        "late_policy": "drop"|"carry"|"cancel",
+                        "backoff": num, "max_extensions": int,
+                        "target_percentile": num, "adapt_rate": num,
+                        "seed": int, "start_round": int}
     }
 
 ``faults``/``robustness`` (both optional, default null — the bit-identical
@@ -106,6 +114,16 @@ layers make applicable) as a side output of every step.  Explicit non-empty
 needs a compression block, the ``"health"`` group needs faults, robustness
 or a non-full sampler.
 
+``stragglers`` (optional, default null — synchronous rounds,
+bit-identical) declares the elastic-round layer: deterministic
+per-(round, client) lognormal compute times, deadline-driven arrivals-only
+aggregation with over-provisioned sampling, a quorum floor with capped
+deadline backoff, a late-arrival policy (drop / carry / cancel) and the
+adaptive deadline EMA — see ``repro.federation.stragglers``.  Requires
+``execution.fuse_storm`` and a flat (non-hierarchical) schedule;
+``over_provision > 0`` needs a counted (uniform/weighted) sampler.
+Composes with faults/robustness and with compression.
+
 Unknown keys, wrong versions, unknown algorithms/hyperparams and
 inconsistent combinations (``mesh`` without ``fuse_storm``, ``overlap``
 without ``mesh``, ``weighted`` without weights, ...) all fail with errors
@@ -121,6 +139,7 @@ from typing import Any, Optional, Tuple
 from repro.federation.compression import QUANTS, CompressionSpec
 from repro.federation.faults import AGGREGATORS, FaultSpec, RobustnessSpec
 from repro.federation.participation import SAMPLERS, ParticipationSpec
+from repro.federation.stragglers import LATE_POLICIES, StragglerSpec
 from repro.telemetry.spec import METRIC_GROUPS, TelemetrySpec
 
 SPEC_VERSION = 1
@@ -250,6 +269,7 @@ class Experiment:
     robustness: Optional[RobustnessSpec] = None
     compression: Optional[CompressionSpec] = None
     telemetry: Optional[TelemetrySpec] = None
+    stragglers: Optional[StragglerSpec] = None
     version: int = SPEC_VERSION
 
     # -- validation ---------------------------------------------------------
@@ -479,6 +499,62 @@ class Experiment:
                          "the 'health' group needs faults, robustness or a "
                          "non-full participation sampler — there is nothing "
                          "to screen")
+                if "stragglers" in tl.metrics and self.stragglers is None:
+                    _err("telemetry.metrics",
+                         "the 'stragglers' group needs a stragglers block — "
+                         "there is no deadline or arrival set to report")
+        sg = self.stragglers
+        if sg is not None:
+            if not ex.fuse_storm:
+                _err("stragglers",
+                     "needs execution.fuse_storm=true — deadline-driven "
+                     "elastic rounds are a feature of the fused "
+                     "sequence-spec engine")
+            if sch.hierarchy_period > 0:
+                _err("stragglers",
+                     "does not compose with the hierarchical grouped mean "
+                     "(schedule.hierarchy_period > 0) — the deadline/quorum "
+                     "decision is global; set hierarchy_period=0")
+            if sg.late_policy not in LATE_POLICIES:
+                _err("stragglers.late_policy",
+                     f"unknown policy {sg.late_policy!r}; choose from "
+                     f"{LATE_POLICIES}")
+            if not float(sg.base_time) > 0.0:
+                _err("stragglers.base_time", f"{sg.base_time} must be > 0")
+            if float(sg.tail) < 0.0:
+                _err("stragglers.tail", f"{sg.tail} must be >= 0")
+            if not float(sg.deadline) > 0.0:
+                _err("stragglers.deadline", f"{sg.deadline} must be > 0 "
+                     f"(simulated seconds)")
+            if int(sg.over_provision) < 0:
+                _err("stragglers.over_provision",
+                     f"{sg.over_provision} must be >= 0")
+            if int(sg.over_provision) > 0 and (
+                    self.normalize().participation.sampler
+                    not in ("uniform", "weighted")):
+                _err("stragglers.over_provision",
+                     "needs a counted (uniform/weighted) m-of-M sampler to "
+                     "request extra clients — the full/trace samplers do "
+                     "not take a count; set over_provision=0 or switch "
+                     "samplers")
+            if not 0.0 < float(sg.quorum) <= 1.0:
+                _err("stragglers.quorum",
+                     f"{sg.quorum} must be in (0, 1] — a fraction of the "
+                     f"round's sampled clients")
+            if float(sg.backoff) < 1.0:
+                _err("stragglers.backoff", f"{sg.backoff} must be >= 1")
+            if int(sg.max_extensions) < 0:
+                _err("stragglers.max_extensions",
+                     f"{sg.max_extensions} must be >= 0")
+            if not 0.0 < float(sg.target_percentile) <= 1.0:
+                _err("stragglers.target_percentile",
+                     f"{sg.target_percentile} must be in (0, 1]")
+            if not 0.0 <= float(sg.adapt_rate) <= 1.0:
+                _err("stragglers.adapt_rate",
+                     f"{sg.adapt_rate} must be in [0, 1]")
+            if int(sg.start_round) < 0:
+                _err("stragglers.start_round",
+                     f"{sg.start_round} must be >= 0")
         return self
 
     # -- JSON ---------------------------------------------------------------
@@ -499,6 +575,8 @@ class Experiment:
         d["telemetry"] = self.telemetry._asdict() if self.telemetry else None
         if self.telemetry and self.telemetry.metrics is not None:
             d["telemetry"]["metrics"] = list(self.telemetry.metrics)
+        d["stragglers"] = (self.stragglers._asdict()
+                           if self.stragglers else None)
         d["schedule"]["comm_every"] = self.schedule.comm_every_dict
         # version first — the one key a reader must dispatch on
         d = {"version": d.pop("version"), **d}
@@ -541,7 +619,8 @@ class Experiment:
         for key, klass in (("faults", FaultSpec),
                            ("robustness", RobustnessSpec),
                            ("compression", CompressionSpec),
-                           ("telemetry", TelemetrySpec)):
+                           ("telemetry", TelemetrySpec),
+                           ("stragglers", StragglerSpec)):
             sub = d.pop(key, None)
             if sub is None:
                 parts[key] = None
@@ -592,15 +671,17 @@ class Experiment:
                 continue
             sub = getattr(out, head)
             if sub is None and head in ("faults", "robustness",
-                                        "compression", "telemetry"):
+                                        "compression", "telemetry",
+                                        "stragglers"):
                 # sweeping a guard knob on an unguarded base spec enables
                 # the layer with defaults — `edit(**{"faults.nan_rate": .1})`
                 sub = {"faults": FaultSpec, "robustness": RobustnessSpec,
                        "compression": CompressionSpec,
-                       "telemetry": TelemetrySpec}[head]()
+                       "telemetry": TelemetrySpec,
+                       "stragglers": StragglerSpec}[head]()
             if isinstance(sub, (ParticipationSpec, FaultSpec,
                                 RobustnessSpec, CompressionSpec,
-                                TelemetrySpec)):
+                                TelemetrySpec, StragglerSpec)):
                 if rest not in type(sub)._fields:
                     _err(path, "no such field")
                 # NamedTuple _replace skips the dataclasses' __post_init__

@@ -23,6 +23,7 @@ via ``jax.eval_shape(run.init, ...)``) with zero re-specified flags
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from typing import Any, Dict, Optional
@@ -32,6 +33,20 @@ import jax.numpy as jnp
 import numpy as np
 
 EXPERIMENT_FILE = "experiment.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An arrays file's bytes do not match the sha256 digest recorded in
+    the manifest — the checkpoint was corrupted at rest (bit rot, a torn
+    copy, tampering).  The message names the corrupt file."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as fh:
+        for chunk in iter(lambda: fh.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _path_str(path) -> str:
@@ -71,10 +86,13 @@ def save_checkpoint(ckpt_dir: str, tree: Any, metadata: Optional[Dict] = None,
     # token-named arrays file first, manifest (the commit point) last; prune
     # superseded arrays files only after the manifest points at the new one
     arrays_name = f"arrays-{int((metadata or {}).get('step', 0)):08d}.npz"
-    _atomic_replace(os.path.join(ckpt_dir, arrays_name),
-                    lambda fh: np.savez(fh, **arrays))
+    arrays_path = os.path.join(ckpt_dir, arrays_name)
+    _atomic_replace(arrays_path, lambda fh: np.savez(fh, **arrays))
+    # integrity digest of the *committed* bytes: load verifies it before
+    # deserializing, so silent at-rest corruption fails loudly by file name
     manifest = {"leaves": manifest_leaves, "metadata": metadata or {},
-                "treedef": str(treedef), "arrays": arrays_name}
+                "treedef": str(treedef), "arrays": arrays_name,
+                "sha256": {arrays_name: _sha256(arrays_path)}}
     _atomic_replace(os.path.join(ckpt_dir, "manifest.json"),
                     lambda fh: fh.write(json.dumps(manifest, indent=1)
                                         .encode()))
@@ -89,7 +107,19 @@ def load_checkpoint(ckpt_dir: str, like: Any) -> Any:
     with open(os.path.join(ckpt_dir, "manifest.json")) as fh:
         manifest = json.load(fh)
     arrays_name = manifest.get("arrays", "arrays.npz")
-    with np.load(os.path.join(ckpt_dir, arrays_name)) as data:
+    arrays_path = os.path.join(ckpt_dir, arrays_name)
+    # pre-digest manifests (older checkpoints) skip the check
+    want = (manifest.get("sha256") or {}).get(arrays_name)
+    if want is not None:
+        got = _sha256(arrays_path)
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checkpoint arrays file {arrays_path} is corrupt: sha256 "
+                f"{got[:16]}... does not match the manifest's "
+                f"{want[:16]}... — the file was damaged at rest (bit rot, "
+                f"torn copy, tampering); restore it from a replica or "
+                f"delete the checkpoint and restart from an earlier one")
+    with np.load(arrays_path) as data:
         leaves, treedef = jax.tree_util.tree_flatten(like)
         if len(leaves) != len(manifest["leaves"]):
             raise ValueError(

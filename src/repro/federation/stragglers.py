@@ -1,0 +1,291 @@
+"""Straggler engine: deadline-driven elastic rounds over the flat substrate.
+
+Every round of the reproduction so far is a synchronous barrier: the server
+waits for *all* sampled clients, so the round clock is the max over a
+heavy-tailed per-client compute-time distribution and FedBiOAcc's linear
+speedup in the number of clients (arXiv:2302.05412) never materializes in
+wall-clock terms.  Real deployments run **elastic rounds**: over-provision
+the sample, close the round at a deadline, aggregate whoever arrived, and
+decide what to do with the stragglers.  This module makes that policy a
+declarative, deterministic spec layer:
+
+* :class:`StragglerSpec` — **who is slow and what the server tolerates**:
+  per-(round, client) compute times are lognormal draws
+  ``base_time * exp(tail * z)`` with ``z`` standard normal, pure in
+  ``fold_in(fold_in(seed, round), client)`` — resume-exact, sweepable, and
+  independent across rounds and clients.  The round policy is a deadline
+  (``deadline``, simulated seconds), an over-provisioning margin
+  (``over_provision = b`` extra clients requested on top of the sampler's
+  ``m``), a quorum floor (``quorum`` as a fraction of the round's sampled
+  clients), a capped deadline backoff for quorum misses (``backoff`` /
+  ``max_extensions`` — the PR 6 retry-budget pattern applied to time), and
+  a late-arrival policy ∈ ``{"drop", "carry", "cancel"}``.
+
+* :func:`Stragglers.round_decision` — **the elastic round, pure and
+  jit-traceable**: given the round's sampled mask and the current deadline
+  scalar it returns the arrival mask (sampled clients whose compute time
+  beat the effective deadline), the effective deadline after quorum
+  extensions, the extension count, and the adaptively-updated next
+  deadline.  Quorum misses extend the deadline through the capped backoff
+  ladder ``deadline * backoff**k``; if even the last extension misses, the
+  round falls back to the quorum-th order statistic of the arrival times —
+  so **arrivals >= quorum holds on every accepted round by construction**
+  (the invariant ``repro.telemetry.validate`` checks on the event stream).
+
+* **Late-arrival policies** lower onto existing substrate machinery — no
+  new reduction path: the round's weighted mean (``client_mean_masked``)
+  always averages *arrivals only* (the arrival mask multiplies into the
+  participation weights, exactly how fault dropout composes), and the
+  policies differ only in the launch mask and staleness aging:
+
+  - ``"drop"``: the straggler's work is discarded — its row is frozen
+    bit-exact like a non-participant, and its staleness counter ages so a
+    ``stale_discount < 1`` re-weights it on return (α^staleness).
+  - ``"carry"``: the straggler keeps computing — its row advances locally,
+    is excluded from this round's mean, and re-enters a later round
+    α^staleness-discounted through the existing aging on
+    ``FlatState.stale``.
+  - ``"cancel"``: the work is aborted and forgotten — row frozen *and* no
+    staleness aging (the client is treated as served).
+
+* **Adaptive deadline controller**: the next round's deadline is an EMA
+  toward the current round's ``target_percentile`` arrival-time order
+  statistic, ``d' = (1 - adapt_rate) * d + adapt_rate * t_p``.  The
+  deadline scalar rides :class:`~repro.optim.sequences.FlatState`
+  (zero-leaf when stragglers are off), so checkpoints carry it and resume
+  is bit-exact.  ``adapt_rate = 0`` keeps the deadline static.
+
+The spec rides :class:`repro.api.Experiment` (``experiment.stragglers``),
+round-trips through JSON and is ``edit()``-sweepable.  Stragglers compose
+with participation (the arrival set is a subset of the sampled set), with
+fault injection + robust aggregation (a client must both arrive and stay
+healthy to enter the mean) and with compressed communication (a
+non-arrival's error-feedback row freezes bit-exact — the ``w = 0`` path of
+the top-k reduction).  With the spec absent every trajectory is
+bit-identical to the pre-straggler stack.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LATE_POLICIES = ("drop", "carry", "cancel")
+
+#: bins of the per-round arrival histogram: arrival time over effective
+#: deadline, 8 bins of width 0.25 covering [0, 2x); the last bin is open.
+ARRIVAL_HIST_BINS = 8
+
+
+class StragglerSpec(NamedTuple):
+    """Declarative straggler process + elastic-round policy (hashable,
+    JSON-friendly).
+
+    ``base_time`` is the median per-client compute time (simulated
+    seconds); ``tail`` is the lognormal sigma — 0 makes every client
+    identical, >= 1 is heavy-tailed heterogeneity.  ``deadline`` is the
+    initial round deadline; ``over_provision`` requests that many extra
+    clients from the sampler; ``quorum`` is the minimum accepted fraction
+    of the round's sampled clients; ``backoff`` / ``max_extensions`` cap
+    the quorum-miss deadline ladder; ``late_policy`` routes stragglers
+    (see module docstring); ``target_percentile`` / ``adapt_rate`` drive
+    the adaptive deadline EMA (``adapt_rate = 0`` = static deadline);
+    ``start_round`` delays the whole layer (clean synchronous warmup).
+    """
+    base_time: float = 1.0
+    tail: float = 1.0
+    deadline: float = 2.0
+    over_provision: int = 2
+    quorum: float = 0.5
+    late_policy: str = "drop"
+    backoff: float = 1.5
+    max_extensions: int = 2
+    target_percentile: float = 0.9
+    adapt_rate: float = 0.2
+    seed: int = 0
+    start_round: int = 0
+
+
+class Stragglers(NamedTuple):
+    """A compiled :class:`StragglerSpec`:
+
+    * ``round_times(round)`` — the round's [M] f32 compute times.
+    * ``round_decision(round, sampled, deadline)`` — the elastic round:
+      ``(arrivals [M] f32 in {0,1}, eff_deadline, extensions,
+      next_deadline)``; jit-traceable in every argument.
+    * ``quorum_count(sampled)`` — the round's integer quorum floor.
+    """
+    spec: StragglerSpec
+    num_clients: int
+    round_times: Any
+    round_decision: Any
+    quorum_count: Any
+
+
+def make_stragglers(spec: StragglerSpec | None,
+                    num_clients: int) -> Stragglers | None:
+    """Compile ``spec`` for ``num_clients`` clients (None passes through —
+    the stragglers-off fast path keeps the synchronous engine exact)."""
+    if spec is None:
+        return None
+    if spec.late_policy not in LATE_POLICIES:
+        raise ValueError(f"StragglerSpec.late_policy={spec.late_policy!r} "
+                         f"must be one of {LATE_POLICIES}")
+    if not float(spec.base_time) > 0.0:
+        raise ValueError(f"StragglerSpec.base_time={spec.base_time} must be > 0")
+    if float(spec.tail) < 0.0:
+        raise ValueError(f"StragglerSpec.tail={spec.tail} must be >= 0")
+    if not float(spec.deadline) > 0.0:
+        raise ValueError(f"StragglerSpec.deadline={spec.deadline} must be > 0")
+    if int(spec.over_provision) < 0:
+        raise ValueError(f"StragglerSpec.over_provision={spec.over_provision} "
+                         f"must be >= 0")
+    if not 0.0 < float(spec.quorum) <= 1.0:
+        raise ValueError(f"StragglerSpec.quorum={spec.quorum} must be in "
+                         f"(0, 1] (a fraction of the round's sampled clients)")
+    if float(spec.backoff) < 1.0:
+        raise ValueError(f"StragglerSpec.backoff={spec.backoff} must be >= 1")
+    if int(spec.max_extensions) < 0:
+        raise ValueError(f"StragglerSpec.max_extensions="
+                         f"{spec.max_extensions} must be >= 0")
+    if not 0.0 < float(spec.target_percentile) <= 1.0:
+        raise ValueError(f"StragglerSpec.target_percentile="
+                         f"{spec.target_percentile} must be in (0, 1]")
+    if not 0.0 <= float(spec.adapt_rate) <= 1.0:
+        raise ValueError(f"StragglerSpec.adapt_rate={spec.adapt_rate} must "
+                         f"be in [0, 1]")
+    if int(spec.start_round) < 0:
+        raise ValueError(f"StragglerSpec.start_round={spec.start_round} "
+                         f"must be >= 0")
+    M = num_clients
+    key0 = jax.random.PRNGKey(spec.seed)
+
+    def round_times(round_idx):
+        k = jax.random.fold_in(key0, jnp.asarray(round_idx, jnp.int32))
+        z = jax.vmap(lambda c: jax.random.normal(jax.random.fold_in(k, c)))(
+            jnp.arange(M, dtype=jnp.int32))
+        return spec.base_time * jnp.exp(spec.tail * z)
+
+    def quorum_count(sampled):
+        n = jnp.sum((sampled > 0).astype(jnp.float32))
+        return jnp.maximum(jnp.ceil(spec.quorum * n), 1.0).astype(jnp.int32)
+
+    def round_decision(round_idx, sampled, deadline):
+        t = round_times(round_idx)
+        on = sampled > 0
+        t_eff = jnp.where(on, t, jnp.inf)
+        q = quorum_count(sampled)
+        sorted_t = jnp.sort(t_eff)
+        # the quorum-th order statistic: waiting exactly this long always
+        # collects >= quorum arrivals — the exhausted-backoff fallback
+        t_quorum = sorted_t[jnp.maximum(q - 1, 0)]
+        # capped backoff ladder deadline * backoff**k, k = 0..max_extensions
+        cands = deadline * spec.backoff ** jnp.arange(
+            spec.max_extensions + 1, dtype=jnp.float32)
+        counts = jnp.sum((t_eff[None, :] <= cands[:, None]).astype(jnp.int32),
+                         axis=1)
+        ok = counts >= q
+        any_ok = jnp.any(ok)
+        first = jnp.argmax(ok)
+        eff = jnp.where(any_ok, cands[first], t_quorum)
+        # max_extensions + 1 marks the exhausted ladder (fallback taken)
+        ext = jnp.where(any_ok, first, spec.max_extensions + 1)
+        ext = ext.astype(jnp.int32)
+        arrivals = (t_eff <= eff).astype(jnp.float32)
+        # adaptive controller: EMA toward this round's target-percentile
+        # arrival time (the simulator knows every sampled client's time)
+        n = jnp.sum(on.astype(jnp.float32))
+        i_p = jnp.clip(jnp.ceil(spec.target_percentile * n), 1.0, n)
+        t_p = sorted_t[i_p.astype(jnp.int32) - 1]
+        next_dl = (1.0 - spec.adapt_rate) * deadline + spec.adapt_rate * t_p
+        # warmup rounds stay synchronous: everyone sampled "arrives"
+        active = jnp.asarray(round_idx, jnp.int32) >= spec.start_round
+        arrivals = jnp.where(active, arrivals, sampled)
+        eff = jnp.where(active, eff, 0.0)
+        ext = jnp.where(active, ext, 0)
+        next_dl = jnp.where(active, next_dl, deadline)
+        return arrivals, eff, ext, next_dl
+
+    return Stragglers(spec, M, round_times, round_decision, quorum_count)
+
+
+def over_provision(spec: StragglerSpec, pspec, num_clients: int):
+    """The participation spec the elastic round actually requests: with
+    ``over_provision = b`` the counted samplers (uniform/weighted) request
+    ``min(M, m + b)`` clients so the deadline can drop stragglers and still
+    make quorum.  Full/trace samplers pass through — they do not request a
+    count (the Experiment validator rejects that pairing up front)."""
+    if pspec is None or int(spec.over_provision) <= 0:
+        return pspec
+    if getattr(pspec, "sampler", None) not in ("uniform", "weighted"):
+        return pspec
+    m = int(pspec.clients_per_round) or num_clients
+    return pspec._replace(
+        clients_per_round=min(num_clients, m + int(spec.over_provision)))
+
+
+def arrival_histogram(times, arrivals_deadline, sampled):
+    """[ARRIVAL_HIST_BINS] f32 histogram of the round's sampled compute
+    times relative to the effective deadline: bin i counts sampled clients
+    with ``t / deadline`` in ``[0.25 i, 0.25 (i + 1))`` (last bin open) —
+    the in-band arrival shape behind the ``deadline`` telemetry event."""
+    ratio = times / jnp.maximum(arrivals_deadline, 1e-12)
+    idx = jnp.clip(jnp.floor(ratio * 4.0), 0, ARRIVAL_HIST_BINS - 1)
+    idx = idx.astype(jnp.int32)
+    on = (sampled > 0).astype(jnp.float32)
+    one_hot = jax.nn.one_hot(idx, ARRIVAL_HIST_BINS, dtype=jnp.float32)
+    return jnp.sum(one_hot * on[:, None], axis=0)
+
+
+def simulate_rounds(strag: Stragglers, part, num_rounds: int) -> list:
+    """Host-side replay of the elastic round clock — the same pure
+    :func:`round_decision` the engine traces, stepped over rounds with the
+    adaptive deadline threaded through.  Per round:
+
+    * ``deadline`` — the effective (post-extension) accept threshold;
+    * ``wall_clock`` — the simulated round duration ``min(deadline,
+      slowest sampled arrival)`` (a round closes early once everyone is
+      in);
+    * ``wait_for_slowest`` — what a synchronous barrier would have paid;
+    * ``arrivals`` / ``sampled`` / ``quorum`` / ``extensions``.
+
+    Benchmarks sum ``wall_clock`` vs ``wait_for_slowest`` to price the
+    elastic round against the synchronous one on identical draws."""
+    M = strag.num_clients
+    dl = jnp.asarray(strag.spec.deadline, jnp.float32)
+    rows = []
+    for r in range(num_rounds):
+        if part is not None:
+            sampled, _ = part.round_weights(r)
+        else:
+            sampled = jnp.ones((M,), jnp.float32)
+        arrivals, eff, ext, next_dl = strag.round_decision(r, sampled, dl)
+        t = strag.round_times(r)
+        slow = float(jnp.max(jnp.where(sampled > 0, t, -jnp.inf)))
+        eff_f = float(eff)
+        active = r >= strag.spec.start_round
+        rows.append({
+            "round": r,
+            "deadline": round(eff_f, 6),
+            "wall_clock": round(min(eff_f, slow) if active else slow, 6),
+            "wait_for_slowest": round(slow, 6),
+            "arrivals": int(jnp.sum(arrivals > 0)),
+            "sampled": int(jnp.sum(sampled > 0)),
+            "quorum": int(strag.quorum_count(sampled)),
+            "extensions": int(ext),
+        })
+        dl = next_dl
+    return rows
+
+
+def expected_arrival_fraction(strag: Stragglers | None, part,
+                              num_rounds: int = 64) -> float:
+    """Mean fraction of sampled clients that beat the deadline over the
+    first ``num_rounds`` elastic rounds (benchmarks / banners)."""
+    if strag is None:
+        return 1.0
+    rows = simulate_rounds(strag, part, num_rounds)
+    num = sum(r["arrivals"] for r in rows)
+    den = max(sum(r["sampled"] for r in rows), 1)
+    return round(num / den, 4)

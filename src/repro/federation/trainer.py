@@ -354,6 +354,27 @@ def _telemetry_setup(telemetry, fuse_storm: bool):
     return telemetry
 
 
+def _straggler_setup(cfg: FederatedConfig, stragglers, participation,
+                     fuse_storm: bool):
+    """Compile the straggler spec
+    (``repro.federation.stragglers.make_stragglers``) and over-provision the
+    sampler: with ``over_provision = b`` the round requests ``min(M, m + b)``
+    clients from a counted sampler, so the deadline can drop stragglers and
+    still make quorum.  Deadline-driven elastic rounds live on the fused
+    sequence-spec engine only — reject the unfused tree paths loudly (the
+    ``_fault_setup`` contract).  Returns ``(compiled, participation')``."""
+    if stragglers is None:
+        return None, participation
+    if not fuse_storm:
+        raise ValueError(
+            "stragglers= requires fuse_storm=True — deadline-driven "
+            "elastic rounds are a feature of the fused sequence-spec "
+            "engine")
+    from repro.federation.stragglers import make_stragglers, over_provision
+    return (make_stragglers(stragglers, cfg.num_clients),
+            over_provision(stragglers, participation, cfg.num_clients))
+
+
 def _shard_setup(mesh, overlap: bool, fuse_storm: bool):
     """Compile the mesh knob into a :class:`flat.ShardCtx` (None without a
     mesh).  ``mesh`` may also be a prebuilt :class:`flat.ShardCtx` — the way
@@ -378,14 +399,15 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
                     part: Participation | None = None,
                     shard=None, overlap: bool = False,
                     fault=None, robustness=None, compression=None,
-                    telemetry=None):
+                    telemetry=None, stragglers=None):
     """fuse_storm=True path shared by all factories: compile the sequence
     spec into the flat-substrate engine and wrap it as (init, train_step)."""
     engine = seqs.make_engine(cfg, aspec, templates, voracle,
                               block=storm_block, participation=part,
                               shard=shard, overlap=overlap,
                               faults=fault, robustness=robustness,
-                              compression=compression, telemetry=telemetry)
+                              compression=compression, telemetry=telemetry,
+                              stragglers=stragglers)
     tel_on = bool(getattr(engine.step, "telemetry_groups", ()))
 
     def init(key):
@@ -414,6 +436,7 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.robustness = robustness
         fn.compression = compression
         fn.telemetry = telemetry
+        fn.stragglers = stragglers
         fn.aspec = engine.aspec
     return init, train_step
 
@@ -435,13 +458,15 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
                            faults=None, robustness=None, compression=None,
-                           telemetry=None):
+                           telemetry=None, stragglers=None):
     f, g = make_model_bilevel(model, lower_l2=cfg.lower_l2, n_micro=n_micro,
                               remat=remat, use_flash=use_flash,
                               use_lru_kernel=use_lru_kernel)
     aspec = _aspec("fedbio", comm_every)
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
+    strag, participation = _straggler_setup(cfg, stragglers,
+                                            participation, fuse_storm)
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
@@ -455,7 +480,7 @@ def make_fedbio_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp, tel)
+                               fault, robust, comp, tel, strag)
 
     def init(key):
         tr = init_trees(key)
@@ -500,7 +525,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
                               mesh=None, overlap: bool = False,
                               comm_every: dict | None = None,
                               faults=None, robustness=None, compression=None,
-                              telemetry=None):
+                              telemetry=None, stragglers=None):
     """FedBiOAcc (Alg. 2) train step.
 
     ``fuse_oracles`` shares one forward-over-reverse linearization across the
@@ -529,6 +554,8 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = _aspec("fedbioacc", comm_every)
     voracle, templates, init_trees = _global_lower_setup(model, cfg, f, g,
                                                          fuse_oracles)
+    strag, participation = _straggler_setup(cfg, stragglers,
+                                            participation, fuse_storm)
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
@@ -543,7 +570,7 @@ def make_fedbioacc_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp, tel)
+                               fault, robust, comp, tel, strag)
 
     def init(key):
         tr = init_trees(key)
@@ -614,7 +641,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
                                  mesh=None, overlap: bool = False,
                                  comm_every: dict | None = None,
                                  faults=None, robustness=None, compression=None,
-                                 telemetry=None):
+                                 telemetry=None, stragglers=None):
     """Each client solves its own lower problem y^(m) (its private head); the
     unbiased local hyper-gradient is estimated with the truncated Neumann
     series (Eq. 6, Q = cfg.neumann_q HVPs); only x (body) is communicated —
@@ -625,6 +652,8 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = _aspec("fedbio_local", comm_every)
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
+    strag, participation = _straggler_setup(cfg, stragglers,
+                                            participation, fuse_storm)
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
@@ -640,7 +669,7 @@ def make_fedbio_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp, tel)
+                               fault, robust, comp, tel, strag)
 
     def init(key):
         tr = init_trees(key)
@@ -683,7 +712,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
                                     mesh=None, overlap: bool = False,
                                     comm_every: dict | None = None,
                                     faults=None, robustness=None, compression=None,
-                                    telemetry=None):
+                                    telemetry=None, stragglers=None):
     """Algorithm 4: STORM momenta on (y, Φ); only x and ν are communicated
     (the y/ω sequence is PRIVATE — faults/robustness touch only the sent
     x/ν rows; private heads are never corrupted or screened)."""
@@ -693,6 +722,8 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
     aspec = _aspec("fedbioacc_local", comm_every)
     voracle, templates, init_trees = _local_lower_setup(model, cfg, f, g,
                                                         fuse_oracles)
+    strag, participation = _straggler_setup(cfg, stragglers,
+                                            participation, fuse_storm)
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
@@ -707,7 +738,7 @@ def make_fedbioacc_local_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp, tel)
+                               fault, robust, comp, tel, strag)
 
     def init(key):
         tr = init_trees(key)
@@ -764,7 +795,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
                            mesh=None, overlap: bool = False,
                            comm_every: dict | None = None,
                            faults=None, robustness=None, compression=None,
-                           telemetry=None):
+                           telemetry=None, stragglers=None):
     from repro.core.model_problem import _microbatch_mean
 
     def loss_fn(params, batch):
@@ -786,6 +817,8 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
     def init_trees(key):
         return {"params": _bcast(model.init(key), M)}
 
+    strag, participation = _straggler_setup(cfg, stragglers,
+                                            participation, fuse_storm)
     part, round_ctx, init_stale, next_stale = _participation_setup(
         cfg, aspec, participation, fuse_storm)
     shard = _shard_setup(mesh, overlap, fuse_storm)
@@ -799,7 +832,7 @@ def make_fedavg_train_step(model: Model, cfg: FederatedConfig, *,
 
         return _make_flat_pair(cfg, aspec, templates, voracle, init_trees,
                                storm_block, to_state, part, shard, overlap,
-                               fault, robust, comp, tel)
+                               fault, robust, comp, tel, strag)
 
     def init(key):
         tr = init_trees(key)

@@ -38,6 +38,7 @@ import os
 import subprocess
 import sys
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -279,6 +280,21 @@ def _strip_flag(argv: list, flag: str) -> list:
     return out
 
 
+_RESTART_WAIT_CAP = 60.0   # seconds — a supervised restart never sleeps longer
+
+
+def _restart_wait(backoff: float, attempt: int, token: str = "") -> float:
+    """Bounded exponential backoff with deterministic jitter: the
+    exponential wait is capped at :data:`_RESTART_WAIT_CAP` (an unbounded
+    ``backoff * 2**attempt`` sleeps for hours by attempt ~12), then spread
+    by a ±25% factor derived from ``crc32(token:attempt)`` — deterministic
+    (reproducible runs, no RNG), but decorrelated across checkpoint dirs so
+    a fleet of supervisors doesn't restart in lockstep."""
+    base = min(backoff * (2 ** attempt), _RESTART_WAIT_CAP)
+    frac = zlib.crc32(f"{token}:{attempt}".encode()) % 1000 / 999.0
+    return min(base * (0.75 + 0.5 * frac), _RESTART_WAIT_CAP)
+
+
 def _supervise(ns, raw_argv: list) -> list:
     """--max-restarts: run the train loop in a child process, resuming from
     the latest --ckpt-dir checkpoint after each crash (non-zero exit) until
@@ -303,7 +319,8 @@ def _supervise(ns, raw_argv: list) -> list:
         if rc == 0:
             return []
         if attempt < ns.max_restarts:
-            wait = ns.restart_backoff * (2 ** attempt)
+            wait = _restart_wait(ns.restart_backoff, attempt,
+                                 ns.ckpt_dir or "")
             print(f"run crashed (exit {rc}); restart "
                   f"{attempt + 1}/{ns.max_restarts} in {wait:.1f}s",
                   flush=True)
@@ -382,6 +399,12 @@ def main(argv=None):
             detail = f"m={pspec.clients_per_round or M}/{M}"
         banner = (f"participation: {pspec.sampler} {detail} "
                   f"seed={pspec.seed}")
+        emit("note", render=banner, text=banner)
+    sg = exp.stragglers
+    if sg is not None:
+        banner = (f"stragglers: policy={sg.late_policy} "
+                  f"deadline={sg.deadline} quorum={sg.quorum} "
+                  f"over_provision={sg.over_provision} tail={sg.tail}")
         emit("note", render=banner, text=banner)
 
     guard = (RollbackGuard(exp.robustness) if exp.robustness is not None
@@ -463,6 +486,26 @@ def main(argv=None):
                 if idx.size:
                     emit("clients_screened", step=t, round=t // local_steps,
                          retry=retry(), clients=[int(i) for i in idx])
+            if (is_comm and exp.stragglers is not None
+                    and "deadline" in metrics):
+                # one first-class event per elastic round, read off the
+                # engine's in-band straggler metrics (a warmup round —
+                # deadline 0, synchronous — emits nothing)
+                dl = round(float(np.asarray(metrics["deadline"])), 6)
+                ext = int(np.asarray(metrics["extensions"]))
+                if dl > 0:
+                    emit("deadline", step=t, round=t // local_steps,
+                         retry=retry(), deadline=dl,
+                         deadline_next=round(float(np.asarray(
+                             metrics["deadline_next"])), 6),
+                         arrivals=int(np.asarray(metrics["arrivals"])),
+                         quorum=int(np.asarray(metrics["quorum"])),
+                         extensions=ext,
+                         arrival_hist=[int(round(float(x))) for x in
+                                       np.asarray(metrics["arrival_hist"])])
+                    if ext > 0:
+                        emit("quorum_miss", step=t, round=t // local_steps,
+                             retry=retry(), extensions=ext, deadline=dl)
         if plan is not None and is_comm:
             from repro.telemetry import round_bytes
             rb_ev = round_bytes(plan, t // local_steps)

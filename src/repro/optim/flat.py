@@ -944,6 +944,11 @@ def client_mean_masked(spec: FlatSpec, bufs, modes, *, num_groups: int = 2,
     every section, or a tuple of per-section [M] arrays (staleness-discounted
     sequences).  Zero-weight clients are non-participants: the mean is taken
     over participants only and their rows pass through bit-identical.
+    Masks compose multiplicatively into the weights upstream — the
+    straggler engine's arrival mask and the fault layer's dropout mask
+    both multiply in (``repro.optim.sequences._round_ctx``), so a
+    deadline-missing or faulted client is just another ``w = 0`` row here
+    and no straggler-specific reduction path exists.
 
     Sections are contiguous tile-aligned element runs of each dtype buffer,
     precomputed at spec-build time (``_Group.extents``) and coalesced across

@@ -397,7 +397,11 @@ class FlatState(NamedTuple):
     ``vars``/``mom`` (so sharding rules, masking and checkpointing inherit
     it, and compressed runs stay resume-bit-exact) — and the empty tuple
     whenever compression is off or feedback-free (same zero-leaf
-    convention as ``stale``/``retry``).
+    convention as ``stale``/``retry``).  ``deadline`` carries the adaptive
+    round-deadline scalar (f32) of the straggler engine when one is
+    attached — updated at round boundaries by the EMA controller, so
+    checkpoints carry it and resume is bit-exact — and the empty tuple
+    otherwise (same zero-leaf convention).
     """
     vars: Any
     mom: Any
@@ -405,6 +409,7 @@ class FlatState(NamedTuple):
     stale: Any = ()
     retry: Any = ()
     ef: Any = ()
+    deadline: Any = ()
 
 
 class Engine(NamedTuple):
@@ -467,7 +472,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 shard: flat.ShardCtx | None = None,
                 overlap: bool = False, faults=None,
                 robustness=None, compression=None,
-                telemetry=None) -> Engine:
+                telemetry=None, stragglers=None) -> Engine:
     """Compile ``aspec`` into the fused flat-substrate step.
 
     ``templates``: section name → leaf template tree (arrays or
@@ -520,6 +525,20 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     ``None`` (the default) keeps ``step(state, batch) -> state`` with the
     LITERAL pre-telemetry code path: trajectories, jit cache keys and
     state structures are bit-identical to a telemetry-free build.
+
+    ``stragglers``: a compiled
+    :class:`~repro.federation.stragglers.Stragglers` — every round derives
+    its client compute times and the elastic-round decision (arrival mask,
+    effective deadline after quorum extensions, adaptive next deadline)
+    from the step counter and the deadline scalar riding
+    :class:`FlatState` ``.deadline``.  The reduction averages arrivals
+    only (the arrival mask multiplies into the participation weights,
+    exactly how fault dropout composes); the late-arrival policy picks the
+    launch mask (``"carry"`` lets stragglers keep computing locally) and
+    the staleness aging (``"cancel"`` skips it).  Composes with
+    participation, faults/robustness and compression.  ``None`` (the
+    default) is the literal pre-straggler path — zero deadline leaf,
+    bit-identical trajectories.
     """
     rcfg = None
     if robustness is not None:
@@ -536,6 +555,11 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             "grouped mean (cfg.hierarchy_period > 0) — the robust "
             "reductions and the fault model are global; set "
             "hierarchy_period=0")
+    if stragglers is not None and cfg.hierarchy_period > 0:
+        raise ValueError(
+            "stragglers= does not compose with the hierarchical grouped "
+            "mean (cfg.hierarchy_period > 0) — the deadline/quorum "
+            "decision is global; set hierarchy_period=0")
     ccfg = None
     if compression is not None:
         if faults is not None or rcfg is not None:
@@ -591,6 +615,14 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
     policies = aspec.policies
     has_mom = aspec.has_momentum
     part = participation
+    strag = stragglers
+    # staleness counters exist for absence of either kind: a round missed
+    # by the sampler OR a deadline missed by a straggler
+    need_stale = part is not None or strag is not None
+    late_carry = strag is not None and strag.spec.late_policy == "carry"
+    late_cancel = strag is not None and strag.spec.late_policy == "cancel"
+    if strag is not None:
+        from repro.federation.stragglers import arrival_histogram
     cadence = tuple(q.comm_every for q in aspec.sequences)
     stale_alpha = effective_staleness(aspec, part)
     discounted = any(a != 1.0 for a in stale_alpha)
@@ -602,7 +634,12 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             getattr(telemetry, "metrics", None),
             compressed=ccfg is not None,
             guarded=faults is not None or rcfg is not None,
-            sampled=part is not None)
+            sampled=part is not None,
+            straggled=strag is not None)
+        if "stragglers" in tel_groups and strag is None:
+            raise ValueError(
+                "telemetry metrics group 'stragglers' needs stragglers= — "
+                "there is no deadline or arrival set to report")
         if "compression" in tel_groups and ccfg is None:
             raise ValueError(
                 "telemetry metrics group 'compression' needs compression= "
@@ -619,14 +656,31 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                  batch_dims=1, dtype=jnp.float32)
 
     def _round_ctx(state: FlatState):
-        """(mask, per-section comm weights, corrupt transform) of the round
-        ``state.step`` belongs to — pure in the step counter (and the retry
-        counter for the fault draws), so resume and rollback-retry are
-        bit-exact."""
+        """(mask, per-section comm weights, corrupt transform, staleness
+        mask, straggler info) of the round ``state.step`` belongs to — pure
+        in the step counter (plus the retry counter for the fault draws and
+        the deadline scalar for the arrival set), so resume and
+        rollback-retry are bit-exact."""
         if part is None:
             mask, w = None, None
         else:
             mask, w = part.round_weights(state.step // cfg.local_steps)
+        s_info, stale_base = None, None
+        if strag is not None:
+            sampled = (jnp.ones((strag.num_clients,), jnp.float32)
+                       if mask is None else mask)
+            arrivals, eff, ext, next_dl = strag.round_decision(
+                state.step // cfg.local_steps, sampled, state.deadline)
+            # launch mask: "carry" keeps stragglers computing locally;
+            # "drop"/"cancel" freeze them bit-exact like non-participants
+            mask = sampled if late_carry else arrivals
+            # the round's mean always averages ARRIVALS only
+            w = arrivals if w is None else w * arrivals
+            # staleness: "cancel" treats the straggler as served (no
+            # aging); "drop"/"carry" age it so a stale_discount < 1
+            # re-weights its return by α^staleness
+            stale_base = sampled if late_cancel else arrivals
+            s_info = (arrivals, eff, ext, next_dl, sampled)
         corrupt = None
         if faults is not None:
             keep, nan, byz = faults.round_masks(
@@ -635,18 +689,30 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             # frozen bit-exact in the launches, averaged around in comm
             mask = keep if mask is None else mask * keep
             w = keep if w is None else w * keep
+            if stale_base is not None:
+                stale_base = stale_base * keep
             corrupt = (nan, byz, faults.spec.byzantine_scale)
+        stale_mask = mask if stale_base is None else stale_base
         if w is not None and discounted:
             w = staleness_weights(w, state.stale, stale_alpha)
-        return mask, w, corrupt
+        return mask, w, corrupt, stale_mask, s_info
 
-    def _next_stale(state: FlatState, mask):
-        if part is None:
+    def _next_stale(state: FlatState, stale_mask):
+        if not need_stale:
             return state.stale
-        return advance_stale(cfg, state.step, mask, state.stale)
+        return advance_stale(cfg, state.step, stale_mask, state.stale)
+
+    def _next_deadline(state: FlatState, s_info):
+        """The adaptive deadline advances ONCE per round, at the comm step
+        — every local step inside a round sees the same scalar, so the
+        arrival set is constant within the round."""
+        if strag is None:
+            return state.deadline
+        is_comm = (state.step + 1) % cfg.local_steps == 0
+        return jnp.where(is_comm, s_info[3], state.deadline)
 
     def _tel_metrics(state: FlatState, new: FlatState, mask, corrupt,
-                     local_vars) -> dict:
+                     local_vars, s_info=None) -> dict:
         """In-band metrics of one step, read off the already-materialized
         flat buffers (``tel_groups`` is a static Python value, so with
         telemetry off this is never traced and the step's jaxpr is the
@@ -672,7 +738,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         if "health" in tel_groups:
             if mask is not None:
                 m["participants"] = jnp.sum((mask > 0).astype(jnp.float32))
-            if part is not None:
+            if need_stale:
                 m["stale_hist"] = jnp.sum(
                     jax.nn.one_hot(jnp.clip(new.stale, 0, 7), 8), axis=0)
             if corrupt is not None:
@@ -684,6 +750,15 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
             if rcfg is not None:
                 m["screened"] = flat.health_screen(spec, local_vars, mask,
                                                    corrupt, rcfg)
+        if "stragglers" in tel_groups and s_info is not None:
+            arrivals, eff, ext, next_dl, sampled = s_info
+            rt = strag.round_times(state.step // cfg.local_steps)
+            m["deadline"] = eff
+            m["deadline_next"] = next_dl
+            m["arrivals"] = jnp.sum((arrivals > 0).astype(jnp.float32))
+            m["quorum"] = strag.quorum_count(sampled).astype(jnp.float32)
+            m["extensions"] = ext.astype(jnp.float32)
+            m["arrival_hist"] = arrival_histogram(rt, eff, sampled)
         return m
 
     def state_shardings(state: FlatState):
@@ -706,7 +781,7 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         return jax.device_put(state, state_shardings(state))
 
     def init_state(var_trees, mom_trees=None, step=None, stale=None,
-                   retry=None, ef=None):
+                   retry=None, ef=None, deadline=None):
         vars_b = flat.flatten_tree(spec, {s: var_trees[s] for s in sections},
                                    batch_dims=1)
         if not has_mom:
@@ -722,10 +797,11 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                 spec, {q.section: mom_trees[q.momentum]
                        for q in aspec.sequences},
                 batch_dims=1, dtype=jnp.float32)
-        if part is None:
+        if not need_stale:
             stale_b = ()
         elif stale is None:
-            stale_b = jnp.zeros((part.num_clients,), jnp.int32)
+            n_stale = part.num_clients if part is not None else strag.num_clients
+            stale_b = jnp.zeros((n_stale,), jnp.int32)
         else:
             stale_b = stale
         if faults is None:
@@ -743,14 +819,20 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                     tuple(jnp.zeros(b.shape, jnp.float32) for b in mom_b))
         else:
             ef_b = ef
+        if strag is None:
+            dl_b = ()
+        elif deadline is None:
+            dl_b = jnp.asarray(strag.spec.deadline, jnp.float32)
+        else:
+            dl_b = jnp.asarray(deadline, jnp.float32)
         return _placed(FlatState(
             vars_b, mom_b,
             jnp.zeros((), jnp.int32) if step is None else step,
-            stale_b, retry_b, ef_b))
+            stale_b, retry_b, ef_b, dl_b))
 
     def _storm_step(state: FlatState, batch) -> FlatState:
         t = state.step
-        mask, wts, corrupt = _round_ctx(state)
+        mask, wts, corrupt, stale_mask, s_info = _round_ctx(state)
         a = alpha_schedule(cfg, t)
         lrs = tuple(getattr(cfg, q.lr) * a for q in aspec.sequences)
         decays = tuple(1.0 - getattr(cfg, q.decay) * a * a
@@ -795,15 +877,16 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                       weights=wts, comm_every=cadence,
                                       shard=shard, compress=ccfg, ef=efm)
         new = state._replace(vars=vars_c, mom=mom_b, step=t + 1,
-                             stale=_next_stale(state, mask),
-                             ef=(efv, efm) if state.ef else ())
+                             stale=_next_stale(state, stale_mask),
+                             ef=(efv, efm) if state.ef else (),
+                             deadline=_next_deadline(state, s_info))
         if not tel_groups:
             return new
-        return new, _tel_metrics(state, new, mask, corrupt, vars_b)
+        return new, _tel_metrics(state, new, mask, corrupt, vars_b, s_info)
 
     def _sgd_step(state: FlatState, batch) -> FlatState:
         t = state.step
-        mask, wts, corrupt = _round_ctx(state)
+        mask, wts, corrupt, stale_mask, s_info = _round_ctx(state)
         lrs = tuple(getattr(cfg, q.lr) for q in aspec.sequences)
         g = flat.mask_buffers(
             _flatten_grads(oracle(flat.unflatten_tree(spec, state.vars),
@@ -838,11 +921,13 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
                                        weights=wts, comm_every=cadence,
                                        shard=shard, compress=ccfg, ef=efv)
         new = state._replace(vars=vars_b, mom=mom_b, step=t + 1,
-                             stale=_next_stale(state, mask),
-                             ef=(efv, efm) if state.ef else ())
+                             stale=_next_stale(state, stale_mask),
+                             ef=(efv, efm) if state.ef else (),
+                             deadline=_next_deadline(state, s_info))
         if not tel_groups:
             return new
-        return new, _tel_metrics(state, new, mask, corrupt, vars_local)
+        return new, _tel_metrics(state, new, mask, corrupt, vars_local,
+                                 s_info)
 
     step = _storm_step if aspec.kind == "storm" else _sgd_step
     # what the step actually computes in-band (() = bare-state contract) —

@@ -33,6 +33,9 @@ REQUIRED_KEYS = {
     "rollback": ("step", "retry", "bad_loss"),
     "retry_budget_exhausted": ("step", "retry"),
     "clients_screened": ("step", "round", "clients"),
+    "deadline": ("step", "round", "deadline", "arrivals", "quorum",
+                 "extensions"),
+    "quorum_miss": ("step", "round", "extensions", "deadline"),
     "checkpoint": ("step", "path"),
     "hlo_collectives": ("bytes_by_dtype",),
     "bench": ("name", "us_per_step"),

@@ -22,13 +22,16 @@ other layers make applicable):
   ``Experiment.compression``);
 * ``"health"`` — staleness histogram, recomputed health-screen verdicts and
   the round's injected fault masks (needs participation sampling, faults,
-  or robustness).
+  or robustness);
+* ``"stragglers"`` — the elastic round's effective/next deadline, arrival
+  and quorum counts, extension count and the arrival-time histogram (needs
+  ``Experiment.stragglers``).
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional, Tuple
 
-METRIC_GROUPS = ("norms", "drift", "compression", "health")
+METRIC_GROUPS = ("norms", "drift", "compression", "health", "stragglers")
 
 
 class TelemetrySpec(NamedTuple):
@@ -49,7 +52,8 @@ class TelemetrySpec(NamedTuple):
 
 def resolve_metric_groups(metrics, *, compressed: bool = False,
                           guarded: bool = False,
-                          sampled: bool = False) -> tuple:
+                          sampled: bool = False,
+                          straggled: bool = False) -> tuple:
     """The metric groups a run actually computes: an explicit ``metrics``
     tuple passes through verbatim (validated), ``None`` resolves to every
     group the run's layers make applicable."""
@@ -59,6 +63,8 @@ def resolve_metric_groups(metrics, *, compressed: bool = False,
             groups += ("compression",)
         if guarded or sampled:
             groups += ("health",)
+        if straggled:
+            groups += ("stragglers",)
         return groups
     unknown = set(metrics) - set(METRIC_GROUPS)
     if unknown:

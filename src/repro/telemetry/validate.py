@@ -5,7 +5,11 @@ types, required keys, supported schema version, monotonic per-segment
 ``seq``), and — with ``--reconcile``, the default — that every ``comm``
 event's reported wire bytes match the analytic bytes model of
 ``repro.federation.compression`` rebuilt from the stream's embedded
-experiment spec.  ``--expect`` asserts that given event types occurred
+experiment spec.  Straggler ``deadline``/``quorum_miss`` events are always
+checked: deadlines finite positive, per-segment rounds strictly
+increasing, arrivals >= quorum on every accepted round, and every
+quorum_miss carrying at least one extension.  ``--expect`` asserts that
+given event types occurred
 (e.g. ``rollback`` on a faulty run); ``--trend-decreasing KEY`` asserts a
 metrics series (e.g. ``upd_norm/u``, the hypergradient-estimation proxy)
 is finite and trends down over the run.
@@ -48,6 +52,48 @@ def _reconcile_comm(ev: dict, exp_json) -> None:
             f"model ({expected:.0f} B = {ev['reductions']} reductions x "
             f"({ec} compressed elems x {wire:.4f} B + {ee} exact elems x "
             f"4 B))")
+
+
+def _check_deadlines(path: str, events: list) -> int:
+    """Straggler invariants over ``deadline`` / ``quorum_miss`` events:
+    every accepted round reports ``arrivals >= quorum`` (the quorum
+    fallback guarantees this even on exhausted extensions), deadlines are
+    finite and positive, rounds are strictly increasing within a segment
+    (reset at each ``run_start``), and every ``quorum_miss`` carries
+    ``extensions >= 1``.  Returns the number of deadline events checked."""
+    checked = 0
+    last_round = None
+    for i, ev in enumerate(events):
+        kind = ev.get("event")
+        if kind == "run_start":
+            last_round = None
+        elif kind == "deadline":
+            dl = ev["deadline"]
+            if not (isinstance(dl, (int, float)) and math.isfinite(dl)
+                    and dl > 0):
+                raise TelemetryError(
+                    f"{path}: line {i + 1}: deadline event round "
+                    f"{ev['round']}: deadline {dl!r} is not finite "
+                    f"positive")
+            if ev["arrivals"] < ev["quorum"]:
+                raise TelemetryError(
+                    f"{path}: line {i + 1}: deadline event round "
+                    f"{ev['round']}: arrivals {ev['arrivals']} < quorum "
+                    f"{ev['quorum']} — an accepted round must meet quorum")
+            if last_round is not None and ev["round"] <= last_round:
+                raise TelemetryError(
+                    f"{path}: line {i + 1}: deadline event round "
+                    f"{ev['round']} not increasing within its segment "
+                    f"(prev {last_round})")
+            last_round = ev["round"]
+            checked += 1
+        elif kind == "quorum_miss":
+            if ev["extensions"] < 1:
+                raise TelemetryError(
+                    f"{path}: line {i + 1}: quorum_miss event round "
+                    f"{ev['round']}: extensions {ev['extensions']} < 1 — "
+                    f"a miss implies at least one deadline extension")
+    return checked
 
 
 def _trend_decreasing(events: list, key: str) -> None:
@@ -117,6 +163,7 @@ def validate_events(path: str, *, reconcile: bool = True,
                     f"no embedded experiment in any run_start")
             _reconcile_comm(ev, exp_json)
             reconciled += 1
+    deadlines_checked = _check_deadlines(path, events)
     for kind in expect:
         if kind not in by_type:
             raise TelemetryError(f"{path}: expected at least one "
@@ -125,7 +172,8 @@ def validate_events(path: str, *, reconcile: bool = True,
     for key in trend_decreasing:
         _trend_decreasing(events, key)
     return {"events": len(events), "segments": segments,
-            "by_type": by_type, "comm_reconciled": reconciled}
+            "by_type": by_type, "comm_reconciled": reconciled,
+            "deadlines_checked": deadlines_checked}
 
 
 def main(argv=None) -> int:
@@ -154,7 +202,9 @@ def main(argv=None) -> int:
             continue
         counts = " ".join(f"{k}={v}" for k, v in sorted(s["by_type"].items()))
         print(f"OK {path}: {s['events']} events, {s['segments']} segment(s), "
-              f"{s['comm_reconciled']} comm event(s) reconciled [{counts}]")
+              f"{s['comm_reconciled']} comm event(s) reconciled, "
+              f"{s['deadlines_checked']} deadline event(s) checked "
+              f"[{counts}]")
     return 1 if failed else 0
 
 

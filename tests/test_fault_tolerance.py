@@ -512,6 +512,53 @@ def test_checkpoint_survives_partial_write(tmp_path):
     np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 8.0))
 
 
+def test_checkpoint_corruption_drill(tmp_path):
+    """The bit-flip drill: a single flipped byte in the arrays file fails
+    the manifest's sha256 verification loudly, naming the corrupt file —
+    and a pre-digest manifest (no "sha256" key) still loads."""
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.checkpoint.io import CheckpointCorruptError
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, _tree(5), {"step": 2})
+    name = "arrays-00000002.npz"
+    path = os.path.join(d, name)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF                  # one flipped byte
+    open(path, "wb").write(bytes(blob))
+    with pytest.raises(CheckpointCorruptError, match=name):
+        load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    # legacy manifests without digests skip verification (old checkpoints)
+    save_checkpoint(d, _tree(6), {"step": 4})
+    with open(os.path.join(d, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    del manifest["sha256"]
+    with open(os.path.join(d, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    got = load_checkpoint(d, jax.eval_shape(lambda: _tree(0)))
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.full((3,), 6.0))
+
+
+def test_restart_backoff_capped_and_jittered():
+    """The crash-supervisor wait is exponential but bounded (no unbounded
+    2**attempt sleeps), deterministic per (token, attempt), and jittered
+    across tokens so a fleet of restarts does not stampede."""
+    from repro.launch.train import _RESTART_WAIT_CAP, _restart_wait
+    for attempt in range(12):
+        w = _restart_wait(0.5, attempt, "ckpt-a")
+        assert 0.0 <= w <= _RESTART_WAIT_CAP
+        assert w == _restart_wait(0.5, attempt, "ckpt-a")   # deterministic
+    # pre-cap waits stay within the +/-25% jitter band of base * 2**attempt
+    for attempt in range(4):
+        base = 0.5 * 2 ** attempt
+        w = _restart_wait(0.5, attempt, "ckpt-a")
+        assert 0.75 * base <= w <= 1.25 * base
+    # huge attempts saturate at the cap (jitter still applies, never above)
+    assert _restart_wait(0.5, 50, "ckpt-a") <= _RESTART_WAIT_CAP
+    # different tokens land on different points of the band
+    ws = {_restart_wait(0.5, 3, t) for t in ("a", "b", "c", "d")}
+    assert len(ws) > 1
+
+
 def test_checkpoint_legacy_layout_fallback(tmp_path):
     """Old checkpoints (manifest without an ``arrays`` pointer + arrays.npz)
     still load."""
