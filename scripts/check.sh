@@ -20,6 +20,14 @@ if [[ "${1:-}" != "--bench" ]]; then
     # every committed Experiment spec must parse and validate
     python -m repro.api.validate experiments/*.json
 
+    # static invariant verifier (fast pre-train gate): every committed
+    # spec's traced collectives must equal the analytic comm plan, wire
+    # bytes/dtypes must match the compression policy, feature-off builds
+    # must be jaxpr-identical to the baseline, and the source must pass
+    # the determinism lint — failures name the rule ID and the offending
+    # spec / file:line before any training time is spent
+    python -m repro.analysis --all experiments/ --lint src/repro
+
     # every algorithm end-to-end from its committed declarative spec (the
     # flat-substrate engine with fused oracles; fedbioacc_local's spec also
     # exercises 2-of-4 uniform participation) — the exact path

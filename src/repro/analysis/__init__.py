@@ -1,0 +1,31 @@
+"""``repro.analysis`` — the static invariant verifier.
+
+Proves the engine's contracts without running it, in three passes:
+
+1. **Collectives/wire** (``W1xx``): the traced step binds exactly the
+   collectives the analytic comm plan implies (one sliced reduction per
+   communicated merged run per reduction event), private tiles never
+   appear in a collective operand, and the compiled communication-only
+   subprogram moves byte-exact, dtype-exact traffic with zero resharding
+   ops — ``repro.analysis.collectives``.
+2. **Structure** (``S2xx``): every optional feature off leaves zero state
+   leaves and a step jaxpr identical to the pre-feature factory build;
+   events-only telemetry is jaxpr-inert — ``repro.analysis.structure``.
+3. **Source lint** (``L3xx``): no wall-clock/global-RNG nondeterminism,
+   no host sync in engine code, fold_in-pure round randomness, frozen
+   spec dataclasses — ``repro.analysis.lint``.
+
+CLI::
+
+    python -m repro.analysis --experiment experiments/fedbioacc.json
+    python -m repro.analysis --all experiments/ --lint src/repro
+
+The rule registry (IDs, what each proves, fix-its) lives in
+``repro.analysis.rules``; lint findings can be waived per line with
+``# analysis: ignore[L3xx]``.  This module imports no accelerator code —
+jax loads lazily inside the checkers, after the CLI has forced enough
+host devices for the meshes it must build.
+"""
+from repro.analysis.rules import LINT_RULES, RULES, Finding, Rule
+
+__all__ = ["RULES", "LINT_RULES", "Rule", "Finding"]

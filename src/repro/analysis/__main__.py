@@ -1,0 +1,99 @@
+"""CLI of the static verifier — see the package docstring.
+
+Device forcing happens HERE, before any jax import: building a sharded
+spec needs as many host devices as its mesh, and the compressed-spec wire
+probe needs two, so the flag is computed from the spec JSONs and exported
+before the checkers (and jax underneath them) load.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List
+
+
+def _force_devices(spec_paths: List[str]) -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return                          # caller chose — respect it
+    need = 8                            # covers the debug meshes + probe
+    for p in spec_paths:
+        try:
+            with open(p) as fh:
+                d = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        mesh = (d.get("execution") or {}).get("mesh")
+        if isinstance(mesh, (list, tuple)):
+            n = 1
+            for v in mesh:
+                n *= int(v)
+            need = max(need, n)
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={need}".strip())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="statically verify Experiment specs and lint the "
+                    "source — no training, no data")
+    ap.add_argument("--experiment", action="append", default=[],
+                    metavar="EXP_JSON", help="verify one spec (repeatable)")
+    ap.add_argument("--all", dest="all_dir", metavar="DIR",
+                    help="verify every *.json under DIR")
+    ap.add_argument("--lint", action="append", default=[], metavar="PATH",
+                    help="lint .py files/trees (repeatable)")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip the comm-subprogram compile (jaxpr and "
+                         "structure checks only)")
+    args = ap.parse_args(argv)
+
+    specs = list(args.experiment)
+    if args.all_dir:
+        specs += sorted(glob.glob(os.path.join(args.all_dir, "*.json")))
+    if not specs and not args.lint:
+        ap.error("nothing to do — pass --experiment/--all and/or --lint")
+
+    from repro.analysis.rules import Finding
+    failures: List[Finding] = []
+    errors = 0
+
+    if args.lint:
+        from repro.analysis.lint import lint_paths
+        lf = lint_paths(args.lint)
+        failures += lf
+        print(f"lint {' '.join(args.lint)}: "
+              f"{'OK' if not lf else f'{len(lf)} finding(s)'}")
+
+    if specs:
+        _force_devices(specs)
+        from repro.analysis.verify import verify_experiment
+        from repro.api import Experiment
+        bare_cache: dict = {}
+        for p in specs:
+            try:
+                f, notes = verify_experiment(
+                    Experiment.load(p), where=p, hlo=not args.no_hlo,
+                    bare_cache=bare_cache)
+            except Exception as e:      # build/validate/trace failure
+                errors += 1
+                print(f"ERROR {p}: {type(e).__name__}: {e}")
+                continue
+            failures += f
+            status = "OK" if not f else f"FAIL ({len(f)} finding(s))"
+            print(f"{status} {p}: " + "; ".join(notes))
+
+    for f in failures:
+        print(f)
+    n = len(failures)
+    print(f"repro.analysis: {len(specs)} spec(s), "
+          f"{n} finding(s), {errors} error(s)")
+    return 1 if (n or errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

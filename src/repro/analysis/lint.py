@@ -1,0 +1,240 @@
+"""Determinism/purity source lint (the ``L3xx`` rules).
+
+A single AST walk per file.  Rule scopes follow the layering of the
+codebase: nondeterminism (L301/L302) and spec hygiene (L305/L306) apply to
+ALL of ``src/repro``; host-sync (L303) applies to the engine layers that
+run under ``jit`` (optim / kernels / federation / core / models /
+sharding); PRNG discipline (L304) applies to the round-loop layers
+(optim / federation) where resume bit-exactness demands ``fold_in``-pure
+draws.  A finding on a line carrying ``# analysis: ignore[L3xx]`` is
+suppressed — the justified escape hatch for driver-side timing and
+init-time key fans.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Iterable, List, Optional
+
+from repro.analysis.rules import Finding
+
+#: layers whose code runs inside traced/jitted functions — host sync here
+#: stalls every step (L303)
+ENGINE_DIRS = ("optim", "kernels", "federation", "core", "models",
+               "sharding")
+#: layers holding the round loop — randomness here must be fold_in-pure
+#: or resume/rollback replay diverges (L304)
+ROUND_DIRS = ("optim", "federation")
+
+_IGNORE_RE = re.compile(r"#\s*analysis:\s*ignore\[([A-Z0-9,\s]+)\]")
+
+# dotted-suffix ban lists: the last two components of the called name
+_TIME_CALLS = {("time", "time"), ("time", "time_ns"),
+               ("time", "perf_counter"), ("time", "perf_counter_ns"),
+               ("time", "monotonic"), ("time", "monotonic_ns"),
+               ("datetime", "now"), ("datetime", "utcnow"),
+               ("date", "today"), ("os", "urandom")}
+_NP_NAMES = ("np", "numpy")
+_SPEC_SUFFIXES = ("Spec", "Config", "Cfg")
+
+
+def _dotted(node: ast.AST) -> tuple:
+    """("np", "random", "rand") for np.random.rand — () if not a name."""
+    parts: list = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _contains_jax_value(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id in ("jnp", "jax", "lax"):
+            return True
+    return False
+
+
+def _is_seedlike(node: ast.AST) -> bool:
+    """PRNGKey arguments that are spec-derived or literal constants —
+    the allowed key-creation forms (everything else is ad-hoc)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return True
+    if isinstance(node, ast.Attribute) and node.attr.endswith("seed"):
+        return True
+    if isinstance(node, ast.Name) and node.id.endswith("seed"):
+        return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str], engine: bool,
+                 round_loop: bool):
+        self.path = path
+        self.lines = lines
+        self.engine = engine
+        self.round_loop = round_loop
+        self.findings: List[Finding] = []
+
+    # -- helpers ------------------------------------------------------------
+
+    def _ignored(self, rule: str, node: ast.AST) -> bool:
+        for ln in {getattr(node, "lineno", 0),
+                   getattr(node, "end_lineno", 0)}:
+            if 1 <= ln <= len(self.lines):
+                m = _IGNORE_RE.search(self.lines[ln - 1])
+                if m and rule in m.group(1):
+                    return True
+        return False
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        if not self._ignored(rule, node):
+            self.findings.append(
+                Finding(rule, f"{self.path}:{node.lineno}", message))
+
+    # -- imports (L302: stdlib random) --------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            if a.name == "random":
+                self._flag("L302", node,
+                           "stdlib `random` imported — global-state RNG")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "random":
+            self._flag("L302", node,
+                       "stdlib `random` imported — global-state RNG")
+        self.generic_visit(node)
+
+    # -- calls (L301, L302, L303, L304) -------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        d = _dotted(node.func)
+        if d and d[-2:] in _TIME_CALLS:
+            self._flag("L301", node,
+                       f"`{'.'.join(d)}()` is wall-clock/OS "
+                       f"nondeterminism")
+        if len(d) >= 2 and d[0] in _NP_NAMES and d[1] == "random":
+            self._flag("L302", node,
+                       f"`{'.'.join(d)}()` uses NumPy's global RNG")
+        elif len(d) >= 2 and d[0] == "random":
+            self._flag("L302", node,
+                       f"`{'.'.join(d)}()` uses the stdlib global RNG")
+        if self.engine:
+            if d and d[-1] == "item" and isinstance(node.func,
+                                                    ast.Attribute):
+                self._flag("L303", node,
+                           "`.item()` synchronizes the device value to "
+                           "host")
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int") and node.args
+                    and _contains_jax_value(node.args[0])):
+                self._flag("L303", node,
+                           f"`{node.func.id}()` on a jax value blocks on "
+                           f"the device")
+            if len(d) >= 2 and d[0] in _NP_NAMES and d[1] in ("asarray",
+                                                              "array"):
+                self._flag("L303", node,
+                           f"`{'.'.join(d)}()` in engine code pulls its "
+                           f"argument to host memory")
+        if self.round_loop and len(d) >= 2 and d[-2] == "random":
+            if d[-1] == "split":
+                self._flag("L304", node,
+                           "`jax.random.split` carries a key chain — "
+                           "round randomness must be fold_in-derived")
+            elif d[-1] in ("PRNGKey", "key") and node.args and not \
+                    _is_seedlike(node.args[0]):
+                self._flag("L304", node,
+                           f"`{'.'.join(d)}({ast.unparse(node.args[0])})` "
+                           f"creates a key from a non-seed value")
+        self.generic_visit(node)
+
+    # -- class defs (L305) ---------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        if node.name.endswith(_SPEC_SUFFIXES):
+            for dec in node.decorator_list:
+                d = _dotted(dec.func if isinstance(dec, ast.Call) else dec)
+                if not d or d[-1] != "dataclass":
+                    continue
+                frozen = isinstance(dec, ast.Call) and any(
+                    k.arg == "frozen"
+                    and isinstance(k.value, ast.Constant)
+                    and k.value.value is True for k in dec.keywords)
+                if not frozen:
+                    self._flag("L305", node,
+                               f"spec dataclass `{node.name}` is not "
+                               f"frozen=True")
+        self.generic_visit(node)
+
+    # -- function defs (L306) ------------------------------------------------
+
+    def _check_defaults(self, node) -> None:
+        a = node.args
+        for dflt in list(a.defaults) + [d for d in a.kw_defaults if d]:
+            bad = isinstance(dflt, (ast.List, ast.Dict, ast.Set))
+            if isinstance(dflt, ast.Call):
+                d = _dotted(dflt.func)
+                bad = bad or (d in (("list",), ("dict",), ("set",))
+                              and not dflt.args and not dflt.keywords)
+            if bad:
+                self._flag("L306", dflt,
+                           f"mutable default in `{node.name}()` aliases "
+                           f"across calls")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+
+def _layer_of(path: str) -> Optional[str]:
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" in parts:
+        i = len(parts) - 1 - parts[::-1].index("repro")
+        if i + 1 < len(parts) - 1:
+            return parts[i + 1]
+    return None
+
+
+def lint_source(src: str, path: str, *, engine: Optional[bool] = None,
+                round_loop: Optional[bool] = None) -> List[Finding]:
+    """Lint one file's source text.  ``engine``/``round_loop`` override the
+    path-derived rule scopes (tests use this on temp files)."""
+    layer = _layer_of(path)
+    if engine is None:
+        engine = layer in ENGINE_DIRS
+    if round_loop is None:
+        round_loop = layer in ROUND_DIRS
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("L306", f"{path}:{e.lineno or 0}",
+                        f"file does not parse: {e.msg}")]
+    lt = _Linter(path, src.splitlines(), engine, round_loop)
+    lt.visit(tree)
+    return lt.findings
+
+
+def lint_paths(paths: Iterable[str]) -> List[Finding]:
+    """Lint every ``.py`` under the given files/directories."""
+    findings: List[Finding] = []
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    for f in files:
+        with open(f) as fh:
+            findings.extend(lint_source(fh.read(), f))
+    return findings

@@ -1,0 +1,158 @@
+"""Bare-state / jaxpr-diff auditor (the ``S2xx`` rules).
+
+The engine's feature contract is structural: every optional layer
+(participation, faults, robustness, compression, telemetry, stragglers,
+mesh/overlap, async cadences) must vanish WITHOUT RESIDUE when its knob is
+off — zero extra state leaves (S201), and a step jaxpr *identical* to the
+pre-feature factory build (S202) rather than merely numerically close.
+What runtime uint8 bit-identity tests establish per trajectory, these
+checks prove per structure, in seconds, on every committed spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.rules import Finding
+
+#: the edits that switch every optional layer off — what remains is the
+#: pre-feature baseline an unadorned factory call builds
+BARE_EDITS = {
+    # all three participation knobs: ``normalize()`` promotes a full
+    # sampler with a nonzero clients_per_round (or a trace_path) back to
+    # uniform/trace, so the bare form must clear the promotion triggers too
+    "participation.sampler": "full",
+    "participation.clients_per_round": 0,
+    "participation.trace_path": None,
+    "faults": None, "robustness": None, "compression": None,
+    "telemetry": None, "stragglers": None,
+    "execution.mesh": None, "execution.overlap": False,
+    "execution.scatter_comm": False,
+    "schedule.comm_every": (),
+}
+
+
+def bare_spec(exp):
+    """``exp`` with every optional feature off (still validates)."""
+    return exp.edit(**BARE_EDITS)
+
+
+def step_jaxpr_str(init, step, batch_fn) -> str:
+    """Canonical jaxpr text of one step on abstract state/batch — two
+    builds of the same program print identically (constants appear as
+    constvars, literals come from the shared config)."""
+    import jax
+    state = jax.eval_shape(init, jax.random.PRNGKey(0))
+    batch = jax.eval_shape(batch_fn, jax.random.PRNGKey(0))
+    return str(jax.make_jaxpr(step)(state, batch))
+
+
+def jaxpr_diff(a: str, b: str) -> str:
+    """First structural divergence of two jaxpr texts, for rule messages."""
+    la, lb = a.splitlines(), b.splitlines()
+    if len(la) != len(lb):
+        pre = f"{len(la)} vs {len(lb)} jaxpr lines; "
+    else:
+        pre = ""
+    for i, (x, y) in enumerate(zip(la, lb)):
+        if x != y:
+            return (f"{pre}first divergence at jaxpr line {i + 1}: "
+                    f"{x.strip()!r} vs {y.strip()!r}")
+    return pre + "one jaxpr is a prefix of the other"
+
+
+def audit_state_slots(run) -> List[Finding]:
+    """S201: FlatState optional slots present iff their feature is on."""
+    import jax
+
+    exp = run.spec
+    where = f"spec {exp.algorithm.name}"
+    if not hasattr(run.step, "spec"):
+        return []                       # unfused path: no FlatState
+    state = jax.eval_shape(run.init, jax.random.PRNGKey(0))
+    cp = exp.compression
+    expect = {
+        "stale": run.participation is not None or exp.stragglers is not None,
+        "retry": exp.faults is not None,
+        "ef": (cp is not None and cp.topk_frac > 0
+               and bool(cp.error_feedback)),
+        "deadline": exp.stragglers is not None,
+    }
+    findings: List[Finding] = []
+    for slot, on in expect.items():
+        empty = getattr(state, slot) == ()
+        if on and empty:
+            findings.append(Finding(
+                "S201", where,
+                f"feature expects a `{slot}` state leaf but the built "
+                f"state carries ()"))
+        elif not on and not empty:
+            findings.append(Finding(
+                "S201", where,
+                f"`{slot}` state leaf present with its feature off — "
+                f"the zero-leaf contract is broken"))
+    return findings
+
+
+def reference_pair(exp, model):
+    """The pre-feature baseline: the registered factory invoked with ONLY
+    the core execution knobs — no participation/mesh/overlap/cadence/
+    faults/robustness/compression/telemetry/stragglers kwargs at all."""
+    from repro.api import registry
+    from repro.api.build import federated_config
+
+    entry = registry.get(exp.algorithm.name)
+    _, factory_kw = entry.split_params(exp.algorithm.params_dict)
+    ex = exp.execution
+    return entry.factory(
+        model, federated_config(exp), n_micro=ex.n_micro, remat=ex.remat,
+        use_flash=ex.use_flash, use_lru_kernel=ex.use_lru_kernel,
+        fuse_oracles=ex.fuse_oracles, fuse_storm=ex.fuse_storm,
+        storm_block=ex.storm_block, **factory_kw)
+
+
+def audit_bare_jaxpr(exp, cache: Optional[Dict[str, Any]] = None
+                     ) -> List[Finding]:
+    """S202: the all-features-off build of ``exp`` traces to a jaxpr
+    identical to the pre-feature factory build.  ``cache`` (keyed by the
+    bare spec's JSON) dedupes across committed specs sharing a bare form."""
+    from repro.api.build import build
+
+    bare = bare_spec(exp)
+    key = bare.to_json()
+    if cache is not None and key in cache:
+        return list(cache[key])
+    run = build(bare)
+    findings: List[Finding] = []
+    if hasattr(run.step, "spec"):
+        got = step_jaxpr_str(run.init, run.step, run.batch_fn)
+        ref_init, ref_step = reference_pair(bare, run.model)
+        want = step_jaxpr_str(ref_init, ref_step, run.batch_fn)
+        if got != want:
+            findings.append(Finding(
+                "S202", f"spec {exp.algorithm.name}",
+                f"feature-off step is not the pre-feature baseline: "
+                f"{jaxpr_diff(got, want)}"))
+    if cache is not None:
+        cache[key] = tuple(findings)
+    return findings
+
+
+def audit_telemetry_inert(exp) -> List[Finding]:
+    """S203: events-only telemetry (metrics=()) is jaxpr-identical to
+    telemetry=None — only specs carrying a telemetry block are checked."""
+    from repro.api.build import build
+
+    if exp.telemetry is None:
+        return []
+    run_ev = build(exp.edit(**{"telemetry.metrics": ()}))
+    run_off = build(exp.edit(telemetry=None))
+    if not (hasattr(run_ev.step, "spec") and hasattr(run_off.step, "spec")):
+        return []
+    a = step_jaxpr_str(run_ev.init, run_ev.step, run_ev.batch_fn)
+    b = step_jaxpr_str(run_off.init, run_off.step, run_off.batch_fn)
+    if a == b:
+        return []
+    return [Finding(
+        "S203", f"spec {exp.algorithm.name}",
+        f"events-only telemetry perturbs the step jaxpr: "
+        f"{jaxpr_diff(a, b)}")]

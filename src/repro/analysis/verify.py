@@ -1,0 +1,83 @@
+"""Per-experiment orchestration of the three verifier passes.
+
+``verify_experiment`` statically checks one built Experiment: the
+collective/wire audit (W1xx — sharded specs, plus a 2-device mesh probe
+for compressed unsharded specs so their wire dtype/bytes are proven too),
+the state-slot and jaxpr-identity audits (S2xx), nothing executed beyond
+tracing and one small XLA compile of the comm-only subprogram.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analysis.rules import Finding
+
+#: the mesh of the wire probe for compressed UNSHARDED specs — 2 data
+#: shards is the smallest mesh whose collectives XLA cannot elide
+PROBE_MESH = (2, 1)
+
+
+def _located(findings: List[Finding], where: str) -> List[Finding]:
+    return [f._replace(where=where) for f in findings]
+
+
+def verify_experiment(exp, *, where: str, hlo: bool = True,
+                      bare_cache: Optional[Dict[str, Any]] = None
+                      ) -> Tuple[List[Finding], List[str]]:
+    """(findings, notes) of one Experiment.  ``where`` labels findings
+    (normally the spec path); ``hlo=False`` skips the comm-subprogram
+    compile (jaxpr + structure checks only); ``bare_cache`` dedupes the
+    S202 baseline across specs sharing a bare form."""
+    import jax
+
+    from repro.analysis import collectives as coll
+    from repro.analysis import structure as struct
+    from repro.api.build import build
+
+    findings: List[Finding] = []
+    notes: List[str] = []
+    run = build(exp)
+    fused = hasattr(run.step, "spec")
+    if not fused:
+        notes.append("unfused path: skipped (no flat substrate to audit)")
+        return findings, notes
+
+    # -- pass 1: collectives/wire ------------------------------------------
+    if run.mesh is not None:
+        f1 = coll.audit_step_collectives(run)
+        findings += _located(f1, where)
+        expected, info = coll.expected_step_collectives(run)
+        n_ops = sum(expected.values())
+        notes.append(f"jaxpr: {n_ops} collectives == plan "
+                     f"({info['events']} events x {info['comm_elems']} "
+                     f"elems/chunk)" if not f1 else "jaxpr: FAIL")
+        if hlo:
+            f2 = coll.audit_wire(run)
+            findings += _located(f2, where)
+            if not f2:
+                want = coll.expected_wire_bytes(
+                    expected, int(run.mesh.shape["data"]))
+                notes.append("wire: " + " + ".join(
+                    f"{b} B {d}" for d, b in sorted(want.items())))
+    else:
+        notes.append("no wire (unsharded)")
+        if exp.compression is not None and len(jax.devices()) >= 2:
+            probe = exp.edit(**{"execution.mesh": PROBE_MESH})
+            prun = build(probe)
+            f1 = coll.audit_step_collectives(prun)
+            f2 = coll.audit_wire(prun) if hlo else []
+            findings += _located(f1 + f2, f"{where} [mesh probe "
+                                          f"{PROBE_MESH}]")
+            if not (f1 or f2):
+                expected, _ = coll.expected_step_collectives(prun)
+                want = coll.expected_wire_bytes(expected, PROBE_MESH[0])
+                notes.append(f"wire probe {PROBE_MESH}: " + " + ".join(
+                    f"{b} B {d}" for d, b in sorted(want.items())))
+
+    # -- pass 2: structure --------------------------------------------------
+    findings += _located(struct.audit_state_slots(run), where)
+    findings += _located(struct.audit_bare_jaxpr(exp, bare_cache), where)
+    findings += _located(struct.audit_telemetry_inert(exp), where)
+    if not any(f.rule.startswith("S") for f in findings):
+        notes.append("state slots + bare/telemetry jaxpr identity OK")
+    return findings, notes

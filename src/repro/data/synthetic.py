@@ -113,7 +113,7 @@ def dirichlet_partition(key, labels: np.ndarray, num_clients: int,
     arrays, one per client."""
     labels = np.asarray(labels)
     classes = int(labels.max()) + 1
-    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))  # analysis: ignore[L302] key-seeded
     idx_by_class = [np.where(labels == c)[0] for c in range(classes)]
     for idx in idx_by_class:
         rng.shuffle(idx)

@@ -106,7 +106,7 @@ def _load_trace(path: str, num_clients: int, min_clients: int):
     with open(path) as fh:
         payload = json.load(fh)
     rows = payload["masks"] if isinstance(payload, dict) else payload
-    arr = np.asarray(rows, np.float32)
+    arr = np.asarray(rows, np.float32)  # analysis: ignore[L303] trace load
     if arr.ndim != 2 or arr.shape[1] != num_clients:
         raise ValueError(
             f"availability trace {path}: expected an [R, {num_clients}] 0/1 "
@@ -149,7 +149,7 @@ def make_participation(spec: ParticipationSpec | None,
         if len(spec.client_weights) != M:
             raise ValueError(f"client_weights has {len(spec.client_weights)} "
                              f"entries for M={M}")
-        base_w = jnp.asarray(np.asarray(spec.client_weights, np.float32))
+        base_w = jnp.asarray(np.asarray(spec.client_weights, np.float32))  # analysis: ignore[L303] spec build
         if not bool(jnp.all(base_w > 0)):
             raise ValueError("client_weights must be positive")
     elif spec.sampler == "weighted":
@@ -235,4 +235,4 @@ def expected_comm_fraction(part: Participation | None,
     if part is None:
         return 1.0
     masks = jax.vmap(part.mask_fn)(jnp.arange(num_rounds))
-    return float(jnp.mean(masks))
+    return float(jnp.mean(masks))  # analysis: ignore[L303] reporting

@@ -234,7 +234,7 @@ def _participation_setup(cfg: FederatedConfig, aspec,
 def _private_heads_init(model: Model, key, m: int):
     """Per-client head inits for the local-lower algorithms (the private
     lower variables are never synchronised, so they must not start equal)."""
-    keys = jax.random.split(key, m + 1)
+    keys = jax.random.split(key, m + 1)  # analysis: ignore[L304] init fan
     p = model.init(keys[0])
     heads = jax.tree.map(lambda *vs: jnp.stack(vs),
                          *[model.init(k)["head"] for k in keys[1:]])
@@ -438,6 +438,7 @@ def _make_flat_pair(cfg: FederatedConfig, aspec, templates, voracle,
         fn.telemetry = telemetry
         fn.stragglers = stragglers
         fn.aspec = engine.aspec
+        fn.comm_fn = engine.comm_fn
     return init, train_step
 
 

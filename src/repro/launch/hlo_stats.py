@@ -35,6 +35,7 @@ def collective_bytes(hlo: str) -> Dict[str, int]:
     out = {c: 0 for c in _COLLECTIVES}
     counts = {c: 0 for c in _COLLECTIVES}
     by_dtype: Dict[str, int] = {}
+    ops = []
     for line in hlo.splitlines():
         line = line.strip()
         if " = " not in line:
@@ -62,5 +63,9 @@ def collective_bytes(hlo: str) -> Dict[str, int]:
             by_dtype[dt] = by_dtype.get(dt, 0) + n * _DTYPE_BYTES[dt]
         out[op] += total
         counts[op] += 1
+        # per-op record — what repro.analysis pinpoints byte mismatches on
+        ops.append({"op": op, "bytes": total,
+                    "dtypes": sorted({d for d, _ in
+                                      _SHAPE_RE.findall(sig)})})
     return {"bytes": out, "counts": counts, "bytes_by_dtype": by_dtype,
-            "total_bytes": sum(out.values())}
+            "total_bytes": sum(out.values()), "ops": ops}

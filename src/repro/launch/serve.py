@@ -44,22 +44,22 @@ def main(argv=None):
         offset = cfg.num_patches
 
     cache_len = offset + S + args.gen
-    t0 = time.time()
+    t0 = time.time()  # analysis: ignore[L301] driver timing
     last, caches = jax.jit(
         lambda p, b: model.prefill(p, b, cache_len=cache_len))(params, batch)
-    print(f"prefill {B}x{S} in {time.time()-t0:.2f}s")
+    print(f"prefill {B}x{S} in {time.time()-t0:.2f}s")  # analysis: ignore[L301] driver timing
 
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     tok = jnp.argmax(last, axis=-1)[:, None].astype(jnp.int32)
     out = [tok]
-    t0 = time.time()
+    t0 = time.time()  # analysis: ignore[L301] driver timing
     for i in range(args.gen - 1):
         pos = jnp.int32(offset + S + i)
         logits, caches = decode(params, caches, tok, pos)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
-    dt = time.time() - t0
+    dt = time.time() - t0  # analysis: ignore[L301] driver timing
     print(f"decoded {args.gen-1} steps x {B} seqs in {dt:.2f}s "
           f"({(args.gen-1)*B/max(dt,1e-9):.1f} tok/s)")
     print("sample token ids:", gen[0, :16].tolist())

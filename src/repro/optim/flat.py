@@ -225,7 +225,7 @@ def make_spec(tree, *, sections: Sequence[str] | None = None,
         if not lfs:
             continue
         groups.append(_Group(dt, tuple(lfs), offset, block,
-                             np.tile(np.asarray(pattern, np.int32), shards),
+                             np.tile(np.asarray(pattern, np.int32), shards),  # analysis: ignore[L303] spec build
                              tuple(extents)))
     return FlatSpec(treedef, len(leaves), sec_names, tuple(groups), shards)
 

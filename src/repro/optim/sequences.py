@@ -428,6 +428,12 @@ class Engine(NamedTuple):
       placement of a :class:`FlatState` (None without a shard context);
       ``init_state`` already applies it to concrete states via
       ``jax.device_put``.
+    * ``comm_fn(state) -> state`` — the communication-only subprogram of
+      ``step``: the round context plus the policy reductions (vars, then
+      momentum), with no oracle and no fused update launch.  Never called
+      by training — it is the static audit surface ``repro.analysis``
+      lowers alone, so its compiled HLO contains exactly the wire
+      collectives and nothing else.
     """
     aspec: AlgoSpec
     spec: flat.FlatSpec
@@ -435,6 +441,7 @@ class Engine(NamedTuple):
     step: Any
     views: Any
     shardings: Any = None
+    comm_fn: Any = None
 
 
 def effective_staleness(aspec: AlgoSpec, participation) -> tuple:
@@ -929,6 +936,39 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         return new, _tel_metrics(state, new, mask, corrupt, vars_local,
                                  s_info)
 
+    def comm_fn(state: FlatState) -> FlatState:
+        """Communication-only subprogram of one step — the exact
+        ``comm_buffers`` calls of ``_storm_step``/``_sgd_step`` (vars
+        reduction, then the momentum reduction when the spec carries one)
+        driven by the same ``_round_ctx``, with no oracle and no fused
+        update launch.  Training never calls this; ``repro.analysis``
+        compiles it alone so the lowered HLO holds exactly the wire
+        collectives of one step."""
+        t = state.step
+        _, wts, corrupt, _, _ = _round_ctx(state)
+        efv, efm = state.ef if state.ef else ((), ())
+        if ccfg is None:
+            vars_c = comm_buffers(spec, cfg, t, state.vars, policies,
+                                  weights=wts, comm_every=cadence,
+                                  shard=shard, corrupt=corrupt, robust=rcfg)
+        else:
+            vars_c, efv = comm_buffers(spec, cfg, t, state.vars, policies,
+                                       weights=wts, comm_every=cadence,
+                                       shard=shard, compress=ccfg, ef=efv)
+        mom_c = state.mom
+        if has_mom:
+            if ccfg is None:
+                mom_c = comm_buffers(spec, cfg, t, state.mom, policies,
+                                     weights=wts, comm_every=cadence,
+                                     shard=shard, corrupt=corrupt,
+                                     robust=rcfg)
+            else:
+                mom_c, efm = comm_buffers(spec, cfg, t, state.mom, policies,
+                                          weights=wts, comm_every=cadence,
+                                          shard=shard, compress=ccfg, ef=efm)
+        return state._replace(vars=vars_c, mom=mom_c, step=t + 1,
+                              ef=(efv, efm) if state.ef else ())
+
     step = _storm_step if aspec.kind == "storm" else _sgd_step
     # what the step actually computes in-band (() = bare-state contract) —
     # the trainer wrapper branches on this, not on telemetry's presence
@@ -941,4 +981,5 @@ def make_engine(cfg, aspec: AlgoSpec, templates: dict, oracle, *,
         mt = flat.unflatten_tree(spec, state.mom)
         return vt, {q.momentum: mt[q.section] for q in aspec.sequences}
 
-    return Engine(aspec, spec, init_state, step, views, state_shardings)
+    return Engine(aspec, spec, init_state, step, views, state_shardings,
+                  comm_fn)

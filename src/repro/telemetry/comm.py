@@ -67,6 +67,20 @@ def comm_plan(flat_spec, aspec, compression=None) -> CommPlan | None:
                     uplink)
 
 
+def compressed_chunk_elems(flat_spec, aspec, compression) -> int:
+    """Per-shard-chunk elements of every compressed section — the section-
+    extent arithmetic shared by the dryrun HLO audit and the
+    ``repro.analysis`` wire-dtype rule (W103), so the two consumers can
+    never drift from this byte model."""
+    from repro.optim.sequences import PRIVATE
+    comm = tuple(q.section for q in aspec.sequences if q.comm != PRIVATE)
+    csecs = compression.sections or comm
+    # extents carry section INDICES into flat_spec.sections
+    cids = {i for i, n in enumerate(flat_spec.sections) if n in csecs}
+    return sum(b - a for grp in flat_spec.groups
+               for s, a, b in grp.extents if s in cids)
+
+
 def round_bytes(plan: CommPlan, round_idx: int) -> dict | None:
     """The ``comm`` event payload of communication round ``round_idx``
     (``(step + 1) // local_steps`` at a comm step) — None when every

@@ -13,6 +13,18 @@ import pytest  # noqa: E402
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_collection_modifyitems(config, items):
+    # every @pytest.mark.mesh_subprocess test spawns an 8-device subprocess
+    # replaying a full trajectory — under pytest-xdist, pin them all into
+    # ONE serial group (same worker, never concurrent with each other) so
+    # CPU contention cannot push their numeric tolerances over the edge
+    if not config.pluginmanager.hasplugin("xdist"):
+        return
+    for item in items:
+        if item.get_closest_marker("mesh_subprocess"):
+            item.add_marker(pytest.mark.xdist_group("mesh_subprocess"))
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

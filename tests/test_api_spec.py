@@ -332,6 +332,7 @@ _MESH_SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.timeout(900)
+@pytest.mark.mesh_subprocess
 def test_mesh_experiment_matches_single_device():
     """A spec carrying a (4, 2) mesh builds the sharded run (shard_map
     launches + psum reductions) and reproduces the single-device fused

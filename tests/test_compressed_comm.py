@@ -451,6 +451,7 @@ _SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.timeout(900)
+@pytest.mark.mesh_subprocess
 def test_sharded_compressed_matches_unsharded():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)

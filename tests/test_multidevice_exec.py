@@ -65,6 +65,7 @@ _SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.timeout(900)
+@pytest.mark.mesh_subprocess
 def test_sharded_step_executes_and_matches():
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
